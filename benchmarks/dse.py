@@ -1,0 +1,64 @@
+"""Paper Sec. IV-C: design-space exploration over tiling factors (T_m, T_n).
+
+Enumerates (T_m, T_n) pairs, evaluates the paper's computational-roof /
+bandwidth model (eqs. 5-9, core/complexity.dse_model) for DCGAN under the
+paper's FPGA constants, and reports the Pareto choice — reproducing the
+paper's selection of T_m=4, T_n=128.  A second sweep re-prices the model
+with TPU v5e constants to show how the optimum moves when bandwidth is
+200x higher (the DESIGN.md §2 hardware-adaptation note).
+"""
+from __future__ import annotations
+
+from repro.core.complexity import dse_model
+
+from .workloads import GAN_LAYERS
+
+FPGA = dict(freq_hz=100e6, bandwidth=4e9)  # paper Sec. V-A
+TPU = dict(freq_hz=940e6, bandwidth=819e9)  # v5e core clock / HBM
+
+
+def sweep(constants: dict, dsp_budget: int = 2560) -> list[dict]:
+    """DSP usage model: one multiplier per (T_m x T_n) lane set per position;
+    the paper keeps T_m*T_n*... within the 2560 DSPs of [14]."""
+    rows = []
+    layers = GAN_LAYERS["dcgan"]
+    for t_m in (1, 2, 4, 8, 16):
+        for t_n in (16, 32, 64, 128, 256):
+            if t_m * t_n > dsp_budget:
+                continue
+            roof = 0.0
+            bw_req = 0.0
+            for l in layers:
+                m = dse_model(l, t_m=t_m, t_n=t_n, **constants)
+                roof += m["computational_roof_ops"]
+                bw_req = max(bw_req, m["bandwidth_req_Bps"])
+            feasible = bw_req <= constants["bandwidth"]
+            rows.append(
+                {
+                    "t_m": t_m,
+                    "t_n": t_n,
+                    "roof_gops": roof / 1e9,
+                    "bw_req_GBps": bw_req / 1e9,
+                    "feasible": feasible,
+                }
+            )
+    return rows
+
+
+def best(rows):
+    feas = [r for r in rows if r["feasible"]]
+    return max(feas or rows, key=lambda r: r["roof_gops"])
+
+
+def main():
+    f = sweep(FPGA)
+    b = best(f)
+    print(f"dse,fpga,best_t_m={b['t_m']},best_t_n={b['t_n']},roof_gops={b['roof_gops']:.1f}"
+          f",paper_choice=t_m=4/t_n=128")
+    t = sweep(TPU, dsp_budget=1 << 30)
+    bt = best(t)
+    print(f"dse,tpu_v5e,best_t_m={bt['t_m']},best_t_n={bt['t_n']},roof_gops={bt['roof_gops']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Fig. 9: energy proxy = off-chip data movement + multiply counts.
+
+The paper attributes its 3.65x average energy saving chiefly to the
+difference in on-chip/off-chip transfer volume; we model energy as
+  E = bytes_moved * e_byte + mults * e_mult
+with e_byte/e_mult in the ~100:1 pJ ratio typical for DDR3-vs-DSP (Horowitz
+ISSCC'14 ballpark: DRAM access ~1.3-2.6 nJ/word vs fp mult ~4 pJ).
+"""
+from __future__ import annotations
+
+from repro.core.complexity import bytes_moved, mults_tdc, mults_winograd, mults_zero_padded
+
+from .workloads import GAN_LAYERS
+
+E_BYTE = 650.0  # pJ per off-chip byte (DDR3)
+E_MULT = 4.0  # pJ per fp32 multiply
+
+
+def run() -> list[dict]:
+    rows = []
+    for model, layers in GAN_LAYERS.items():
+        e = {}
+        for method, mult_fn in (
+            ("zero_padded", mults_zero_padded),
+            ("tdc", mults_tdc),
+            ("winograd", mults_winograd),
+        ):
+            bytes_ = sum(bytes_moved(l, method) for l in layers)
+            mults = sum(mult_fn(l) for l in layers)
+            e[method] = bytes_ * E_BYTE + mults * E_MULT
+        rows.append(
+            {
+                "model": model,
+                "e_zero_padded_uJ": round(e["zero_padded"] / 1e6, 1),
+                "e_tdc_uJ": round(e["tdc"] / 1e6, 1),
+                "e_winograd_uJ": round(e["winograd"] / 1e6, 1),
+                "saving_vs_zp": round(e["zero_padded"] / e["winograd"], 2),
+                "saving_vs_tdc": round(e["tdc"] / e["winograd"], 2),
+            }
+        )
+    return rows
+
+
+def main():
+    for r in run():
+        print(
+            f"fig9,{r['model']},e_wino_uJ={r['e_winograd_uJ']},"
+            f"saving_vs_zp={r['saving_vs_zp']},saving_vs_tdc={r['saving_vs_tdc']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+# Must precede all other imports (jax locks device count at first init).
+
+"""Perf-iteration driver (EXPERIMENTS.md §Perf).
+
+Lower+compile one (arch x shape) cell with config overrides and print the
+three roofline terms, so each hypothesis->change->measure cycle is:
+
+  PYTHONPATH=src:. python -m benchmarks.hillclimb --arch llama3-8b \
+      --shape train_4k --tag bf16qk --set attn_bf16_qk=True
+
+GAN cells take --impl {ref,tdc,zero_padded,lax} and --dense (no-skip
+Winograd ablation).  Artifacts land in artifacts/perf/.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
+
+
+def parse_val(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[], help="field=value LMConfig overrides")
+    ap.add_argument("--impl", default=None, help="GAN deconv impl override")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    import repro.configs as CFG
+    from repro.configs.base import GANConfig
+
+    cfg = CFG.get_config(args.arch)
+    over = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        over[k] = parse_val(v)
+    if isinstance(cfg, GANConfig):
+        if args.impl:
+            over["deconv_impl"] = args.impl
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    CFG.REGISTRY[args.arch] = cfg
+
+    import repro.launch.dryrun as DR
+
+    out_dir = os.path.join(os.path.dirname(__file__), "../artifacts/perf")
+    os.makedirs(out_dir, exist_ok=True)
+    rec = DR.run_cell(args.arch, args.shape, args.multi_pod, out_dir)
+    rec["tag"] = args.tag
+    rec["overrides"] = over
+    name = f"{args.arch}__{args.shape}__{args.tag}"
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+    from benchmarks.roofline import PEAK_FLOPS, HBM_BW, ICI_BW
+
+    hc = rec["hlo_costs"]
+    f32 = hc.get("f32_matmul_flops_per_device", 0.0)
+    t_comp = (hc["flops_per_device"] - f32) / PEAK_FLOPS + f32 / (PEAK_FLOPS / 4)
+    t_mem = hc["hbm_bytes_per_device"] / HBM_BW
+    t_coll = hc["collective_wire_bytes_per_device"] / ICI_BW
+    print(
+        f"PERF,{args.arch},{args.shape},{args.tag},"
+        f"t_compute={t_comp:.4g},t_memory={t_mem:.4g},t_collective={t_coll:.4g},"
+        f"bound={max((t_comp,'compute'),(t_mem,'memory'),(t_coll,'collective'))[1]}"
+    )
+
+
+if __name__ == "__main__":
+    main()

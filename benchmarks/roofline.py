@@ -1,0 +1,145 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md SSRoofline).
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+  compute    = HLO_FLOPs / (chips * 197e12)          [bf16 peak / chip]
+  memory     = HLO_bytes / (chips * 819e9)           [HBM]
+  collective = wire_bytes_per_device / 50e9          [per-device ICI budget]
+  MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); fwd-only shapes use 2*N*D.
+
+Notes:
+  * HLO_FLOPs / bytes from compiled.cost_analysis() are whole-program totals
+    (all devices); we divide by chip count.
+  * wire bytes are already per-device (hlo_analysis ring-model).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Optional
+
+from repro.configs import LMS, SHAPES, get_config
+from repro.configs.base import GANConfig, LMConfig
+
+PEAK_FLOPS = 197e12  # bf16 / chip (v5e)
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "../artifacts/dryrun")
+
+
+# --------------------------------------------------- model FLOPs accounting
+def lm_layer_params(cfg: LMConfig, active_only: bool) -> float:
+    """Params in the repeated blocks only (what 6ND counts), embeddings
+    excluded."""
+    from repro.models.lm import slot_specs, superblock_period
+
+    D, hd = cfg.d_model, cfg.hd
+    period = superblock_period(cfg)
+    n_super = cfg.n_layers // period
+    per_block = 0.0
+    for sp in slot_specs(cfg):
+        if sp.kind == "attn":
+            per_block += D * cfg.n_heads * hd + 2 * D * cfg.n_kv_heads * hd + cfg.n_heads * hd * D
+        else:
+            s = cfg.ssm
+            d_inner = s.expand * D
+            H = d_inner // s.head_dim
+            per_block += 2 * D * d_inner + 2 * D * s.d_state + D * H + d_inner * D
+        if sp.ffn == "mlp":
+            n_mat = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+            per_block += n_mat * D * cfg.d_ff
+        elif sp.ffn == "moe":
+            n_mat = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+            e = cfg.moe.top_k if active_only else cfg.moe.num_experts
+            per_block += e * n_mat * D * cfg.d_ff
+    return per_block * n_super
+
+
+def model_flops(arch: str, shape_name: str) -> Optional[float]:
+    """6*N*D for train; 2*N*D for prefill; 2*N*B for one decode token.
+    N = active layer params (+ head at 2*D*V per predicted token)."""
+    cfg = get_config(arch)
+    if isinstance(cfg, GANConfig):
+        return None
+    shape = SHAPES[shape_name]
+    n_active = lm_layer_params(cfg, active_only=True)
+    D, V = cfg.d_model, cfg.vocab
+    B, T = shape.global_batch, shape.seq_len
+    if shape.mode == "train":
+        return 6 * n_active * B * T + 6 * D * V * B * T  # blocks + LM head
+    if shape.mode == "prefill":
+        return 2 * n_active * B * T + 2 * D * V * B  # head on last token only
+    return 2 * n_active * B + 2 * D * V * B  # decode: one token per sequence
+
+
+# -------------------------------------------------------------- table build
+def load_cells(mesh_tag: str = "pod16x16") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, f"*__{mesh_tag}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        rows.append(rec)
+    return rows
+
+
+def analyze(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"], "status": rec.get("error", "error")}
+    chips = rec["n_devices"]
+    hc = rec.get("hlo_costs", {})
+    # per-device quantities from the trip-count-aware cost model
+    flops = hc.get("flops_per_device", 0.0)
+    f32_flops = hc.get("f32_matmul_flops_per_device", 0.0)
+    byts = hc.get("hbm_bytes_per_device", 0.0)
+    wire = hc.get("collective_wire_bytes_per_device", 0.0)
+    # f32-operand matmuls run at ~1/4 the bf16 MXU rate on v5e
+    t_comp = (flops - f32_flops) / PEAK_FLOPS + f32_flops / (PEAK_FLOPS / 4)
+    t_mem = byts / HBM_BW
+    t_coll = wire / ICI_BW
+    dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))[1]
+    mf = model_flops(rec["arch"], rec["shape"]) if rec["shape"] in SHAPES else None
+    mf_dev = mf / chips if mf else None  # model flops are global; terms are per-device
+    out = {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "chips": chips,
+        "hlo_flops_dev": flops,
+        "hlo_bytes_dev": byts,
+        "wire_bytes_dev": wire,
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "bottleneck": dom,
+        "step_time_bound_s": max(t_comp, t_mem, t_coll),
+        "model_flops": mf,
+        "useful_ratio": (mf_dev / flops) if (mf_dev and flops) else None,
+        "roofline_fraction": (mf_dev / PEAK_FLOPS) / max(t_comp, t_mem, t_coll)
+        if (mf_dev and flops)
+        else None,
+        "status": "ok",
+    }
+    return out
+
+
+def main():
+    rows = [analyze(r) for r in load_cells()]
+    print(
+        "roofline,arch,shape,bottleneck,t_compute_s,t_memory_s,t_collective_s,"
+        "useful_ratio,roofline_fraction"
+    )
+    for r in rows:
+        if r is None or r.get("status") != "ok":
+            if r:
+                print(f"roofline,{r['arch']},{r['shape']},ERROR")
+            continue
+        ur = f"{r['useful_ratio']:.3f}" if r["useful_ratio"] else "-"
+        rf = f"{r['roofline_fraction']:.3f}" if r["roofline_fraction"] else "-"
+        print(
+            f"roofline,{r['arch']},{r['shape']},{r['bottleneck']},"
+            f"{r['t_compute_s']:.4g},{r['t_memory_s']:.4g},{r['t_collective_s']:.4g},{ur},{rf}"
+        )
+
+
+if __name__ == "__main__":
+    main()

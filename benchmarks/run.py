@@ -1,0 +1,35 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+Prints ``name,...`` CSV lines.  The roofline section requires dry-run
+artifacts (python -m repro.launch.dryrun); it degrades gracefully when they
+are absent.
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from . import fig4_mults, fig8_throughput, fig9_energy, table2_resources
+
+    print("# paper Fig.4 — multiplication reduction")
+    fig4_mults.main()
+    print("# paper Fig.8 — throughput (DSE model + measured host walltime)")
+    fig8_throughput.main()
+    print("# paper Fig.9 — energy proxy")
+    fig9_energy.main()
+    print("# paper Table II — resource analog")
+    table2_resources.main()
+    print("# paper Sec. IV-C — design-space exploration (T_m, T_n)")
+    from . import dse
+
+    dse.main()
+    print("# roofline (from dry-run artifacts)")
+    try:
+        from . import roofline
+
+        roofline.main()
+    except Exception as e:  # artifacts may not exist yet
+        print(f"roofline,unavailable,{type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

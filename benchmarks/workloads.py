@@ -1,0 +1,39 @@
+"""Per-model deconv layer workloads (paper Table I geometries with the
+source models' channel/spatial dims)."""
+from __future__ import annotations
+
+from repro.core.complexity import LayerShape
+from repro.core.tdc import DeconvDims
+
+K5 = DeconvDims(5, 2, 2, 1)
+K4 = DeconvDims(4, 2, 1, 0)
+K3 = DeconvDims(3, 1, 1, 0)
+
+# (h_in, w_in, n_in, m_out, dims)
+GAN_LAYERS: dict[str, list[LayerShape]] = {
+    "dcgan": [
+        LayerShape(4, 4, 1024, 512, K5),
+        LayerShape(8, 8, 512, 256, K5),
+        LayerShape(16, 16, 256, 128, K5),
+        LayerShape(32, 32, 128, 3, K5),
+    ],
+    "artgan": [
+        LayerShape(4, 4, 512, 256, K4),
+        LayerShape(8, 8, 256, 128, K4),
+        LayerShape(16, 16, 128, 64, K4),
+        LayerShape(32, 32, 64, 64, K4),
+        LayerShape(64, 64, 64, 3, K3),
+    ],
+    "discogan": [
+        LayerShape(4, 4, 512, 256, K4),
+        LayerShape(8, 8, 256, 128, K4),
+        LayerShape(16, 16, 128, 64, K4),
+        LayerShape(32, 32, 64, 3, K4),
+    ],
+    "gpgan": [
+        LayerShape(4, 4, 512, 256, K4),
+        LayerShape(8, 8, 256, 128, K4),
+        LayerShape(16, 16, 128, 64, K4),
+        LayerShape(32, 32, 64, 3, K4),
+    ],
+}

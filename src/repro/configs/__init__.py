@@ -1,0 +1,78 @@
+"""Architecture registry: ``get_config(arch_id)`` + shape registry."""
+from __future__ import annotations
+
+import dataclasses
+
+from .base import GANConfig, LMConfig, MoESpec, SSMSpec, SHAPES, ShapeConfig, shape_applicable
+from .gan_zoo import GANS
+
+from . import (
+    phi3_mini_3_8b,
+    starcoder2_15b,
+    gemma3_12b,
+    llama3_8b,
+    musicgen_medium,
+    jamba_v0_1_52b,
+    llama4_scout_17b_a16e,
+    mixtral_8x22b,
+    mamba2_780m,
+    qwen2_vl_2b,
+)
+
+LMS = {
+    m.CONFIG.arch_id: m.CONFIG
+    for m in (
+        phi3_mini_3_8b,
+        starcoder2_15b,
+        gemma3_12b,
+        llama3_8b,
+        musicgen_medium,
+        jamba_v0_1_52b,
+        llama4_scout_17b_a16e,
+        mixtral_8x22b,
+        mamba2_780m,
+        qwen2_vl_2b,
+    )
+}
+
+REGISTRY: dict[str, object] = {**LMS, **GANS}
+
+
+def get_config(arch_id: str):
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch_id]
+
+
+def list_archs() -> list[str]:
+    return sorted(REGISTRY)
+
+
+def smoke_config(arch_id: str) -> LMConfig:
+    """Reduced same-family config for CPU smoke tests: few layers (one full
+    super-block period), narrow width, tiny vocab, few experts kept >= top_k."""
+    cfg = LMS[arch_id]
+    from repro.models.lm import superblock_period
+
+    period = superblock_period(cfg)
+    moe = (
+        dataclasses.replace(cfg.moe, num_experts=max(4, cfg.moe.top_k * 2))
+        if cfg.moe
+        else None
+    )
+    ssm = dataclasses.replace(cfg.ssm, d_state=16, head_dim=8, chunk=8) if cfg.ssm else None
+    hd = 16
+    return dataclasses.replace(
+        cfg,
+        n_layers=period * 2,
+        d_model=64,
+        n_heads=max(4, cfg.n_heads and 4),
+        n_kv_heads=2 if cfg.n_kv_heads else 0,
+        head_dim=hd if cfg.n_heads else None,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=256,
+        window=8 if cfg.window else 0,
+        moe=moe,
+        ssm=ssm,
+        mrope_sections=(4, 2, 2) if cfg.mrope_sections else None,
+    )

@@ -1,0 +1,158 @@
+"""Config dataclasses + the input-shape registry.
+
+Every selectable architecture (``--arch <id>``) resolves to either an
+LMConfig (assigned-architecture pool) or a GANConfig (the paper's own
+workloads).  Shape cells for the dry-run come from SHAPES.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional, Sequence
+
+from repro.core.tdc import DeconvDims
+
+# ------------------------------------------------------------------- GAN
+@dataclasses.dataclass(frozen=True)
+class DeconvSpec:
+    c_in: int
+    c_out: int
+    dims: DeconvDims
+    norm: str = "batch"  # batch | none
+    act: str = "relu"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    c_in: int
+    c_out: int
+    kernel: int
+    stride: int
+    norm: str = "batch"
+    act: str = "leaky_relu"
+
+
+@dataclasses.dataclass(frozen=True)
+class GANConfig:
+    arch_id: str
+    kind: Literal["gan"] = "gan"
+    z_dim: int = 100
+    seed_hw: int = 4  # spatial size after the stem projection
+    stem_ch: int = 1024
+    encoder: tuple[ConvSpec, ...] = ()  # image-to-image models (DiscoGAN, GP-GAN)
+    deconvs: tuple[DeconvSpec, ...] = ()
+    img_ch: int = 3
+    img_hw: int = 64
+    # which deconv backend the generator uses: ref (pure JAX winograd),
+    # pallas (fused kernel), tdc, zero_padded, lax (baselines)
+    deconv_impl: str = "ref"
+
+    @property
+    def n_deconv(self) -> int:
+        return len(self.deconvs)
+
+
+# -------------------------------------------------------------------- LM
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    every: int = 1  # MoE on layers where (layer_idx % every) == every-1
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    arch_id: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    kind: Literal["lm"] = "lm"
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    # layer-kind cycle, tiled over n_layers: "attn" | "mamba"
+    layer_cycle: tuple[str, ...] = ("attn",)
+    # attention-kind cycle over *attention* layers: "global" | "local"
+    attn_cycle: tuple[str, ...] = ("global",)
+    window: int = 0  # sliding-window size for "local" attention (0 = full)
+    moe: Optional[MoESpec] = None
+    ssm: Optional[SSMSpec] = None
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    mlp: str = "swiglu"  # swiglu | gelu | geglu
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[tuple[int, int, int]] = None  # qwen2-vl
+    frontend: str = "tokens"  # tokens | stub_embeds (audio/vlm backbone-only)
+    tie_embeddings: bool = False
+    remat: bool = True
+    # perf knobs (see EXPERIMENTS.md §Perf): bf16-operand QK^T matmul
+    attn_bf16_qk: bool = False
+    # expert parallelism over the "data" axis with all-to-all dispatch
+    # (requires num_experts == |data|); baseline = FSDP-sharded experts
+    moe_ep: bool = False
+    q_chunk: int = 1024
+    loss_chunk: int = 512
+    # explicit activation sharding constraints (GSPMD propagation does not
+    # reliably push head/batch sharding into scan bodies — see §Perf)
+    act_hints: bool = True
+    # bf16-operand SSD einsums with fp32 accumulation (§Perf)
+    ssm_bf16: bool = False
+    # families for shape-skip logic
+    family: str = "dense"  # dense | moe | ssm | hybrid | audio | vlm
+    subquadratic: bool = False  # eligible for long_500k
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    def layer_kinds(self) -> list[str]:
+        c = (self.layer_cycle * self.n_layers)[: self.n_layers]
+        return list(c)
+
+    def attn_kinds(self) -> list[str]:
+        """Kind per layer ('', 'global' or 'local')."""
+        kinds, ai = [], 0
+        for lk in self.layer_kinds():
+            if lk == "attn":
+                kinds.append(self.attn_cycle[ai % len(self.attn_cycle)])
+                ai += 1
+            else:
+                kinds.append("")
+        return kinds
+
+
+# ------------------------------------------------------------------ shapes
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg, shape: ShapeConfig) -> tuple[bool, str]:
+    """(runnable, reason-if-not).  Encodes the DESIGN.md skip rules."""
+    if getattr(cfg, "kind", "lm") == "gan":
+        return (shape.name == "train_4k", "GAN archs use their own image shapes")
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return (False, "pure full-attention arch: 500k dense-KV decode skipped per DESIGN.md")
+    return (True, "")

@@ -1,0 +1,10 @@
+"""musicgen-medium [arXiv:2306.05284]: decoder-only over EnCodec tokens
+(vocab 2048); the EnCodec codec frontend is a stub — token ids in."""
+from .base import LMConfig
+
+CONFIG = LMConfig(
+    arch_id="musicgen-medium",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24,
+    d_ff=6144, vocab=2048,
+    mlp="gelu", norm="layernorm", family="audio", subquadratic=False,
+)

@@ -1,0 +1,12 @@
+"""Core: the paper's contribution — TDC + Winograd deconvolution."""
+from .tdc import DeconvDims, SubFilterPlan, plan, decompose_weights, tdc_deconv2d
+from .winograd import WinogradTransform, get_transform, f23
+from .winograd_deconv import winograd_deconv2d, transform_weights
+from .baselines import standard_deconv2d, zero_padded_deconv2d, lax_deconv2d
+
+__all__ = [
+    "DeconvDims", "SubFilterPlan", "plan", "decompose_weights", "tdc_deconv2d",
+    "WinogradTransform", "get_transform", "f23",
+    "winograd_deconv2d", "transform_weights",
+    "standard_deconv2d", "zero_padded_deconv2d", "lax_deconv2d",
+]

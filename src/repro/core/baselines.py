@@ -1,0 +1,88 @@
+"""Baseline deconvolution implementations the paper compares against.
+
+* ``standard_deconv2d``  — the scatter-sum definition (Fig. 1a / 2a).  The
+  overlapping-sum problem is inherent here; used as the ground-truth oracle.
+* ``zero_padded_deconv2d`` — dilate-with-zeros then convolve with the full
+  K_D x K_D kernel (Fig. 1b, refs [10-12]).  Literal implementation: the
+  inserted zeros genuinely enter the multiply stream (its cost model counts
+  them), which is exactly the inefficiency the paper attacks.
+* ``lax_deconv2d`` — jax.lax.conv_transpose cross-check (flipped-kernel
+  convention adapted to ours).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .tdc import DeconvDims
+
+__all__ = ["standard_deconv2d", "zero_padded_deconv2d", "lax_deconv2d"]
+
+
+def standard_deconv2d(x: jax.Array, w: jax.Array, dims: DeconvDims) -> jax.Array:
+    """out[b, S*i+ky-P, S*j+kx-P, m] += x[b,i,j,n] w[ky,kx,n,m] (oracle)."""
+    B, H, W, N = x.shape
+    K, S, P = dims.kernel, dims.stride, dims.padding
+    M = w.shape[-1]
+    HO, WO = dims.out_size(H), dims.out_size(W)
+    # Dense scatter: compute all K*K shifted outer products, then overlap-add.
+    # (small shapes only — this is the correctness oracle.)
+    blocks = jnp.einsum("bijn,yxnm->bijyxm", x, w)  # (B,H,W,K,K,M)
+    full = jnp.zeros((B, S * (H - 1) + K, S * (W - 1) + K, M), dtype=blocks.dtype)
+    for ky in range(K):
+        for kx in range(K):
+            full = full.at[:, ky : ky + S * (H - 1) + 1 : S, kx : kx + S * (W - 1) + 1 : S, :].add(
+                blocks[:, :, :, ky, kx, :]
+            )
+    # crop P from the start; pad the tail if OP extends past the scatter extent
+    tail_h = P + HO - full.shape[1]
+    tail_w = P + WO - full.shape[2]
+    if tail_h > 0 or tail_w > 0:
+        full = jnp.pad(full, ((0, 0), (0, max(0, tail_h)), (0, max(0, tail_w)), (0, 0)))
+    return full[:, P : P + HO, P : P + WO, :]
+
+
+def zero_padded_deconv2d(
+    x: jax.Array, w: jax.Array, dims: DeconvDims, *, precision=jax.lax.Precision.HIGHEST
+) -> jax.Array:
+    """Insert S-1 zeros between pixels, edge-pad by K-1-P, correlate with the
+    flipped kernel.  Literal zero-materializing baseline."""
+    B, H, W, N = x.shape
+    K, S, P, OP = dims.kernel, dims.stride, dims.padding, dims.output_padding
+    HO, WO = dims.out_size(H), dims.out_size(W)
+    # dilate
+    xd = jnp.zeros((B, S * (H - 1) + 1, S * (W - 1) + 1, N), dtype=x.dtype)
+    xd = xd.at[:, ::S, ::S, :].set(x)
+    # pad: low = K-1-P, high = K-1-P+OP
+    lo, hi = K - 1 - P, K - 1 - P + OP
+    if lo < 0 or hi < 0:
+        # negative pad = crop; jnp.pad cannot, do it manually
+        crop_lo, lo2 = max(0, -lo), max(0, lo)
+        crop_hi, hi2 = max(0, -hi), max(0, hi)
+        xd = jnp.pad(xd, ((0, 0), (lo2, hi2), (lo2, hi2), (0, 0)))
+        xd = xd[:, crop_lo : xd.shape[1] - crop_hi, crop_lo : xd.shape[2] - crop_hi, :]
+    else:
+        xd = jnp.pad(xd, ((0, 0), (lo, hi), (lo, hi), (0, 0)))
+    wf = w[::-1, ::-1, :, :]  # flip -> cross-correlation computes convolution
+    y = jax.lax.conv_general_dilated(
+        xd, wf, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"), precision=precision
+    )
+    return y[:, :HO, :WO, :]
+
+
+def lax_deconv2d(x: jax.Array, w: jax.Array, dims: DeconvDims) -> jax.Array:
+    """Cross-check via jax.lax.conv_transpose.
+
+    lax.conv_transpose interprets ``padding`` as the *forward conv* padding,
+    so the transposed op effectively crops K-1-p per edge (verified
+    numerically: out = S(H-1)+K-2(K-1)+plo+phi), and it scatters the
+    *flipped* kernel.  Feeding it w flipped in both spatial dims with
+    padding ((K-1-P, K-1-P+OP)) reproduces our convention exactly.
+    """
+    K, S, P, OP = dims.kernel, dims.stride, dims.padding, dims.output_padding
+    wf = w[::-1, ::-1, :, :]
+    pad = ((K - 1 - P, K - 1 - P + OP), (K - 1 - P, K - 1 - P + OP))
+    return jax.lax.conv_transpose(
+        x, wf, (S, S), pad, dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        precision=jax.lax.Precision.HIGHEST,
+    )

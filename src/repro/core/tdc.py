@@ -1,0 +1,209 @@
+"""TDC: Transforming-Deconv-to-Conv conversion (paper refs [14,15,16], Fig. 2b).
+
+Deconvolution semantics used throughout the repo (PyTorch ConvTranspose2d
+convention, per-axis):
+
+    out[S*i + k - P] += x[i] * w[k]
+    H_O = S * (H_I - 1) + K_D - 2*P + OP
+
+Grouping output positions by residue rho = (o + P) mod S yields, with
+j = (o + P) // S,
+
+    out_rho[j] = sum_t w[rho + S*t] * x[j - t]          (true convolution)
+
+i.e. a stride-1 convolution of x with the ragged sub-kernel
+g_rho[t] = w[rho + S*t] (K_C_rho = ceil((K_D - rho)/S) taps), and the final
+output is the depth-to-space interleave out[S*j + rho - P] = out_rho[j].
+
+For the hardware-style dataflow we store sub-kernels *flipped* so each
+sub-problem is a plain cross-correlation (what Winograd F(m,r) and
+lax.conv_general_dilated compute):
+
+    ghat_rho[u] = g_rho[K_Cmax - 1 - u],  padded with zeros to r taps at the
+    high end, so out_rho[j] = sum_u ghat_rho[u] * x_pad[j + u] with x padded
+    left by (K_Cmax - 1).
+
+The zero taps of ragged sub-kernels sit at *fixed* positions determined only
+by (K_D, S) — this is the structural sparsity the paper exploits after the
+Winograd G-transform (Cases 1/2/3, Fig. 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .winograd import WinogradTransform, get_transform
+
+__all__ = [
+    "DeconvDims",
+    "SubFilterPlan",
+    "plan",
+    "decompose_weights",
+    "tdc_deconv2d",
+    "interleave_crop",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeconvDims:
+    """Static geometry of one deconv layer."""
+
+    kernel: int  # K_D (square)
+    stride: int  # S
+    padding: int  # P (symmetric)
+    output_padding: int = 0  # OP
+
+    @property
+    def kc(self) -> int:
+        """K_Cmax = ceil(K_D / S) — the padded sub-kernel width."""
+        return -(-self.kernel // self.stride)
+
+    def out_size(self, in_size: int) -> int:
+        return self.stride * (in_size - 1) + self.kernel - 2 * self.padding + self.output_padding
+
+    def j_extent(self, in_size: int) -> int:
+        """Number of sub-conv output positions needed to cover the output."""
+        h_o = self.out_size(in_size)
+        return (h_o - 1 + self.padding) // self.stride + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SubFilterPlan:
+    """Structural description of the S^2 sub-filters for (K_D, S, r)."""
+
+    dims: DeconvDims
+    r: int  # Winograd filter size the sub-kernels are padded to
+    taps_1d: tuple[tuple[int, ...], ...]  # per-rho: flipped tap-presence (len r)
+    nnz_winograd: np.ndarray  # (S, S) nonzero count of each transformed sub-filter
+    masks_winograd: np.ndarray  # (S, S, n, n) bool structural nonzero masks
+    case: np.ndarray  # (S, S) int: 1, 2, 3 per paper Fig. 6 (0 = other)
+
+    @property
+    def c_total(self) -> int:
+        """Paper's C(K_C): total multiplies per m x m output tile across S^2
+        sub-filters.  C(3) = 49, C(2) = 36 for S = 2."""
+        return int(self.nnz_winograd.sum())
+
+
+def _tap_presence_1d(dims: DeconvDims, rho: int, r: int) -> np.ndarray:
+    """Flipped+padded tap-existence vector (length r) for residue rho."""
+    kc = dims.kc
+    kcr = math.ceil((dims.kernel - rho) / dims.stride)  # ragged tap count
+    g = np.zeros(kc)
+    g[:kcr] = 1.0  # g_rho[t] exists for t < kcr
+    ghat = g[::-1]  # flip
+    out = np.zeros(r)
+    out[:kc] = ghat  # pad to r at the high end
+    return out
+
+
+def plan(dims: DeconvDims, m: int = 2, r: int = 3) -> SubFilterPlan:
+    """Build the structural sparsity plan for (K_D, S) under F(m, r)."""
+    if dims.kc > r:
+        raise ValueError(
+            f"K_C={dims.kc} > r={r}: kernel {dims.kernel} stride {dims.stride} "
+            f"not expressible in F({m},{r}); use a larger r."
+        )
+    tf = get_transform(m, r)
+    S = dims.stride
+    taps, masks, nnz, case = [], np.zeros((S, S, tf.n, tf.n), bool), np.zeros((S, S), int), np.zeros((S, S), int)
+    pres = [_tap_presence_1d(dims, rho, r) for rho in range(S)]
+    m1d = [tf.filter_mask1d(p) for p in pres]
+    for ry in range(S):
+        for rx in range(S):
+            mask2d = np.outer(m1d[ry], m1d[rx])
+            masks[ry, rx] = mask2d
+            nnz[ry, rx] = int(mask2d.sum())
+            z = tf.n * tf.n - nnz[ry, rx]
+            if z == 0:
+                case[ry, rx] = 1
+            elif z == tf.n:
+                case[ry, rx] = 2
+            elif z == 2 * tf.n - 1:
+                case[ry, rx] = 3
+    for rho in range(S):
+        taps.append(tuple(int(v) for v in pres[rho]))
+    return SubFilterPlan(dims, r, tuple(taps), nnz, masks, case)
+
+
+def decompose_weights(w: jax.Array, dims: DeconvDims, r: int = 3) -> jax.Array:
+    """Split deconv weights (K_D, K_D, N, M) into S^2 correlation-ready
+    sub-kernels, flipped and zero-padded to (S, S, r, r, N, M)."""
+    K, S, kc = dims.kernel, dims.stride, dims.kc
+    if w.shape[0] != K or w.shape[1] != K:
+        raise ValueError(f"weight spatial dims {w.shape[:2]} != K_D={K}")
+    N, M = w.shape[2], w.shape[3]
+    out = jnp.zeros((S, S, r, r, N, M), dtype=w.dtype)
+    for ry in range(S):
+        for rx in range(S):
+            for ty in range(math.ceil((K - ry) / S)):
+                for tx in range(math.ceil((K - rx) / S)):
+                    # flipped position within the kc x kc window, then padded
+                    uy, ux = kc - 1 - ty, kc - 1 - tx
+                    out = out.at[ry, rx, uy, ux].set(w[ry + S * ty, rx + S * tx])
+    return out
+
+
+def pad_input_for_subconv(x: jax.Array, dims: DeconvDims, r: int = 3) -> jax.Array:
+    """Zero-pad NHWC input so cross-correlation output index j maps directly
+    to sub-conv position j in [0, j_extent): left pad = kc-1, right pad so
+    that j_extent + r - 1 taps are addressable."""
+    kc = dims.kc
+    hj, wj = dims.j_extent(x.shape[1]), dims.j_extent(x.shape[2])
+    pad_r_h = max(0, hj + r - 1 - (x.shape[1] + kc - 1))
+    pad_r_w = max(0, wj + r - 1 - (x.shape[2] + kc - 1))
+    return jnp.pad(x, ((0, 0), (kc - 1, pad_r_h), (kc - 1, pad_r_w), (0, 0)))
+
+
+def interleave_crop(
+    sub_out: jax.Array, dims: DeconvDims, out_hw: tuple[int, int]
+) -> jax.Array:
+    """Depth-to-space: sub_out (S, S, B, H_J, W_J, M) -> (B, H_O, W_O, M).
+
+    out[S*j + rho - P] = out_rho[j]; crop to [0, H_O).
+    """
+    S, P = dims.stride, dims.padding
+    _, _, B, HJ, WJ, M = sub_out.shape
+    # (S, S, B, HJ, WJ, M) -> (B, HJ, S, WJ, S, M) -> (B, HJ*S, WJ*S, M)
+    full = jnp.transpose(sub_out, (2, 3, 0, 4, 1, 5)).reshape(B, HJ * S, WJ * S, M)
+    return jax.lax.dynamic_slice(
+        full, (0, P, P, 0), (B, out_hw[0], out_hw[1], M)
+    )
+
+
+def tdc_deconv2d(
+    x: jax.Array, w: jax.Array, dims: DeconvDims, *, precision=jax.lax.Precision.HIGHEST
+) -> jax.Array:
+    """TDC-based deconv WITHOUT Winograd (paper's [14] baseline).
+
+    x: (B, H, W, N) NHWC; w: (K_D, K_D, N, M) deconv weights.
+    Runs S^2 stride-1 cross-correlations with the flipped sub-kernels and
+    interleaves.  Exactly equals the standard deconv.
+    """
+    S = dims.stride
+    B, H, W, N = x.shape
+    M = w.shape[-1]
+    hj, wj = dims.j_extent(H), dims.j_extent(W)
+    subw = decompose_weights(w, dims)  # (S,S,r,r,N,M)
+    xp = pad_input_for_subconv(x, dims)
+    outs = []
+    for ry in range(S):
+        row = []
+        for rx in range(S):
+            y = jax.lax.conv_general_dilated(
+                xp,
+                subw[ry, rx],
+                window_strides=(1, 1),
+                padding="VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                precision=precision,
+            )
+            row.append(y[:, :hj, :wj, :])
+        outs.append(jnp.stack(row))
+    sub_out = jnp.stack(outs)  # (S,S,B,HJ,WJ,M)
+    return interleave_crop(sub_out, dims, (dims.out_size(H), dims.out_size(W)))

@@ -1,0 +1,171 @@
+"""Winograd Deconvolution — the paper's core contribution (Sec. III).
+
+Pipeline (Fig. 3 / Fig. 5):
+
+  1. TDC: split deconv weights into S^2 flipped sub-kernels padded to r x r.
+  2. G-transform each sub-kernel: W_w = G ghat G^T  -> (S,S,n,n,N,M).
+     Structural zeros (Cases 1/2/3) are known from (K_D, S) alone.
+  3. B-transform input tiles: n x n tiles with stride m -> X_w (B,Ty,Tx,n,n,N),
+     reorganized to the paper's n^2 x N matrix layout: (B*T, n^2, N).
+  4. Winograd-domain channel contraction: for every *structurally nonzero*
+     position p of sub-filter (ry,rx):  Y_w[p] = X_w[:,p,:] @ W_w[ry,rx,p]
+     — one MXU matmul per kept position; zero positions never enter the
+     graph (the TPU analogue of the paper's idle-cycle skipping).
+  5. Sparse inverse transform: out_tile = sum_{p in nz} Y_w[p] * (A^T e_p A),
+     contracted only over kept positions (the paper's sparse post-PE).
+  6. Depth-to-space interleave of the S^2 m x m tiles into mS x mS output
+     blocks; crop padding.
+
+This module is the pure-JAX reference path; kernels/winograd_deconv.py fuses
+steps 3-5 in Pallas.  Both produce results identical to standard_deconv2d.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tdc import DeconvDims, SubFilterPlan, decompose_weights, interleave_crop, plan
+from .winograd import get_transform
+
+__all__ = [
+    "transform_weights",
+    "transform_input_tiles",
+    "winograd_deconv2d",
+    "winograd_domain_matmuls",
+]
+
+
+def transform_weights(w: jax.Array, dims: DeconvDims, m: int = 2, r: int = 3) -> jax.Array:
+    """Steps 1-2: TDC split + G-transform.  Returns (S, S, n, n, N, M)."""
+    tf = get_transform(m, r)
+    subw = decompose_weights(w, dims, r)  # (S,S,r,r,N,M)
+    G = jnp.asarray(tf.G, dtype=jnp.promote_types(w.dtype, jnp.float32))
+    # W_w = G @ f @ G^T over the two spatial dims
+    return jnp.einsum("ua,yxabnm,vb->yxuvnm", G, subw, G,
+                      precision=jax.lax.Precision.HIGHEST)
+
+
+def transform_input_tiles(
+    x_pad: jax.Array, n_tiles: tuple[int, int], m: int = 2, r: int = 3
+) -> jax.Array:
+    """Step 3: extract n x n tiles at stride m from padded NHWC input and
+    apply B^T Z B.  Returns (B, Ty, Tx, n, n, N)."""
+    tf = get_transform(m, r)
+    n = tf.n
+    B_, H, W, N = x_pad.shape
+    ty, tx = n_tiles
+    need_h, need_w = m * (ty - 1) + n, m * (tx - 1) + n
+    if H < need_h or W < need_w:
+        x_pad = jnp.pad(x_pad, ((0, 0), (0, max(0, need_h - H)), (0, max(0, need_w - W)), (0, 0)))
+    # gather overlapping tiles: (B, Ty, Tx, n, n, N)
+    idx_y = (m * jnp.arange(ty))[:, None] + jnp.arange(n)[None, :]
+    idx_x = (m * jnp.arange(tx))[:, None] + jnp.arange(n)[None, :]
+    tiles = x_pad[:, idx_y][:, :, :, idx_x]  # (B,Ty,n,Tx,n,N)
+    tiles = jnp.transpose(tiles, (0, 1, 3, 2, 4, 5))
+    BT = jnp.asarray(tf.BT, dtype=jnp.promote_types(x_pad.dtype, jnp.float32))
+    return jnp.einsum("ua,zyxabc,vb->zyxuvc", BT, tiles, BT,
+                      precision=jax.lax.Precision.HIGHEST)
+
+
+def winograd_domain_matmuls(
+    xw_mat: jax.Array,  # (T, n*n, N) reorganized transformed input tiles
+    ww: jax.Array,  # (S, S, n, n, N, M) transformed filters
+    sp: SubFilterPlan,
+    *,
+    m: int = 2,
+    dense: bool = False,
+    bf16: bool = False,
+    precision=jax.lax.Precision.HIGHEST,
+) -> jax.Array:
+    """Steps 4-5 for every sub-filter; returns (S, S, T, m, m, M).
+
+    ``dense=False`` skips structurally-zero positions per the paper;
+    ``dense=True`` is the conventional Winograd accelerator ([17-19]) used as
+    an ablation baseline.
+    """
+    tf = get_transform(m, sp.r)
+    n = tf.n
+    S = sp.dims.stride
+    AT = np.asarray(tf.AT)  # (m, n)
+    T = xw_mat.shape[0]
+    M = ww.shape[-1]
+    acc_dtype = jnp.promote_types(xw_mat.dtype, jnp.float32)
+    outs = []
+    for ry in range(S):
+        row = []
+        for rx in range(S):
+            mask = sp.masks_winograd[ry, rx]  # (n, n) bool
+            if dense:
+                keep = [(u, v) for u in range(n) for v in range(n)]
+            else:
+                keep = [(u, v) for u in range(n) for v in range(n) if mask[u, v]]
+            if not keep:  # K_D < S can leave a sub-filter with zero taps
+                row.append(jnp.zeros((T, m, m, M), acc_dtype))
+                continue
+            # stack kept positions: X (T, |nz|, N), W (|nz|, N, M)
+            pos = jnp.asarray([u * n + v for u, v in keep])
+            xk = xw_mat[:, pos, :]  # (T,|nz|,N)
+            wk = ww[ry, rx].reshape(n * n, *ww.shape[4:])[pos]  # (|nz|,N,M)
+            if bf16:  # full-MXU-rate channel contraction, fp32 accumulate
+                xk, wk = xk.astype(jnp.bfloat16), wk.astype(jnp.bfloat16)
+            yk = jnp.einsum("tpn,pnm->tpm", xk, wk,
+                            precision=None if bf16 else precision,
+                            preferred_element_type=acc_dtype)
+            # sparse inverse transform: out[a,b] = sum_p yk[p] AT[a,u_p] AT[b,v_p]
+            inv = np.stack([np.outer(AT[:, u], AT[:, v]) for u, v in keep])  # (|nz|,m,m)
+            invj = jnp.asarray(inv, dtype=acc_dtype)
+            row.append(jnp.einsum("tpm,pab->tabm", yk, invj, precision=precision))
+        outs.append(jnp.stack(row))
+    return jnp.stack(outs)  # (S,S,T,m,m,M)
+
+
+@functools.partial(jax.jit, static_argnames=("dims", "m", "r", "dense", "bf16"))
+def winograd_deconv2d(
+    x: jax.Array,
+    w: jax.Array,
+    dims: DeconvDims,
+    *,
+    m: int = 2,
+    r: int = 3,
+    dense: bool = False,
+    bf16: bool = False,
+) -> jax.Array:
+    """Winograd DeConv (paper Sec. III): exact deconvolution via TDC +
+    F(m x m, r x r) + structural sparsity skipping.
+
+    x: (B, H, W, N); w: (K_D, K_D, N, M).  Returns (B, H_O, W_O, M).
+    """
+    sp = plan(dims, m, r)
+    tf = get_transform(m, r)
+    B, H, W, N = x.shape
+    M = w.shape[-1]
+    HO, WO = dims.out_size(H), dims.out_size(W)
+    hj, wj = dims.j_extent(H), dims.j_extent(W)
+    ty, tx = -(-hj // m), -(-wj // m)
+
+    ww = transform_weights(w, dims, m, r)  # (S,S,n,n,N,M)
+    kc = dims.kc
+    x_pad = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (kc - 1, max(0, m * (ty - 1) + tf.n - (H + kc - 1))),
+            (kc - 1, max(0, m * (tx - 1) + tf.n - (W + kc - 1))),
+            (0, 0),
+        ),
+    )
+    xw = transform_input_tiles(x_pad, (ty, tx), m, r)  # (B,Ty,Tx,n,n,N)
+    xw_mat = xw.reshape(B * ty * tx, tf.n * tf.n, N)
+    y = winograd_domain_matmuls(xw_mat, ww, sp, m=m, dense=dense, bf16=bf16)  # (S,S,BT,m,m,M)
+    # (S,S,B,Ty,Tx,m,m,M) -> (S,S,B, Ty*m, Tx*m, M)
+    y = y.reshape(dims.stride, dims.stride, B, ty, tx, m, m, M)
+    y = jnp.transpose(y, (0, 1, 2, 3, 5, 4, 6, 7)).reshape(
+        dims.stride, dims.stride, B, ty * m, tx * m, M
+    )
+    y = y[:, :, :, :hj, :wj, :].astype(x.dtype)
+    return interleave_crop(y, dims, (HO, WO))

@@ -1,0 +1,1 @@
+from .synthetic import gan_batch, lm_batch, latent_batch, embed_batch

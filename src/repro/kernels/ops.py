@@ -1,0 +1,168 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``winograd_deconv2d_fused`` is the production entry point: same signature and
+semantics as core.winograd_deconv2d but with the Winograd-domain engine
+running as a fused Pallas kernel.  ``backend='ref'`` dispatches to the
+pure-jnp oracle instead (useful under jit on CPU); ``interpret=True`` runs
+the real kernel body in interpret mode (correctness on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tdc import DeconvDims, interleave_crop, plan
+from repro.core.winograd import get_transform
+from repro.core.winograd_deconv import transform_input_tiles, transform_weights
+
+from . import ref as _ref
+from .winograd_deconv import winograd_domain_engine
+
+__all__ = ["pack_weights", "winograd_deconv2d_fused", "packed_layout"]
+
+
+@functools.lru_cache(maxsize=None)
+def packed_layout(dims: DeconvDims, m: int = 2, r: int = 3):
+    """Static packed layout for (K_D, S): position indices, sub-filter slices
+    and the packed inverse-transform rows.
+
+    Returns (pos_idx, sub_slices, inv_packed_np, keep_per_sub).
+    """
+    sp = plan(dims, m, r)
+    tf = get_transform(m, r)
+    n = tf.n
+    AT = np.asarray(tf.AT)
+    pos_idx: list[int] = []
+    sub_slices: list[tuple[int, int]] = []
+    inv_rows: list[np.ndarray] = []
+    keeps: list[list[tuple[int, int]]] = []
+    for ry in range(dims.stride):
+        for rx in range(dims.stride):
+            mask = sp.masks_winograd[ry, rx]
+            keep = [(u, v) for u in range(n) for v in range(n) if mask[u, v]]
+            lo = len(pos_idx)
+            for u, v in keep:
+                pos_idx.append(u * n + v)
+                inv_rows.append(np.outer(AT[:, u], AT[:, v]).reshape(m * m))
+            sub_slices.append((lo, len(pos_idx)))
+            keeps.append(keep)
+    inv_packed = (
+        np.stack(inv_rows).astype(np.float32)
+        if inv_rows
+        else np.zeros((0, m * m), np.float32)
+    )
+    return tuple(pos_idx), tuple(sub_slices), inv_packed, keeps
+
+
+def pack_weights(w: jax.Array, dims: DeconvDims, m: int = 2, r: int = 3) -> jax.Array:
+    """Deconv weights (K_D,K_D,N,M) -> packed Winograd-domain (C, N, M).
+
+    Only the C(K_C) structurally nonzero positions are stored (paper Fig. 5's
+    reorganized filter layout with zero rows removed).
+    """
+    pos_idx, sub_slices, _, keeps = packed_layout(dims, m, r)
+    ww = transform_weights(w, dims, m, r)  # (S,S,n,n,N,M)
+    n = get_transform(m, r).n
+    rows = []
+    i = 0
+    for ry in range(dims.stride):
+        for rx in range(dims.stride):
+            for u, v in keeps[i]:
+                rows.append(ww[ry, rx, u, v])
+            i += 1
+    if not rows:
+        return jnp.zeros((0, *w.shape[2:]), w.dtype)
+    return jnp.stack(rows).astype(w.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _engine_vjp(xw, ww, inv, pos_idx, sub_slices, m2, interpret, bt, bn, bm):
+    """Engine with a custom VJP: forward = Pallas kernel, backward = the VJP
+    of the mathematically-identical reference contraction (pallas_call has no
+    autodiff rule; the two paths are the same linear map)."""
+    return winograd_domain_engine(
+        xw, ww, inv, pos_idx=pos_idx, sub_slices=sub_slices, m2=m2,
+        interpret=interpret, block_t=bt, block_n=bn, block_m=bm,
+    )
+
+
+def _engine_fwd(xw, ww, inv, pos_idx, sub_slices, m2, interpret, bt, bn, bm):
+    y = _engine_vjp(xw, ww, inv, pos_idx, sub_slices, m2, interpret, bt, bn, bm)
+    return y, (xw, ww, inv)
+
+
+def _engine_bwd(pos_idx, sub_slices, m2, interpret, bt, bn, bm, res, g):
+    xw, ww, inv = res
+    _, vjp = jax.vjp(
+        lambda a, b: _ref.engine_ref(
+            a, b, inv, pos_idx=pos_idx, sub_slices=sub_slices, m2=m2
+        ),
+        xw, ww,
+    )
+    dxw, dww = vjp(g)
+    return dxw, dww, jnp.zeros_like(inv)
+
+
+_engine_vjp.defvjp(_engine_fwd, _engine_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dims", "m", "r", "backend", "interpret", "block_t", "block_n", "block_m")
+)
+def winograd_deconv2d_fused(
+    x: jax.Array,
+    w: jax.Array,
+    dims: DeconvDims,
+    *,
+    m: int = 2,
+    r: int = 3,
+    backend: str = "pallas",
+    interpret: bool = False,
+    block_t: int = 128,
+    block_n: int = 128,
+    block_m: int = 128,
+) -> jax.Array:
+    """Winograd DeConv with the Pallas engine. x:(B,H,W,N) w:(KD,KD,N,M)."""
+    tf = get_transform(m, r)
+    B, H, W, N = x.shape
+    M = w.shape[-1]
+    S = dims.stride
+    HO, WO = dims.out_size(H), dims.out_size(W)
+    hj, wj = dims.j_extent(H), dims.j_extent(W)
+    ty, tx = -(-hj // m), -(-wj // m)
+    kc = dims.kc
+
+    pos_idx, sub_slices, inv_np, _ = packed_layout(dims, m, r)
+    ww_packed = pack_weights(w, dims, m, r)
+    x_pad = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (kc - 1, max(0, m * (ty - 1) + tf.n - (H + kc - 1))),
+            (kc - 1, max(0, m * (tx - 1) + tf.n - (W + kc - 1))),
+            (0, 0),
+        ),
+    )
+    xw = transform_input_tiles(x_pad, (ty, tx), m, r).astype(x.dtype)
+    xw_mat = xw.reshape(B * ty * tx, tf.n * tf.n, N)
+
+    kw = dict(pos_idx=pos_idx, sub_slices=sub_slices, m2=m * m)
+    if backend == "pallas":
+        y = _engine_vjp(
+            xw_mat, ww_packed, jnp.asarray(inv_np),
+            kw["pos_idx"], kw["sub_slices"], kw["m2"],
+            interpret, block_t, block_n, block_m,
+        )
+    elif backend == "ref":
+        y = _ref.engine_ref(xw_mat, ww_packed, jnp.asarray(inv_np), **kw)
+    else:
+        raise ValueError(backend)
+
+    # (T, S2*m2, M) -> (S,S,B,Ty*m,Tx*m,M) -> interleave
+    y = y.reshape(B, ty, tx, S, S, m, m, M)
+    y = jnp.transpose(y, (3, 4, 0, 1, 5, 2, 6, 7)).reshape(S, S, B, ty * m, tx * m, M)
+    y = y[:, :, :, :hj, :wj, :].astype(x.dtype)
+    return interleave_crop(y, dims, (HO, WO))

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+``engine_ref`` mirrors kernels/winograd_deconv.winograd_domain_engine
+argument-for-argument; ``winograd_deconv2d_ref`` is the end-to-end oracle
+(core reference path, itself validated against the scatter-sum deconv).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.winograd_deconv import winograd_deconv2d as winograd_deconv2d_ref  # noqa: F401
+
+__all__ = ["engine_ref", "winograd_deconv2d_ref"]
+
+
+def engine_ref(
+    xw: jax.Array,  # (T, n2, N)
+    ww_packed: jax.Array,  # (C, N, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m2: int,
+) -> jax.Array:
+    """Oracle for the fused engine: returns (T, S2*m2, M)."""
+    T, _, N = xw.shape
+    M = ww_packed.shape[-1]
+    pos = jnp.asarray(pos_idx)
+    xg = xw[:, pos, :]  # (T, C, N)
+    y = jnp.einsum(
+        "tcn,cnm->ctm", xg.astype(jnp.float32), ww_packed.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST,
+    )  # (C, T, M)
+    outs = []
+    for lo, hi in sub_slices:
+        if hi == lo:
+            outs.append(jnp.zeros((T, m2, M), jnp.float32))
+            continue
+        outs.append(
+            jnp.einsum("ctm,ca->tam", y[lo:hi], inv_packed[lo:hi].astype(jnp.float32))
+        )
+    return jnp.concatenate(outs, axis=1).astype(xw.dtype)

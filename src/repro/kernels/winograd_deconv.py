@@ -1,0 +1,147 @@
+"""Pallas TPU kernel for the Winograd-DeConv accelerating engine.
+
+Maps the paper's PE array (Fig. 7) onto the TPU:
+
+  pre-PE   -> host-side B-transform + reorganization to the n^2 x N layout
+              (XLA; cheap, bandwidth-bound) and *packed* weight layout: only
+              the C(K_C) structurally-nonzero Winograd positions are stored,
+              so zero weights never reach VMEM — the idle-cycle skipping of
+              Fig. 6 becomes a smaller grid of MXU matmuls.
+  com-PE   -> this kernel: grid (T_blocks, M_blocks, N_blocks); per step an
+              unrolled sequence of (T_t x N_t) @ (N_t x M_t) MXU matmuls, one
+              per packed position, accumulated in fp32 VMEM scratch across
+              the N grid axis (the channel-accumulate of Fig. 5).
+  post-PE  -> fused sparse inverse transform on the last N step: per
+              sub-filter, contract packed positions with the precomputed
+              (A^T e_p A) tensors — zero output positions never computed.
+
+The depth-to-space interleave is a pure layout op left to XLA (free on TPU:
+it fuses into the following op's read).
+
+VMEM budget per grid step (defaults T_t=128, N_t=128, M_t=128, C=49):
+  xw block 128*16*128*4B = 1.0 MB, ww block 49*128*128*2B = 1.6 MB,
+  scratch 49*128*128*4B = 3.2 MB, out block 128*64*128*4B = 4.2 MB -> ~10 MB,
+  within the ~16 MB v5e VMEM including double-buffering headroom for in/out.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["winograd_domain_engine"]
+
+
+def _engine_kernel(
+    xw_ref,  # (T_t, n2, N_t) transformed input tiles
+    ww_ref,  # (C, N_t, M_t) packed nonzero transformed weights
+    inv_ref,  # (C, m2) fp32 inverse-transform rows
+    out_ref,  # (T_t, S2*m2, M_t)
+    acc_ref,  # scratch (C, T_t, M_t) fp32
+    *,
+    pos_idx: tuple[int, ...],  # packed position -> winograd position (len C)
+    sub_slices: tuple[tuple[int, int], ...],  # per sub-filter (start, end) in packed dim
+    m2: int,
+    n_steps: int,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # --- com-PE: one MXU matmul per packed (structurally nonzero) position
+    xw = xw_ref[...]
+    for p, pos in enumerate(pos_idx):
+        x_p = xw[:, pos, :]  # (T_t, N_t) static row select
+        w_p = ww_ref[p, :, :]  # (N_t, M_t)
+        acc_ref[p, :, :] += jax.lax.dot(
+            x_p, w_p, precision=jax.lax.Precision.DEFAULT,
+            preferred_element_type=jnp.float32,
+        )
+
+    # --- post-PE: sparse inverse transform, only on the final N step
+    @pl.when(k == n_steps - 1)
+    def _finalize():
+        for s, (lo, hi) in enumerate(sub_slices):
+            if hi == lo:  # structurally empty sub-filter (K_D < S corner)
+                out_ref[:, s * m2 : (s + 1) * m2, :] = jnp.zeros(
+                    (out_ref.shape[0], m2, out_ref.shape[2]), out_ref.dtype
+                )
+                continue
+            acc = acc_ref[lo:hi, :, :]  # (c_s, T_t, M_t)
+            inv = inv_ref[lo:hi, :]  # (c_s, m2)
+            # out[t, a, m] = sum_p inv[p, a] * acc[p, t, m]
+            y = jax.lax.dot_general(
+                inv.astype(jnp.float32),
+                acc,
+                (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # (m2, T_t, M_t)
+            out_ref[:, s * m2 : (s + 1) * m2, :] = jnp.transpose(
+                y, (1, 0, 2)
+            ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("pos_idx", "sub_slices", "m2", "block_t", "block_n", "block_m", "interpret"),
+)
+def winograd_domain_engine(
+    xw: jax.Array,  # (T, n2, N)
+    ww_packed: jax.Array,  # (C, N, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m2: int,
+    block_t: int = 128,
+    block_n: int = 128,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (T, S2*m2, M): per-tile sub-pixel outputs, sub-filter-major.
+
+    Pads T/N/M up to block multiples, runs the fused engine, crops.
+    """
+    T, n2, N = xw.shape
+    C, _, M = ww_packed.shape
+    S2 = len(sub_slices)
+    bt, bn, bm = min(block_t, _rup(T, 8)), min(block_n, _rup(N, 128)), min(block_m, _rup(M, 128))
+    Tp, Np, Mp = _rup(T, bt), _rup(N, bn), _rup(M, bm)
+    xw_p = jnp.pad(xw, ((0, Tp - T), (0, 0), (0, Np - N)))
+    ww_p = jnp.pad(ww_packed, ((0, 0), (0, Np - N), (0, Mp - M)))
+    grid = (Tp // bt, Mp // bm, Np // bn)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _engine_kernel,
+            pos_idx=pos_idx,
+            sub_slices=sub_slices,
+            m2=m2,
+            n_steps=grid[2],
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, n2, bn), lambda i, j, k: (i, 0, k)),
+            pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, S2 * m2, bm), lambda i, j, k: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((Tp, S2 * m2, Mp), xw.dtype),
+        scratch_shapes=[pltpu.VMEM((C, bt, bm), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xw_p, ww_p, inv_packed)
+    return out[:T, :, :M]
+
+
+def _rup(x: int, mult: int) -> int:
+    return -(-x // mult) * mult

@@ -1,0 +1,173 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init).  Do not move them.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we record memory_analysis, cost_analysis and the collective
+traffic parsed from the partitioned HLO into artifacts/dryrun/*.json — the
+roofline analysis (benchmarks/roofline.py, EXPERIMENTS.md) reads these.
+
+Usage:
+  python -m repro.launch.dryrun                      # full sweep (skip done)
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --multi-pod ...      # 2x16x16 mesh
+  python -m repro.launch.dryrun --force              # recompute
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import REGISTRY, SHAPES, get_config, shape_applicable
+from repro.configs.base import GANConfig
+from repro.launch import hlo_analysis, hlo_costs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+
+def cell_name(arch: str, shape: str, multi_pod: bool) -> str:
+    mesh = "pod2x16x16" if multi_pod else "pod16x16"
+    return f"{arch}__{shape}__{mesh}"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": list(mesh.shape.values()) if hasattr(mesh.shape, "values") else list(mesh.devices.shape),
+        "axis_names": list(mesh.axis_names),
+        "n_devices": n_dev,
+    }
+    t0 = time.time()
+    fn, args, meta = build_step(arch, shape_name, mesh)
+    with mesh:
+        lowered = fn.lower(*args)
+        rec["t_lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["t_compile_s"] = round(time.time() - t1, 2)
+
+    rec["meta"] = {k: v for k, v in meta.items() if k != "fallbacks"}
+    rec["sharding_fallbacks"] = meta.get("fallbacks", [])
+
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "alias_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(ma, k)
+        }
+        print(f"  memory_analysis: {rec['memory_analysis']}")
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis"] = {"error": str(e)}
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost_analysis"] = {
+            k: float(v)
+            for k, v in ca.items()
+            if k in ("flops", "bytes accessed", "transcendentals", "optimal_seconds")
+            or k.startswith("bytes accessed")
+        }
+        print(f"  cost_analysis flops={rec['cost_analysis'].get('flops', 0):.3e}")
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis"] = {"error": str(e)}
+
+    try:
+        text = compiled.as_text()
+        rec["collectives"] = hlo_analysis.collective_stats(text, n_dev)
+        rec["hlo_bytes"] = len(text)
+        # trip-count-aware recursive cost model (XLA's own cost_analysis
+        # counts while bodies once — see hlo_costs.py)
+        rec["hlo_costs"] = hlo_costs.analyze_text(text, n_dev)
+        import gzip
+
+        gz = os.path.join(out_dir, cell_name(arch, shape_name, multi_pod) + ".hlo.gz")
+        with gzip.open(gz, "wt") as f:
+            f.write(text)
+        print(
+            f"  hlo_costs: flops/dev={rec['hlo_costs']['flops_per_device']:.3e} "
+            f"bytes/dev={rec['hlo_costs']['hbm_bytes_per_device']:.3e} "
+            f"wire/dev={rec['hlo_costs']['collective_wire_bytes_per_device']:.3e}"
+        )
+    except Exception as e:  # pragma: no cover
+        rec["collectives"] = {"error": str(e)}
+
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all applicable)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=ART_DIR)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    archs = [args.arch] if args.arch else sorted(REGISTRY)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        if isinstance(cfg, GANConfig):
+            shapes = ["gan_train"]
+        else:
+            shapes = [args.shape] if args.shape else list(SHAPES)
+        for shape_name in shapes:
+            if shape_name != "gan_train":
+                ok, why = shape_applicable(cfg, SHAPES[shape_name])
+                if not ok:
+                    n_skip += 1
+                    print(f"SKIP {arch} x {shape_name}: {why}")
+                    continue
+            for mp in meshes:
+                name = cell_name(arch, shape_name, mp)
+                path = os.path.join(args.out, name + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"DONE {name} (cached)")
+                    n_ok += 1
+                    continue
+                print(f"RUN  {name}")
+                try:
+                    rec = run_cell(arch, shape_name, mp, args.out)
+                    n_ok += 1
+                except Exception as e:
+                    rec = {
+                        "arch": arch, "shape": shape_name, "multi_pod": mp,
+                        "status": "error", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-3000:],
+                    }
+                    n_fail += 1
+                    print(f"FAIL {name}: {type(e).__name__}: {str(e)[:200]}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"dry-run complete: ok={n_ok} fail={n_fail} skip={n_skip}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Parse compiled (post-SPMD) HLO text for collective traffic.
+
+``compiled.cost_analysis()`` has FLOPs/bytes but no collective accounting,
+so we sum result-shape sizes of every collective op and convert to
+*per-device wire bytes* with the standard ring-algorithm factors:
+
+  all-gather          out * (g-1)/g
+  reduce-scatter      out * (g-1)          (out is the scattered shard)
+  all-reduce          2 * size * (g-1)/g   (RS + AG)
+  all-to-all          size * (g-1)/g
+  collective-permute  size
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^=]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # replica_groups=[ngroups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).strip("{}").split(","))
+    return default
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> dict:
+    """Returns {'wire_bytes_per_device', 'by_op': {op: {'count','bytes'}}}."""
+    by_op: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0, "wire_bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if line.lstrip().startswith("ROOT"):
+            pass
+        size = _shape_bytes(shape_str)
+        if size == 0:
+            continue
+        g = max(2, _group_size(line, n_devices))
+        if op == "all-gather":
+            wire = size * (g - 1) // g
+        elif op == "reduce-scatter":
+            wire = size * (g - 1)
+        elif op == "all-reduce":
+            wire = 2 * size * (g - 1) // g
+        elif op == "all-to-all":
+            wire = size * (g - 1) // g
+        else:  # collective-permute
+            wire = size
+        d = by_op[op]
+        d["count"] += 1
+        d["bytes"] += size
+        d["wire_bytes"] += wire
+    total = sum(d["wire_bytes"] for d in by_op.values())
+    return {"wire_bytes_per_device": total, "by_op": dict(by_op)}

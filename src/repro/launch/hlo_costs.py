@@ -1,0 +1,348 @@
+"""Recursive HLO cost model with while-loop trip-count awareness.
+
+XLA's built-in HloCostAnalysis counts a while body ONCE, which under-counts
+scan-over-layers models by the layer count — useless for a roofline.  This
+walker multiplies loop bodies by their ``known_trip_count`` (emitted by XLA
+in backend_config) and accumulates, per device:
+
+  * flops        — dots (2*M*N*K), convolutions, and elementwise arithmetic
+  * bytes        — HBM-boundary traffic: every top-level instruction's
+                   operand + result bytes (fusions = boundary only; bitcast/
+                   tuple/GTE/parameter/constant are free)
+  * collectives  — wire bytes with ring-algorithm factors (all-gather etc.),
+                   trip-multiplied
+
+This is a static cost model: it over-counts against an infinitely smart
+scheduler (dead code inside loops) and under-counts register-resident
+reuse, but it is *consistent* across cells, which is what the roofline
+comparison needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_ELEMENTWISE_FLOP_OPS = {
+    "add", "multiply", "subtract", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "rsqrt", "sqrt", "tanh", "logistic", "negate",
+    "abs", "sign", "floor", "ceil", "round-nearest-afz", "expm1", "log1p",
+    "atan2", "compare", "select", "clamp", "and", "or", "xor", "not",
+    "cosine", "sine", "erf",
+}
+_FREE_OPS = {
+    "bitcast", "get-tuple-element", "tuple", "parameter", "constant",
+    "after-all", "add-dependency", "partition-id", "replica-id",
+}
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_INSTR_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _split_instr(line: str):
+    """'  %x = TYPE opcode(rest' -> (name, type_str, opcode, rest) or None.
+
+    TYPE may be a tuple '( ... )' containing '/*index=k*/' comments (which
+    embed '='), so we scan balanced parens instead of regexing."""
+    hm = _INSTR_HEAD_RE.match(line)
+    if not hm:
+        return None
+    name, s = hm.group(1), hm.group(2)
+    if s.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        type_str, tail = s[: end + 1], s[end + 1 :]
+    else:
+        om = re.match(r"((?:\w+\[[\d,]*\](?:\{[^}]*\})?\s*)+)(.*)$", s)
+        if not om:
+            return None
+        type_str, tail = om.group(1), om.group(2)
+    om = _OPCODE_RE.match(tail)
+    if not om:
+        return None
+    opcode = om.group(1)
+    rest = tail[om.end() :]
+    return name, type_str, opcode, rest
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DIMLBL_RE = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->")
+
+
+def _parse_shapes(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _parse_shapes(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 0)
+    return total
+
+
+def _nelems(type_str: str) -> int:
+    total = 0
+    for _, dims in _parse_shapes(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operands + attributes (the remainder of the line)
+
+    def operands(self) -> list[str]:
+        # operand section = up to the matching close paren of the opcode's "("
+        depth, end = 1, len(self.rest)
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return re.findall(r"%([\w\.\-]+)", self.rest[:end])
+
+    def attr(self, name: str) -> Optional[str]:
+        m = re.search(rf"{name}=%?([\w\.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict[str, str]  # param name -> type str
+    instrs: list[Instr]
+    is_entry: bool
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                params = {}
+                for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\))|[^,()]+)", m.group(3)):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(m.group(2), params, [], bool(m.group(1)))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parts = _split_instr(line)
+        if parts:
+            cur.instrs.append(Instr(*parts))
+    return comps
+
+
+class CostModel:
+    def __init__(self, text: str, n_devices: int):
+        self.comps = parse_module(text)
+        self.n_devices = n_devices
+        self._memo: dict[str, dict] = {}
+
+    def entry_cost(self) -> dict:
+        entry = next((c for c in self.comps.values() if c.is_entry), None)
+        if entry is None:
+            raise ValueError("no ENTRY computation found")
+        return self._cost(entry.name)
+
+    # ---------------------------------------------------------------- core
+    def _cost(self, comp_name: str) -> dict:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return {"flops": 0, "bytes": 0, "collective_wire": 0, "by_op": {}}
+        # symbol table: name -> type string
+        sym = dict(comp.params)
+        for ins in comp.instrs:
+            sym[ins.name] = ins.type_str
+
+        flops = 0.0
+        byts = 0.0
+        wire = 0.0
+        flops_f32 = 0.0  # matmul flops executed with f32 operands (1/4 MXU rate)
+        by_op: dict[str, dict] = defaultdict(lambda: {"count": 0, "wire_bytes": 0})
+
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in _FREE_OPS:
+                continue
+            res_bytes = _nbytes(ins.type_str)
+            opnd_bytes = sum(_nbytes(sym.get(o, "")) for o in ins.operands())
+
+            if op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                body = self._cost(ins.attr("body")) if ins.attr("body") else None
+                cond = self._cost(ins.attr("condition")) if ins.attr("condition") else None
+                for sub in (body, cond):
+                    if sub:
+                        flops += trip * sub["flops"]
+                        flops_f32 += trip * sub["flops_f32"]
+                        byts += trip * sub["bytes"]
+                        wire += trip * sub["collective_wire"]
+                        for k, v in sub["by_op"].items():
+                            by_op[k]["count"] += trip * v["count"]
+                            by_op[k]["wire_bytes"] += trip * v["wire_bytes"]
+                continue
+
+            if op in ("call", "conditional", "async-start"):
+                tgt = ins.attr("to_apply") or ins.attr("called_computation")
+                if tgt:
+                    sub = self._cost(tgt)
+                    flops += sub["flops"]
+                    flops_f32 += sub["flops_f32"]
+                    byts += sub["bytes"]
+                    wire += sub["collective_wire"]
+                continue
+
+            if op == "fusion":
+                # boundary traffic counts; internal *flops* still real
+                tgt = ins.attr("calls")
+                if tgt:
+                    sub = self._flops_only(tgt)
+                    flops += sub
+                byts += res_bytes + opnd_bytes
+                continue
+
+            if op == "dot":
+                lhs = ins.operands()[0] if ins.operands() else None
+                k = 1
+                lhs_dtype = None
+                cm = _CDIMS_RE.search(ins.rest)
+                if lhs and lhs in sym:
+                    dims = _parse_shapes(sym[lhs])
+                    if dims:
+                        lhs_dtype = dims[0][0]
+                        shape = dims[0][1]
+                        if cm:
+                            for ci in cm.group(1).split(","):
+                                if ci and int(ci) < len(shape):
+                                    k *= shape[int(ci)]
+                f = 2.0 * _nelems(ins.type_str) * k
+                flops += f
+                if lhs_dtype in ("f32", "f64"):
+                    flops_f32 += f
+                byts += res_bytes + opnd_bytes
+                continue
+
+            if op == "convolution":
+                rhs = ins.operands()[1] if len(ins.operands()) > 1 else None
+                ker = 1
+                if rhs and rhs in sym:
+                    shapes = _parse_shapes(sym[rhs])
+                    if shapes:
+                        kd = shapes[0][1]
+                        ker = 1
+                        for d in kd:
+                            ker *= d
+                        dm = _DIMLBL_RE.search(ins.rest)
+                        if dm:
+                            o_pos = dm.group(2).find("o")
+                            if 0 <= o_pos < len(kd) and kd[o_pos]:
+                                ker //= kd[o_pos]
+                flops += 2.0 * _nelems(ins.type_str) * ker
+                byts += res_bytes + opnd_bytes
+                continue
+
+            if op in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                      "collective-permute", "all-reduce-start", "all-gather-start",
+                      "collective-permute-start", "reduce-scatter-start"):
+                base = op.replace("-start", "")
+                size = max(res_bytes, opnd_bytes) if base == "all-gather" else res_bytes
+                g = self._group_size(ins.rest)
+                if base == "all-gather":
+                    w = size * (g - 1) // g
+                elif base == "reduce-scatter":
+                    w = opnd_bytes * (g - 1) // g
+                elif base == "all-reduce":
+                    w = 2 * size * (g - 1) // g
+                elif base == "all-to-all":
+                    w = size * (g - 1) // g
+                else:
+                    w = size
+                wire += w
+                by_op[base]["count"] += 1
+                by_op[base]["wire_bytes"] += w
+                byts += res_bytes + opnd_bytes
+                continue
+
+            # generic op
+            if op in _ELEMENTWISE_FLOP_OPS:
+                flops += _nelems(ins.type_str)
+            elif op in ("reduce", "reduce-window"):
+                flops += sum(_nelems(sym.get(o, "")) for o in ins.operands()[:1]) or _nelems(ins.type_str)
+            byts += res_bytes + opnd_bytes
+
+        out = {"flops": flops, "flops_f32": flops_f32, "bytes": byts,
+               "collective_wire": wire, "by_op": dict(by_op)}
+        self._memo[comp_name] = out
+        return out
+
+    def _flops_only(self, comp_name: str) -> float:
+        c = self._cost(comp_name)
+        return c["flops"]
+
+    def _group_size(self, rest: str) -> int:
+        m = _GROUPS_IOTA_RE.search(rest)
+        if m:
+            return max(2, int(m.group(2)))
+        m = _GROUPS_RE.search(rest)
+        if m:
+            return max(2, len(m.group(1).strip("{}").split(",")))
+        return max(2, self.n_devices)
+
+
+def analyze_text(text: str, n_devices: int) -> dict:
+    cm = CostModel(text, n_devices)
+    cost = cm.entry_cost()
+    return {
+        "flops_per_device": cost["flops"],
+        "f32_matmul_flops_per_device": cost["flops_f32"],
+        "hbm_bytes_per_device": cost["bytes"],
+        "collective_wire_bytes_per_device": cost["collective_wire"],
+        "collectives_by_op": cost["by_op"],
+    }

@@ -1,0 +1,41 @@
+"""Re-run the HLO cost model over saved .hlo.gz artifacts (no recompile).
+
+Usage: python -m repro.launch.reanalyze [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.launch import hlo_costs
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DEFAULT)
+    args = ap.parse_args()
+    n = 0
+    for gz in sorted(glob.glob(os.path.join(args.dir, "*.hlo.gz"))):
+        jpath = gz[: -len(".hlo.gz")] + ".json"
+        if not os.path.exists(jpath):
+            continue
+        with open(jpath) as f:
+            rec = json.load(f)
+        with gzip.open(gz, "rt") as f:
+            text = f.read()
+        rec["hlo_costs"] = hlo_costs.analyze_text(text, rec.get("n_devices", 256))
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+        print(f"reanalyzed {os.path.basename(jpath)}: "
+              f"flops/dev={rec['hlo_costs']['flops_per_device']:.3e}")
+    print(f"done: {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,241 @@
+"""Lowerable step functions + input_specs for every (arch x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for params, optimizer state, batches and caches;
+``build_step`` returns the jit-wrapped callable with in/out shardings bound,
+ready for ``.lower(**specs).compile()``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import GANConfig, LMConfig, SHAPES, ShapeConfig
+from repro.models import lm as LM
+from repro.optim import adamw_init, adamw_update
+from repro.parallel import sharding as SH
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+# ------------------------------------------------------------- LM lowering
+def _batch_structs(cfg: LMConfig, shape: ShapeConfig):
+    B, T = shape.global_batch, shape.seq_len
+    b: dict[str, Any] = {}
+    if shape.mode == "decode":
+        if cfg.frontend == "stub_embeds":
+            b["embeds"] = jax.ShapeDtypeStruct((B, 1, cfg.d_model), PARAM_DTYPE)
+        else:
+            b["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        return b
+    if cfg.frontend == "stub_embeds":
+        b["embeds"] = jax.ShapeDtypeStruct((B, T, cfg.d_model), PARAM_DTYPE)
+    else:
+        b["tokens"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    if shape.mode == "train":
+        b["labels"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    if cfg.mrope_sections is not None:
+        b["positions"] = jax.ShapeDtypeStruct((B, T, 3), jnp.int32)
+    return b
+
+
+def _decode_batch_specs(cfg, shape, mesh, axes):
+    nb = 1
+    for a in axes.batch:
+        nb *= mesh.shape[a]
+    batch_ax = axes.batch if shape.global_batch % nb == 0 else None
+    sp: dict[str, Any] = {}
+    if cfg.frontend == "stub_embeds":
+        sp["embeds"] = P(batch_ax, None, None)
+    else:
+        sp["tokens"] = P(batch_ax, None)
+    return sp
+
+
+def lm_input_specs(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh):
+    """Returns (arg_structs, in_shardings, out_shardings, meta) for the cell."""
+    axes = SH.MeshAxes.for_mesh(mesh)
+    pspecs, fallbacks = SH.lm_param_specs(cfg, mesh, axes)
+    params_struct = jax.eval_shape(lambda k: LM.lm_init(k, cfg, PARAM_DTYPE),
+                                   jax.ShapeDtypeStruct((2,), jnp.uint32))
+    meta = {"fallbacks": fallbacks}
+
+    if shape.mode == "train":
+        opt_struct = jax.eval_shape(adamw_init, params_struct)
+        ospecs = SH.opt_specs(pspecs)
+        bstructs = _batch_structs(cfg, shape)
+        bspecs = SH.lm_batch_specs(cfg, shape, mesh, axes)
+        args = (params_struct, opt_struct, bstructs)
+        in_sh = (pspecs, ospecs, bspecs)
+        out_sh = (pspecs, ospecs, P())
+        return args, in_sh, out_sh, meta
+
+    nb = 1
+    for a in axes.batch:
+        nb *= mesh.shape[a]
+    batch_ax = axes.batch if shape.global_batch % nb == 0 else None
+    v_ax = axes.tp if cfg.vocab % mesh.shape[axes.tp] == 0 else None
+    logits_spec = P(batch_ax, v_ax)
+
+    if shape.mode == "prefill":
+        bstructs = _batch_structs(cfg, shape)
+        bspecs = SH.lm_batch_specs(cfg, shape, mesh, axes)
+        cspecs = SH.cache_specs(cfg, shape, mesh, axes)
+        args = (params_struct, bstructs)
+        in_sh = (pspecs, bspecs)
+        out_sh = (logits_spec, cspecs)  # (last logits, cache)
+        return args, in_sh, out_sh, meta
+
+    # decode
+    seq_shard = shape.name == "long_500k"
+    cache_struct = jax.eval_shape(
+        lambda: LM.init_cache(cfg, shape.global_batch, shape.seq_len, PARAM_DTYPE)
+    )
+    cspecs = SH.cache_specs(cfg, shape, mesh, axes, seq_shard=seq_shard)
+    bstructs = _batch_structs(cfg, shape)
+    bspecs = _decode_batch_specs(cfg, shape, mesh, axes)
+    cache_len = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (params_struct, cache_struct, bstructs, cache_len)
+    in_sh = (pspecs, cspecs, bspecs, P())
+    out_sh = (logits_spec, cspecs)
+    meta["seq_shard"] = seq_shard
+    return args, in_sh, out_sh, meta
+
+
+def build_lm_step(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh):
+    """Returns (jit_fn, arg_structs, meta)."""
+    args, in_sh, out_sh, meta = lm_input_specs(cfg, shape, mesh)
+    named = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    shard_act = None  # activation constraints come from input/param shardings
+
+    if shape.mode == "train":
+
+        def train_step(params, opt, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: LM.train_loss(p, cfg, batch, q_chunk=cfg.q_chunk, loss_chunk=cfg.loss_chunk, mesh=mesh)
+            )(params)
+            params, opt, _ = adamw_update(params, grads, opt, lr=3e-4, max_grad_norm=1.0)
+            return params, opt, loss
+
+        fn = jax.jit(
+            train_step, in_shardings=named(in_sh), out_shardings=named(out_sh),
+            donate_argnums=(0, 1),
+        )
+        return fn, args, meta
+
+    if shape.mode == "prefill":
+
+        def prefill_step(params, batch):
+            return LM.prefill(params, cfg, batch, q_chunk=cfg.q_chunk, max_len=shape.seq_len + 1, mesh=mesh)
+
+        fn = jax.jit(prefill_step, in_shardings=named(in_sh), out_shardings=named(out_sh))
+        return fn, args, meta
+
+    seq_shard = meta.get("seq_shard", False)
+
+    def serve_step(params, cache, batch, cache_len):
+        tok = batch.get("tokens", batch.get("embeds"))
+        return LM.decode_step(
+            params, cfg, cache, tok, cache_len,
+            mesh=mesh if seq_shard else None,
+            seq_shard_axis="data" if seq_shard else None,
+        )
+
+    fn = jax.jit(
+        serve_step, in_shardings=named(in_sh), out_shardings=named(out_sh),
+        donate_argnums=(1,),
+    )
+    return fn, args, meta
+
+
+# ------------------------------------------------------------ GAN lowering
+GAN_TRAIN_BATCH = 256
+
+
+def gan_input_specs(cfg: GANConfig, mesh: Mesh):
+    from repro.models import gan as G
+
+    axes = SH.MeshAxes.for_mesh(mesh)
+    tp = axes.tp
+
+    def spec_of(path_leaf):
+        return P()
+
+    gp = jax.eval_shape(lambda k: G.generator_init(k, cfg, PARAM_DTYPE),
+                        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    dp = jax.eval_shape(lambda k: G.discriminator_init(k, cfg, PARAM_DTYPE),
+                        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def gspec(kp, leaf):
+        name = jax.tree_util.keystr(kp)
+        if leaf.ndim == 4 and "deconv" in name:  # (K,K,N,M): TP on M
+            m_ok = leaf.shape[3] % mesh.shape[tp] == 0
+            return P(None, None, None, tp if m_ok else None)
+        if leaf.ndim == 4:  # conv (K,K,Cin,Cout)
+            m_ok = leaf.shape[3] % mesh.shape[tp] == 0
+            return P(None, None, None, tp if m_ok else None)
+        if leaf.ndim == 2:  # dense
+            ok = leaf.shape[1] % mesh.shape[tp] == 0
+            return P(None, tp if ok else None)
+        return P()
+
+    gspecs = jax.tree_util.tree_map_with_path(gspec, gp)
+    dspecs = jax.tree_util.tree_map_with_path(gspec, dp)
+    batch_ax = axes.batch
+    z = jax.ShapeDtypeStruct((GAN_TRAIN_BATCH, cfg.z_dim), PARAM_DTYPE) if cfg.z_dim else \
+        jax.ShapeDtypeStruct((GAN_TRAIN_BATCH, cfg.img_hw, cfg.img_hw, 3), PARAM_DTYPE)
+    real = jax.ShapeDtypeStruct((GAN_TRAIN_BATCH, cfg.img_hw, cfg.img_hw, 3), PARAM_DTYPE)
+    zspec = P(batch_ax, None) if cfg.z_dim else P(batch_ax, None, None, None)
+    return (gp, dp, z, real), (gspecs, dspecs, zspec, P(batch_ax, None, None, None))
+
+
+def build_gan_step(cfg: GANConfig, mesh: Mesh):
+    from repro.models import gan as G
+    from repro.train.trainer import gan_losses
+
+    (gp, dp, z, real), (gspecs, dspecs, zspec, rspec) = gan_input_specs(cfg, mesh)
+    gopt = jax.eval_shape(adamw_init, gp)
+    dopt = jax.eval_shape(adamw_init, dp)
+    gosp = SH.opt_specs(gspecs)
+    dosp = SH.opt_specs(dspecs)
+
+    def step(gp_, dp_, go_, do_, z_, real_):
+        def g_obj(g):
+            gl, _, (gs, _, _) = gan_losses(g, dp_, cfg, z_, real_)
+            return gl, gs
+
+        (gl, gs), ggrads = jax.value_and_grad(g_obj, has_aux=True)(gp_)
+        gp2, go2, _ = adamw_update(gp_, ggrads, go_, lr=2e-4, b1=0.5)
+
+        def d_obj(d):
+            _, dl, (_, ds, _) = gan_losses(gp2, d, cfg, z_, real_)
+            return dl, ds
+
+        (dl, ds), dgrads = jax.value_and_grad(d_obj, has_aux=True)(dp_)
+        dp2, do2, _ = adamw_update(dp_, dgrads, do_, lr=2e-4, b1=0.5)
+        return gp2, dp2, go2, do2, gl, dl
+
+    named = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    fn = jax.jit(
+        step,
+        in_shardings=named((gspecs, dspecs, gosp, dosp, zspec, rspec)),
+        out_shardings=named((gspecs, dspecs, gosp, dosp, P(), P())),
+        donate_argnums=(0, 1, 2, 3),
+    )
+    return fn, (gp, dp, gopt, dopt, z, real), {}
+
+
+def build_step(arch: str, shape_name: str, mesh: Mesh):
+    cfg = get_config(arch)
+    if isinstance(cfg, GANConfig):
+        return build_gan_step(cfg, mesh)
+    return build_lm_step(cfg, SHAPES[shape_name], mesh)

@@ -1,0 +1,2 @@
+"""Model definitions: GAN family (the paper's workloads) + LM family
+(assigned architectures).  Parameters are plain nested-dict pytrees."""

@@ -1,0 +1,224 @@
+"""Attention: GQA + RoPE/M-RoPE, full/sliding-window, chunked for long
+sequences, KV-cache decode (incl. ring buffers for windowed layers).
+
+Memory discipline: training/prefill attention scans over *query chunks* so
+the (q_chunk, T) score slab is the peak, never (T, T).  Local (sliding
+window) layers slice a (window + q_chunk) KV span per chunk, so their HLO
+FLOPs genuinely scale with the window — this is what makes gemma3/mixtral
+long-context cells sub-quadratic in the roofline.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jax.Array,  # (B, T, H, hd)
+    positions: jax.Array,  # (B, T) or (B, T, 3) for M-RoPE
+    theta: float,
+    mrope_sections: Optional[tuple[int, int, int]] = None,
+) -> jax.Array:
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    if mrope_sections is None:
+        pos = positions.astype(jnp.float32)  # (B,T)
+        ang = pos[..., None] * inv[None, None, :]  # (B,T,hd/2)
+    else:
+        # qwen2-vl M-RoPE: frequency slots split into (t, h, w) sections,
+        # each rotated by its own position stream.
+        assert positions.ndim == 3 and positions.shape[-1] == 3
+        secs = mrope_sections
+        assert sum(secs) == hd // 2, (secs, hd)
+        parts = []
+        for i, s in enumerate(secs):
+            lo = sum(secs[:i])
+            parts.append(positions[..., i : i + 1].astype(jnp.float32) * inv[None, None, lo : lo + s])
+        ang = jnp.concatenate(parts, axis=-1)  # (B,T,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[:, :, None, :]  # (B,T,1,hd/2)
+    sin = sin[:, :, None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- core math
+def _sdpa(q, k, v, mask, scale, bf16_qk: bool = False):
+    """q (B,Tq,H,hd) k/v (B,Tk,Hkv,hd) mask (B|1,1,Tq,Tk) additive.
+
+    ``bf16_qk``: run the QK^T matmul with bf16 operands (full MXU rate) and
+    fp32 accumulation — the softmax itself always runs in fp32.  Off by
+    default (fp32 QK baseline)."""
+    B, Tq, H, hd = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    if bf16_qk:
+        qg = (q * scale).astype(q.dtype).reshape(B, Tq, Hkv, rep, hd)
+        scores = jnp.einsum(
+            "bqgrd,bkgd->bgrqk", qg, k, preferred_element_type=jnp.float32
+        )
+    else:
+        qf = q.astype(jnp.float32) * scale
+        # group query heads over shared kv head: (B,Tq,Hkv,rep,hd)
+        qg = qf.reshape(B, Tq, Hkv, rep, hd)
+        scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k.astype(jnp.float32))
+    scores = scores + mask[:, :, None, :, :]  # (B|1,1,1,Tq,Tk) broadcast over g,r
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v.dtype), v)
+    return out.reshape(B, Tq, H, hd)
+
+
+def attention(
+    q: jax.Array,  # (B, T, H, hd)  (already roped)
+    k: jax.Array,  # (B, T, Hkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,  # 0 = full; else sliding window (causal)
+    q_chunk: int = 1024,
+    bf16_qk: bool = False,
+) -> jax.Array:
+    """Chunked exact attention.  Scans over query chunks; local layers only
+    read a (window + q_chunk) KV span per chunk."""
+    B, T, H, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    if T <= q_chunk:
+        return _attend_block(q, k, v, 0, T, causal, window, scale, bf16_qk)
+
+    Tp = -(-T // q_chunk) * q_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0))) if Tp != T else q
+    nq = Tp // q_chunk
+
+    def body(carry, qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(qp, qi * q_chunk, q_chunk, axis=1)
+        out = _attend_chunk(q_blk, k, v, qi * q_chunk, causal, window, scale, q_chunk, bf16_qk)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, 0, jnp.arange(nq))
+    # (nq, B, q_chunk, H, hd) -> (B, Tp, H, hd) -> crop
+    return jnp.transpose(outs, (1, 0, 2, 3, 4)).reshape(B, Tp, H, hd)[:, :T]
+
+
+def _attend_chunk(q_blk, k, v, q_start, causal, window, scale, q_chunk, bf16_qk=False):
+    """One query chunk against the relevant KV span."""
+    B, _, H, hd = q_blk.shape
+    T = k.shape[1]
+    if window and window + q_chunk < T:
+        span = window + q_chunk
+        # kv span covering [q_start - window, q_start + q_chunk)
+        start = jnp.clip(q_start - window, 0, T - span)
+        k_s = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        v_s = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        kv_pos = start + jnp.arange(span)
+    else:
+        k_s, v_s = k, v
+        kv_pos = jnp.arange(T)
+        start = 0
+    q_pos = q_start + jnp.arange(q_chunk)
+    mask = jnp.zeros((1, 1, q_chunk, k_s.shape[1]), jnp.float32)
+    if causal:
+        mask = jnp.where(q_pos[None, None, :, None] >= kv_pos[None, None, None, :], 0.0, NEG_INF)
+    if window:
+        mask = jnp.where(
+            q_pos[None, None, :, None] - kv_pos[None, None, None, :] < window, mask, NEG_INF
+        )
+    return _sdpa(q_blk, k_s, v_s, mask, scale, bf16_qk)
+
+
+def _attend_block(q, k, v, q_start, Tq, causal, window, scale, bf16_qk=False):
+    q_pos = q_start + jnp.arange(Tq)
+    kv_pos = jnp.arange(k.shape[1])
+    mask = jnp.zeros((1, 1, Tq, k.shape[1]), jnp.float32)
+    if causal:
+        mask = jnp.where(q_pos[None, None, :, None] >= kv_pos[None, None, None, :], 0.0, NEG_INF)
+    if window:
+        mask = jnp.where(
+            q_pos[None, None, :, None] - kv_pos[None, None, None, :] < window, mask, NEG_INF
+        )
+    return _sdpa(q, k, v, mask, scale, bf16_qk)
+
+
+# ------------------------------------------------------------------ decode
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, hd) roped at position cache_len
+    k_cache: jax.Array,  # (B, S, Hkv, hd) (positions 0..cache_len valid)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # scalar int32 — tokens already in cache (incl. new)
+    *,
+    kv_positions: Optional[jax.Array] = None,  # (B, S) for ring buffers
+) -> jax.Array:
+    """Single-token decode against a (possibly ring) KV cache."""
+    B, S, Hkv, hd = k_cache.shape
+    scale = 1.0 / math.sqrt(hd)
+    if kv_positions is None:
+        valid = jnp.arange(S)[None, :] < cache_len  # (1,S) -> broadcast (B,S)
+        valid = jnp.broadcast_to(valid, (B, S))
+    else:
+        valid = (kv_positions >= 0) & (kv_positions < cache_len)
+    mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]  # (B,1,1,S)
+    return _sdpa(q, k_cache, v_cache, mask, scale)
+
+
+def seq_sharded_decode_attention(
+    q, k_cache, v_cache, cache_len, *, mesh, seq_axis: str = "data", kv_positions=None
+):
+    """Long-context decode with the KV cache sequence-sharded over ``seq_axis``.
+
+    Distributed flash-decode: each shard computes a partial (max, denom,
+    weighted-V) over its KV slice; a tree combine (pmax + psum) produces the
+    exact softmax — no all-gather of the KV ever materializes.  Used for the
+    long_500k cells.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    B, S, Hkv, hd = k_cache.shape
+    scale = 1.0 / math.sqrt(hd)
+    n_shard = mesh.shape[seq_axis]
+
+    def local(q_l, k_l, v_l, cl, kp_l):
+        # q_l (B,1,H,hd) replicated; k_l/v_l (B, S/n, Hkv, hd) local slice
+        H = q_l.shape[2]
+        rep = H // Hkv
+        if kp_l is None:
+            idx = jax.lax.axis_index(seq_axis) * (S // n_shard) + jnp.arange(S // n_shard)
+            valid = jnp.broadcast_to(idx[None, :] < cl, (B, S // n_shard))
+        else:
+            valid = (kp_l >= 0) & (kp_l < cl)
+        qf = q_l.astype(jnp.float32) * scale
+        qg = qf.reshape(B, 1, Hkv, rep, hd)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k_l.astype(jnp.float32))
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        m_loc = s.max(-1)  # (B,g,r,1)
+        p = jnp.exp(s - m_loc[..., None])
+        l_loc = p.sum(-1)
+        o_loc = jnp.einsum("bgrqk,bkgd->bgrqd", p, v_l.astype(jnp.float32))
+        m_glob = jax.lax.pmax(m_loc, seq_axis)
+        corr = jnp.exp(m_loc - m_glob)
+        l_glob = jax.lax.psum(l_loc * corr, seq_axis)
+        o_glob = jax.lax.psum(o_loc * corr[..., None], seq_axis)
+        out = o_glob / l_glob[..., None]
+        return out.reshape(B, 1, H, hd).astype(q_l.dtype)
+
+    specs_kv = P(None, seq_axis, None, None)
+    kp_spec = P(None, seq_axis) if kv_positions is not None else None
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), specs_kv, specs_kv, P(), kp_spec),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(q, k_cache, v_cache, cache_len, kv_positions)

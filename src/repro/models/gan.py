@@ -1,0 +1,134 @@
+"""GAN generators/discriminators built on the Winograd-DeConv core.
+
+The generator's deconv layers dispatch to any of the paper's three method
+families (``deconv_impl``): 'ref' / 'pallas' (this paper), 'tdc' ([14]),
+'zero_padded' ([10-12]), 'lax' (XLA's own conv_transpose) — all numerically
+identical, so speed comparisons are apples-to-apples.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GANConfig
+from repro.core import tdc_deconv2d, zero_padded_deconv2d, lax_deconv2d, winograd_deconv2d
+from repro.core.tdc import DeconvDims
+from repro.kernels import ops as kops
+
+from . import layers as L
+
+Params = dict[str, Any]
+
+
+def _deconv_apply(impl: str, x, w, dims: DeconvDims):
+    if impl == "ref":
+        return winograd_deconv2d(x, w, dims)
+    if impl == "ref_bf16":
+        return winograd_deconv2d(x, w, dims, bf16=True)
+    if impl == "ref_dense":
+        return winograd_deconv2d(x, w, dims, dense=True, bf16=True)
+    if impl == "pallas":
+        return kops.winograd_deconv2d_fused(x, w, dims)
+    if impl == "pallas_interpret":
+        return kops.winograd_deconv2d_fused(x, w, dims, interpret=True,
+                                            block_t=16, block_n=8, block_m=8)
+    if impl == "tdc":
+        return tdc_deconv2d(x, w, dims)
+    if impl == "zero_padded":
+        return zero_padded_deconv2d(x, w, dims)
+    if impl == "lax":
+        return lax_deconv2d(x, w, dims)
+    raise ValueError(impl)
+
+
+# ---------------------------------------------------------------- generator
+def generator_init(key: jax.Array, cfg: GANConfig, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 2 + len(cfg.encoder) + len(cfg.deconvs))
+    p: Params = {}
+    ki = 0
+    if cfg.z_dim:  # latent stem
+        p["stem"] = L.linear_init(keys[ki], cfg.z_dim, cfg.seed_hw**2 * cfg.stem_ch, dtype)
+        p["stem_bn"] = L.batchnorm_init(cfg.stem_ch, dtype)
+        ki += 1
+    for i, e in enumerate(cfg.encoder):
+        p[f"enc{i}"] = L.conv2d_init(keys[ki], e.kernel, e.c_in, e.c_out, dtype)
+        if e.norm == "batch":
+            p[f"enc{i}_bn"] = L.batchnorm_init(e.c_out, dtype)
+        ki += 1
+    for i, d in enumerate(cfg.deconvs):
+        p[f"deconv{i}"] = {
+            "w": L.normal_init(keys[ki], (d.dims.kernel, d.dims.kernel, d.c_in, d.c_out), 0.02, dtype)
+        }
+        if d.norm == "batch":
+            p[f"deconv{i}_bn"] = L.batchnorm_init(d.c_out, dtype)
+        ki += 1
+    return p
+
+
+def generator_apply(
+    p: Params, cfg: GANConfig, inp: jax.Array, *, training: bool = True
+) -> tuple[jax.Array, Params]:
+    """inp: (B, z_dim) latent or (B, H, W, 3) image (image-to-image).
+    Returns (image, new_bn_stats)."""
+    new_stats: Params = {}
+    if cfg.z_dim:
+        h = L.linear(p["stem"], inp)
+        h = h.reshape(inp.shape[0], cfg.seed_hw, cfg.seed_hw, cfg.stem_ch)
+        h, s = L.batchnorm(p["stem_bn"], h, training=training)
+        new_stats["stem_bn"] = s
+        h = jax.nn.relu(h)
+    else:
+        h = inp
+        for i, e in enumerate(cfg.encoder):
+            h = L.conv2d(p[f"enc{i}"], h, stride=e.stride)
+            if e.norm == "batch":
+                h, s = L.batchnorm(p[f"enc{i}_bn"], h, training=training)
+                new_stats[f"enc{i}_bn"] = s
+            h = L.ACTIVATIONS[e.act](h)
+    for i, d in enumerate(cfg.deconvs):
+        h = _deconv_apply(cfg.deconv_impl, h, p[f"deconv{i}"]["w"], d.dims)
+        if d.norm == "batch":
+            h, s = L.batchnorm(p[f"deconv{i}_bn"], h, training=training)
+            new_stats[f"deconv{i}_bn"] = s
+        h = L.ACTIVATIONS[d.act](h)
+    return h, new_stats
+
+
+# ------------------------------------------------------------ discriminator
+def discriminator_init(key: jax.Array, cfg: GANConfig, dtype=jnp.float32) -> Params:
+    chans = [cfg.img_ch, 64, 128, 256, 512]
+    keys = jax.random.split(key, len(chans))
+    p: Params = {}
+    for i in range(len(chans) - 1):
+        p[f"conv{i}"] = L.conv2d_init(keys[i], 4, chans[i], chans[i + 1], dtype)
+        if i > 0:
+            p[f"conv{i}_bn"] = L.batchnorm_init(chans[i + 1], dtype)
+    final_hw = cfg.img_hw // 2 ** (len(chans) - 1)
+    p["head"] = L.linear_init(keys[-1], final_hw**2 * 512, 1, dtype)
+    return p
+
+
+def discriminator_apply(
+    p: Params, cfg: GANConfig, img: jax.Array, *, training: bool = True
+) -> tuple[jax.Array, Params]:
+    h, new_stats = img, {}
+    i = 0
+    while f"conv{i}" in p:
+        h = L.conv2d(p[f"conv{i}"], h, stride=2)
+        if f"conv{i}_bn" in p:
+            h, s = L.batchnorm(p[f"conv{i}_bn"], h, training=training)
+            new_stats[f"conv{i}_bn"] = s
+        h = L.leaky_relu(h)
+        i += 1
+    return L.linear(p["head"], h.reshape(h.shape[0], -1)), new_stats
+
+
+def merge_bn_stats(params: Params, stats: Params) -> Params:
+    """Fold updated running BN stats back into the param tree."""
+    out = dict(params)
+    for k, s in stats.items():
+        out[k] = {**params[k], **s}
+    return out

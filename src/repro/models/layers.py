@@ -1,0 +1,129 @@
+"""Building-block layers (pure functions over param pytrees).
+
+Convention: every layer is (init(key, ...) -> params, apply(params, x, ...)).
+Params are nested dicts of jnp arrays so they shard/checkpoint trivially.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------- inits
+def normal_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+def lecun_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return jax.random.normal(key, shape, dtype) / math.sqrt(max(1, fan_in))
+
+
+# ---------------------------------------------------------------- linear
+def linear_init(key, d_in, d_out, dtype=jnp.float32, bias=True, scale=None):
+    kw, kb = jax.random.split(key)
+    p = {"w": lecun_init(kw, (d_in, d_out), d_in, dtype) if scale is None
+         else normal_init(kw, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ----------------------------------------------------------------- norms
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------- batchnorm
+def batchnorm_init(c, dtype=jnp.float32):
+    return {
+        "scale": jnp.ones((c,), dtype),
+        "bias": jnp.zeros((c,), dtype),
+        "mean": jnp.zeros((c,), jnp.float32),  # running stats (state-like,
+        "var": jnp.ones((c,), jnp.float32),    # updated by the trainer)
+    }
+
+
+def batchnorm(p, x, *, training: bool, momentum=0.9, eps=1e-5):
+    """NHWC batch norm.  Returns (y, new_stats)."""
+    if training:
+        xf = x.astype(jnp.float32)
+        axes = tuple(range(x.ndim - 1))
+        mu = xf.mean(axes)
+        var = xf.var(axes)
+        new = {
+            "mean": momentum * p["mean"] + (1 - momentum) * mu,
+            "var": momentum * p["var"] + (1 - momentum) * var,
+        }
+    else:
+        mu, var = p["mean"], p["var"]
+        new = {"mean": p["mean"], "var": p["var"]}
+    y = (x.astype(jnp.float32) - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype), new
+
+
+# ------------------------------------------------------------ embeddings
+def embedding_init(key, vocab, d, dtype=jnp.float32, scale=0.02):
+    return {"table": normal_init(key, (vocab, d), scale, dtype)}
+
+
+def embedding(p, ids):
+    return p["table"][ids]
+
+
+# ------------------------------------------------------------------ conv
+def conv2d_init(key, k, c_in, c_out, dtype=jnp.float32):
+    return {
+        "w": lecun_init(key, (k, k, c_in, c_out), k * k * c_in, dtype),
+        "b": jnp.zeros((c_out,), dtype),
+    }
+
+
+def conv2d(p, x, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding, dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + p["b"]
+
+
+# ------------------------------------------------------------ activations
+def leaky_relu(x, slope=0.2):
+    return jnp.where(x >= 0, x, slope * x)
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "relu": jax.nn.relu,
+    "leaky_relu": leaky_relu,
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "none": lambda x: x,
+}

@@ -1,0 +1,455 @@
+"""Block-program transformer: one code path for all 10 assigned archs.
+
+Structure: ``n_layers`` splits into ``n_super`` repetitions of a *super-block*
+(the period of the layer/attention/MoE cycles — 1 for homogeneous stacks,
+6 for gemma3's 5-local:1-global, 8 for jamba's 1-attn:7-mamba).  Parameters
+are stacked with leading dim n_super and the forward pass is a lax.scan over
+super-blocks: HLO size is O(period), not O(depth) — essential for 80 dry-run
+compiles on one CPU and for distributing HLO to 1000+ hosts.
+
+Three entry points (what the shape cells lower):
+  * ``train_loss``    — full causal forward + chunked-head CE (logits never
+                        materialized at (B,T,V)).
+  * ``prefill``       — forward returning (last-token logits, cache).
+  * ``decode_step``   — one token against the cache (serve_step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+
+from . import layers as L
+from . import mlp as M
+from . import moe as MoE
+from . import ssm as S
+from .attention import apply_rope, attention, decode_attention, seq_sharded_decode_attention
+
+Params = dict[str, Any]
+
+
+# ----------------------------------------------------------- slot structure
+@dataclasses.dataclass(frozen=True)
+class SlotSpec:
+    kind: str  # attn | mamba
+    attn_kind: str = ""  # global | local (attn only)
+    ffn: str = "none"  # mlp | moe | none
+
+
+def superblock_period(cfg: LMConfig) -> int:
+    p = len(cfg.layer_cycle)
+    # attention cycle advances only on attn layers; find the global period
+    n_attn_in_cycle = sum(1 for k in cfg.layer_cycle if k == "attn")
+    if n_attn_in_cycle:
+        p = p * _lcm(len(cfg.attn_cycle), n_attn_in_cycle) // n_attn_in_cycle
+    if cfg.moe is not None:
+        p = _lcm(p, cfg.moe.every)
+    assert cfg.n_layers % p == 0, (cfg.arch_id, p, cfg.n_layers)
+    return p
+
+
+def _lcm(a, b):
+    return a * b // math.gcd(a, b)
+
+
+def slot_specs(cfg: LMConfig) -> list[SlotSpec]:
+    period = superblock_period(cfg)
+    kinds = cfg.layer_kinds()[:period]
+    attn_kinds = cfg.attn_kinds()[:period]
+    slots = []
+    for i in range(period):
+        if cfg.d_ff == 0:
+            ffn = "none"
+        elif cfg.moe is not None and (i % cfg.moe.every) == cfg.moe.every - 1:
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        slots.append(SlotSpec(kinds[i], attn_kinds[i], ffn))
+    return slots
+
+
+# ------------------------------------------------------------------- init
+def _norm_init(cfg, d):
+    return L.rmsnorm_init(d) if cfg.norm == "rmsnorm" else L.layernorm_init(d)
+
+
+def _norm(cfg, p, x):
+    return L.rmsnorm(p, x) if cfg.norm == "rmsnorm" else L.layernorm(p, x)
+
+
+def attn_init(key, cfg: LMConfig, dtype):
+    hd = cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": L.linear_init(kq, cfg.d_model, cfg.n_heads * hd, dtype, bias=False),
+        "wk": L.linear_init(kk, cfg.d_model, cfg.n_kv_heads * hd, dtype, bias=False),
+        "wv": L.linear_init(kv, cfg.d_model, cfg.n_kv_heads * hd, dtype, bias=False),
+        "wo": L.linear_init(ko, cfg.n_heads * hd, cfg.d_model, dtype, bias=False),
+    }
+
+
+def slot_init(key, cfg: LMConfig, spec: SlotSpec, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"norm1": _norm_init(cfg, cfg.d_model)}
+    if spec.kind == "attn":
+        p["attn"] = attn_init(k1, cfg, dtype)
+    else:
+        p["mamba"] = S.ssm_init(k1, cfg.d_model, cfg.ssm, dtype)
+    if spec.ffn != "none":
+        p["norm2"] = _norm_init(cfg, cfg.d_model)
+        if spec.ffn == "moe":
+            p["moe"] = MoE.moe_init(k2, cfg.d_model, cfg.d_ff, cfg.moe, cfg.mlp, dtype)
+        else:
+            p["mlp"] = M.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    return p
+
+
+def lm_init(key, cfg: LMConfig, dtype=jnp.bfloat16) -> Params:
+    period = superblock_period(cfg)
+    n_super = cfg.n_layers // period
+    specs = slot_specs(cfg)
+    ke, kh, kb = jax.random.split(key, 3)
+    p: Params = {
+        "embed": L.embedding_init(ke, cfg.vocab, cfg.d_model, dtype),
+        "final_norm": _norm_init(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = {"w": L.normal_init(kh, (cfg.d_model, cfg.vocab), 0.02, dtype)}
+
+    def init_block(k):
+        ks = jax.random.split(k, period)
+        return {f"slot{i}": slot_init(ks[i], cfg, specs[i], dtype) for i in range(period)}
+
+    p["blocks"] = jax.vmap(init_block)(jax.random.split(kb, n_super))
+    return p
+
+
+# ---------------------------------------------------------------- forward
+def _hint(mesh, x, *spec):
+    """Best-effort with_sharding_constraint (no-op without a mesh)."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def _attn_hint_axes(cfg: LMConfig, mesh, batch: int):
+    """(batch_axes, head_axis, kv_axis) honoring divisibility, or Nones."""
+    if mesh is None:
+        return None, None, None
+    names = mesh.axis_names
+    b_axes = tuple(a for a in ("pod", "data") if a in names)
+    nb = 1
+    for a in b_axes:
+        nb *= mesh.shape[a]
+    b_ax = b_axes if (b_axes and batch % nb == 0) else None
+    h_ax = "model" if ("model" in names and cfg.n_heads % mesh.shape["model"] == 0) else None
+    kv_ax = "model" if ("model" in names and cfg.n_kv_heads % mesh.shape["model"] == 0) else None
+    return b_ax, h_ax, kv_ax
+
+
+def _attn_forward(cfg: LMConfig, p, x, positions, attn_kind, q_chunk, mesh=None):
+    B, T, D = x.shape
+    hd = cfg.hd
+    q = L.linear(p["wq"], x).reshape(B, T, cfg.n_heads, hd)
+    k = L.linear(p["wk"], x).reshape(B, T, cfg.n_kv_heads, hd)
+    v = L.linear(p["wv"], x).reshape(B, T, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    if cfg.act_hints and mesh is not None:
+        b_ax, h_ax, kv_ax = _attn_hint_axes(cfg, mesh, B)
+        q = _hint(mesh, q, b_ax, None, h_ax, None)
+        k = _hint(mesh, k, b_ax, None, kv_ax, None)
+        v = _hint(mesh, v, b_ax, None, kv_ax, None)
+    window = cfg.window if attn_kind == "local" else 0
+    o = attention(q, k, v, causal=True, window=window, q_chunk=q_chunk,
+                  bf16_qk=cfg.attn_bf16_qk)
+    if cfg.act_hints and mesh is not None:
+        o = _hint(mesh, o, b_ax, None, h_ax, None)
+    return L.linear(p["wo"], o.reshape(B, T, cfg.n_heads * hd)), (k, v)
+
+
+def _apply_ffn(cfg, spec: SlotSpec, p, x, mesh=None):
+    """The post-mixer FFN (dense or MoE); returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn == "none":
+        return x, aux
+    h2 = _norm(cfg, p["norm2"], x)
+    if spec.ffn == "moe":
+        if cfg.moe_ep and mesh is not None:
+            y, aux = MoE.moe_apply_ep(p["moe"], h2, cfg.moe, cfg.mlp, mesh=mesh)
+        else:
+            y, aux = MoE.moe_apply(p["moe"], h2, cfg.moe, cfg.mlp)
+        x = x + y
+    else:
+        x = x + M.mlp_apply(p["mlp"], h2, cfg.mlp)
+    return x, aux
+
+
+def _slot_forward(cfg, spec: SlotSpec, p, x, positions, q_chunk, mesh=None):
+    """Returns (x, kv-or-None, aux_loss)."""
+    h = _norm(cfg, p["norm1"], x)
+    kv = None
+    if spec.kind == "attn":
+        a, kv = _attn_forward(cfg, p["attn"], h, positions, spec.attn_kind, q_chunk, mesh)
+        x = x + a
+    else:
+        x = x + S.ssm_apply(p["mamba"], h, cfg.ssm, bf16_matmul=cfg.ssm_bf16)
+    x, aux = _apply_ffn(cfg, spec, p, x, mesh)
+    if cfg.act_hints and mesh is not None:
+        b_ax, _, _ = _attn_hint_axes(cfg, mesh, x.shape[0])
+        x = _hint(mesh, x, b_ax, None, None)
+    return x, kv, aux
+
+
+def backbone(
+    params: Params,
+    cfg: LMConfig,
+    x: jax.Array,  # (B, T, D) embedded input
+    positions: jax.Array,
+    *,
+    q_chunk: int = 1024,
+    collect_cache: bool = False,
+    mesh=None,
+):
+    """Scan over super-blocks.  Returns (hidden, stacked kv cache or None, aux)."""
+    specs = slot_specs(cfg)
+
+    def block(x, bp):
+        kvs, auxs = {}, jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(specs):
+            x, kv, aux = _slot_forward(cfg, spec, bp[f"slot{i}"], x, positions, q_chunk, mesh)
+            auxs = auxs + aux
+            if collect_cache and kv is not None:
+                kvs[f"slot{i}"] = kv
+        return x, (kvs, auxs)
+
+    if cfg.remat:
+        block = jax.checkpoint(block)
+
+    x, (kvs, auxs) = jax.lax.scan(block, x, params["blocks"])
+    return x, kvs, jnp.sum(auxs)
+
+
+def embed_or_pass(params, cfg: LMConfig, inp) -> jax.Array:
+    if cfg.frontend == "stub_embeds":
+        return inp  # (B, T, D) precomputed frame/patch embeddings
+    return L.embedding(params["embed"], inp)
+
+
+def _head_w(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T  # (D, V)
+    return params["head"]["w"]
+
+
+def train_loss(
+    params: Params,
+    cfg: LMConfig,
+    batch: dict[str, jax.Array],
+    *,
+    q_chunk: int = 1024,
+    loss_chunk: int = 512,
+    aux_weight: float = 0.01,
+    mesh=None,
+) -> jax.Array:
+    """Causal LM loss; head+CE computed per T-chunk so (B,T,V) logits never
+    exist."""
+    inp = batch.get("tokens", batch.get("embeds"))
+    B = inp.shape[0]
+    T = inp.shape[1]
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    x = embed_or_pass(params, cfg, inp)
+    x, _, aux = backbone(params, cfg, x, positions, q_chunk=q_chunk, mesh=mesh)
+    x = _norm(cfg, params["final_norm"], x)
+    hw = _head_w(params, cfg)
+    labels = batch["labels"]
+
+    nchunk = max(1, T // loss_chunk)
+    assert T % nchunk == 0
+    xc = x.reshape(B, nchunk, T // nchunk, cfg.d_model)
+    lc = labels.reshape(B, nchunk, T // nchunk)
+
+    def chunk_ce(carry, inp2):
+        xb, lb = inp2  # (B, c, D), (B, c)
+        logits = (xb @ hw).astype(jnp.float32)  # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(
+        chunk_ce, jnp.zeros((), jnp.float32), (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0))
+    )
+    loss = total / (B * T)
+    return loss + aux_weight * aux
+
+
+# ------------------------------------------------------------------ caches
+class AttnCache(NamedTuple):
+    k: jax.Array  # (B, S, Hkv, hd) — S = max_len (global) or window (local ring)
+    v: jax.Array
+    pos: jax.Array  # (B, S) int32 stored absolute positions (-1 = empty)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Stacked (n_super-leading) cache pytree matching the scan."""
+    period = superblock_period(cfg)
+    n_super = cfg.n_layers // period
+    specs = slot_specs(cfg)
+    hd = cfg.hd
+
+    def one(spec: SlotSpec):
+        if spec.kind == "attn":
+            S_ = min(cfg.window, max_len) if (spec.attn_kind == "local" and cfg.window) else max_len
+            return AttnCache(
+                k=jnp.zeros((batch, S_, cfg.n_kv_heads, hd), dtype),
+                v=jnp.zeros((batch, S_, cfg.n_kv_heads, hd), dtype),
+                pos=jnp.full((batch, S_), -1, jnp.int32),
+            )
+        return S.ssm_cache_init(batch, cfg.d_model, cfg.ssm, dtype)
+
+    cache = {f"slot{i}": jax.tree.map(lambda x: jnp.broadcast_to(x, (n_super, *x.shape)), one(s),
+                                      is_leaf=lambda x: isinstance(x, jnp.ndarray))
+             for i, s in enumerate(specs)}
+    return cache
+
+
+def prefill(
+    params: Params,
+    cfg: LMConfig,
+    batch: dict[str, jax.Array],
+    *,
+    q_chunk: int = 1024,
+    max_len: Optional[int] = None,
+    mesh=None,
+):
+    """Full-sequence prefill.  Returns (last-token logits (B,V), cache).
+
+    ``max_len``: cache capacity for subsequent decode (default T + 1)."""
+    inp = batch.get("tokens", batch.get("embeds"))
+    B, T = inp.shape[0], inp.shape[1]
+    max_len = max_len or T + 1
+    assert max_len > T, "cache must have headroom for decode"
+    positions = batch.get(
+        "positions", jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    )
+    specs = slot_specs(cfg)
+    x = embed_or_pass(params, cfg, inp)
+
+    def block(x, bp):
+        caches = {}
+        for i, spec in enumerate(specs):
+            if spec.kind == "attn":
+                x, kv, _ = _slot_forward(cfg, spec, bp[f"slot{i}"], x, positions, q_chunk, mesh)
+                k, v = kv
+                if spec.attn_kind == "local" and cfg.window:
+                    S_ = min(cfg.window, max_len)
+                    keep = min(S_, T)
+                    # last `keep` tokens at ring slots pos % S_
+                    k_t, v_t = k[:, -keep:], v[:, -keep:]
+                    pos_np = jnp.arange(T - keep, T)
+                    kc = jnp.zeros((B, S_, *k.shape[2:]), k.dtype)
+                    vc = jnp.zeros_like(kc)
+                    pc = jnp.full((B, S_), -1, jnp.int32)
+                    slots = pos_np % S_
+                    kc = kc.at[:, slots].set(k_t)
+                    vc = vc.at[:, slots].set(v_t)
+                    pc = pc.at[:, slots].set(jnp.broadcast_to(pos_np[None], (B, keep)).astype(jnp.int32))
+                    caches[f"slot{i}"] = AttnCache(kc, vc, pc)
+                else:
+                    pad = max_len - T
+                    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    pc = jnp.pad(
+                        jnp.broadcast_to(jnp.arange(T)[None], (B, T)).astype(jnp.int32),
+                        ((0, 0), (0, pad)), constant_values=-1,
+                    )
+                    caches[f"slot{i}"] = AttnCache(kc, vc, pc)
+            else:
+                h = _norm(cfg, bp[f"slot{i}"]["norm1"], x)
+                y, sc = S.ssm_prefill(bp[f"slot{i}"]["mamba"], h, cfg.ssm, bf16_matmul=cfg.ssm_bf16)
+                x = x + y
+                caches[f"slot{i}"] = sc
+                x, _ = _apply_ffn(cfg, spec, bp[f"slot{i}"], x, mesh)
+        return x, caches
+
+    if cfg.remat:
+        block = jax.checkpoint(block)
+    x, cache = jax.lax.scan(block, x, params["blocks"])
+    x = _norm(cfg, params["final_norm"], x[:, -1:, :])
+    logits = (x[:, 0, :] @ _head_w(params, cfg)).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(
+    params: Params,
+    cfg: LMConfig,
+    cache,
+    tokens: jax.Array,  # (B, 1) int32 (or (B,1,D) embeds for stub frontends)
+    cache_len: jax.Array,  # scalar int32: number of tokens already in cache
+    *,
+    mesh=None,
+    seq_shard_axis: Optional[str] = None,  # long_500k: KV seq-sharded decode
+):
+    """serve_step: one new token for every sequence.  Returns (logits, cache)."""
+    specs = slot_specs(cfg)
+    B = tokens.shape[0]
+    pos = jnp.broadcast_to(cache_len[None, None], (B, 1))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(cache_len[None, None, None], (B, 1, 3))
+    x = embed_or_pass(params, cfg, tokens)
+    hd = cfg.hd
+
+    def block(x, inp):
+        bp, bc = inp
+        new_cache = {}
+        for i, spec in enumerate(specs):
+            p = bp[f"slot{i}"]
+            h = _norm(cfg, p["norm1"], x)
+            if spec.kind == "attn":
+                c: AttnCache = bc[f"slot{i}"]
+                q = L.linear(p["attn"]["wq"], h).reshape(B, 1, cfg.n_heads, hd)
+                k1 = L.linear(p["attn"]["wk"], h).reshape(B, 1, cfg.n_kv_heads, hd)
+                v1 = L.linear(p["attn"]["wv"], h).reshape(B, 1, cfg.n_kv_heads, hd)
+                q = apply_rope(q, pos, cfg.rope_theta, cfg.mrope_sections)
+                k1 = apply_rope(k1, pos, cfg.rope_theta, cfg.mrope_sections)
+                S_ = c.k.shape[1]
+                if spec.attn_kind == "local" and cfg.window:
+                    slot = cache_len % S_  # ring buffer
+                else:
+                    slot = jnp.minimum(cache_len, S_ - 1)
+                k_c = jax.lax.dynamic_update_slice_in_dim(c.k, k1.astype(c.k.dtype), slot, axis=1)
+                v_c = jax.lax.dynamic_update_slice_in_dim(c.v, v1.astype(c.v.dtype), slot, axis=1)
+                pos_c = jax.lax.dynamic_update_slice_in_dim(
+                    c.pos, jnp.broadcast_to(cache_len[None, None], (B, 1)).astype(jnp.int32), slot, axis=1
+                )
+                if seq_shard_axis is not None and spec.attn_kind != "local":
+                    o = seq_sharded_decode_attention(
+                        q, k_c, v_c, cache_len + 1, mesh=mesh,
+                        seq_axis=seq_shard_axis, kv_positions=pos_c,
+                    )
+                else:
+                    o = decode_attention(q, k_c, v_c, cache_len + 1, kv_positions=pos_c)
+                x = x + L.linear(p["attn"]["wo"], o.reshape(B, 1, cfg.n_heads * hd))
+                new_cache[f"slot{i}"] = AttnCache(k_c, v_c, pos_c)
+            else:
+                y, sc = S.ssm_decode_step(p["mamba"], h, bc[f"slot{i}"], cfg.ssm)
+                x = x + y
+                new_cache[f"slot{i}"] = sc
+            x, _ = _apply_ffn(cfg, spec, p, x, mesh)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(block, x, (params["blocks"], cache))
+    x = _norm(cfg, params["final_norm"], x)
+    logits = (x[:, 0, :] @ _head_w(params, cfg)).astype(jnp.float32)
+    return logits, new_cache

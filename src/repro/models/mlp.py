@@ -1,0 +1,34 @@
+"""MLP variants: SwiGLU (llama-family), GeGLU (gemma), plain GELU (starcoder,
+musicgen)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def mlp_init(key, d_model, d_ff, kind: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "gate": L.linear_init(k1, d_model, d_ff, dtype, bias=False),
+            "up": L.linear_init(k2, d_model, d_ff, dtype, bias=False),
+            "down": L.linear_init(k3, d_ff, d_model, dtype, bias=False),
+        }
+    if kind == "gelu":
+        return {
+            "up": L.linear_init(k1, d_model, d_ff, dtype),
+            "down": L.linear_init(k2, d_ff, d_model, dtype),
+        }
+    raise ValueError(kind)
+
+
+def mlp_apply(p, x, kind: str):
+    if kind == "swiglu":
+        return L.linear(p["down"], jax.nn.silu(L.linear(p["gate"], x)) * L.linear(p["up"], x))
+    if kind == "geglu":
+        return L.linear(p["down"], jax.nn.gelu(L.linear(p["gate"], x)) * L.linear(p["up"], x))
+    if kind == "gelu":
+        return L.linear(p["down"], jax.nn.gelu(L.linear(p["up"], x)))
+    raise ValueError(kind)

@@ -1,0 +1,185 @@
+"""Token-choice top-k MoE with capacity, via sort/gather dispatch.
+
+Dispatch is built from argsort + cumsum + take (no (tokens x E x C) one-hot
+matmul), so the compiled FLOPs seen by the roofline are the *expert* FLOPs,
+not dispatch artifacts.  Tokens over capacity are dropped (standard GShard
+semantics); gates of kept assignments are renormalized over kept experts.
+
+Sharding: expert weights are (E, d, ff) — ff sharded on "model" (TP inside
+every expert) and d FSDP-sharded on "data"; tokens stay batch-sharded, so
+no all-to-all is required (DESIGN.md §5).  An EP variant (experts on the
+mesh axis + all-to-all) is the §Perf hillclimb for the MoE cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoESpec
+
+from . import layers as L
+
+
+def moe_init(key, d_model: int, d_ff: int, spec: MoESpec, mlp_kind: str, dtype=jnp.float32):
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    E = spec.num_experts
+    glu = mlp_kind in ("swiglu", "geglu")
+    p = {
+        "router": L.linear_init(kr, d_model, E, jnp.float32, bias=False),
+        "up": {"w": L.lecun_init(k2, (E, d_model, d_ff), d_model, dtype)},
+        "down": {"w": L.lecun_init(k3, (E, d_ff, d_model), d_ff, dtype)},
+    }
+    if glu:
+        p["gate"] = {"w": L.lecun_init(k1, (E, d_model, d_ff), d_model, dtype)}
+    return p
+
+
+def moe_apply(p, x: jax.Array, spec: MoESpec, mlp_kind: str):
+    """x: (B, T, D) -> (B, T, D).  Pure function; capacity-dropped tokens
+    pass through (residual handles them)."""
+    B, T, D = x.shape
+    E, k = spec.num_experts, spec.top_k
+    S = B * T
+    C = max(1, int(S * k * spec.capacity_factor / E))
+    xf = x.reshape(S, D)
+
+    logits = L.linear(p["router"], xf.astype(jnp.float32))  # (S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (S, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # ---- dispatch plan (all integer ops) ----
+    flat_expert = expert_ids.reshape(-1)  # (S*k,) assignment -> expert
+    # position of each assignment within its expert, by stable order
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # (S*k, E)
+    pos_in_expert = jnp.take_along_axis(
+        jnp.cumsum(onehot, axis=0) - onehot, flat_expert[:, None], axis=1
+    ).squeeze(-1)  # (S*k,)
+    kept = pos_in_expert < C
+    slot = jnp.where(kept, flat_expert * C + pos_in_expert, E * C)  # dummy slot E*C
+
+    # token index per assignment
+    token_idx = jnp.repeat(jnp.arange(S), k)
+    # scatter token indices into slots (dummy row absorbs drops)
+    src = jnp.full((E * C + 1,), S, jnp.int32).at[slot].set(token_idx.astype(jnp.int32))
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], axis=0)
+    dispatched = x_pad[src[: E * C]].reshape(E, C, D)
+
+    # ---- expert compute (batched over E) ----
+    glu = mlp_kind in ("swiglu", "geglu")
+    act = jax.nn.silu if mlp_kind == "swiglu" else jax.nn.gelu
+    up = jnp.einsum("ecd,edf->ecf", dispatched, p["up"]["w"])
+    if glu:
+        g = jnp.einsum("ecd,edf->ecf", dispatched, p["gate"]["w"])
+        h = act(g) * up
+    else:
+        h = act(up)
+    y = jnp.einsum("ecf,efd->ecd", h, p["down"]["w"])  # (E, C, D)
+
+    # ---- combine ----
+    y_flat = jnp.concatenate([y.reshape(E * C, D), jnp.zeros((1, D), y.dtype)], axis=0)
+    per_assign = y_flat[slot]  # (S*k, D); drops -> zeros
+    w_assign = jnp.where(kept, gate_vals.reshape(-1), 0.0).astype(per_assign.dtype)
+    out = jnp.zeros((S, D), per_assign.dtype).at[token_idx].add(per_assign * w_assign[:, None])
+    return out.reshape(B, T, D).astype(x.dtype), _aux_loss(probs, flat_expert, E, k)
+
+
+def _aux_loss(probs: jax.Array, flat_expert: jax.Array, E: int, k: int):
+    """Switch-style load-balancing auxiliary loss."""
+    S = probs.shape[0]
+    frac_tokens = jnp.bincount(flat_expert, length=E) / (S * k)
+    frac_probs = probs.mean(0)
+    return E * jnp.sum(frac_tokens * frac_probs)
+
+
+# ----------------------------------------------------------- EP (all-to-all)
+def moe_apply_ep(
+    p,
+    x: jax.Array,
+    spec: MoESpec,
+    mlp_kind: str,
+    *,
+    mesh,
+    ep_axis: str = "data",
+    tp_axis: str = "model",
+    batch_axes: tuple = ("data",),
+):
+    """Expert-parallel MoE: experts sharded over ``ep_axis`` (one expert per
+    shard group), tokens routed with all-to-all — no per-layer all-gather of
+    expert weights (the ZeRO-3 cost the baseline pays).
+
+    Capacity is per (source-shard, expert): C_se = S_loc*k*cf/E; overflow
+    drops, residual passes through.  Requires E == mesh.shape[ep_axis].
+    This is the §Perf beyond-baseline variant for the MoE cells.
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    E, k = spec.num_experts, spec.top_k
+    n_ep = mesh.shape[ep_axis]
+    assert E == n_ep, f"EP requires num_experts({E}) == |{ep_axis}|({n_ep})"
+    glu = mlp_kind in ("swiglu", "geglu")
+    act = jax.nn.silu if mlp_kind == "swiglu" else jax.nn.gelu
+    pod = ("pod",) if "pod" in mesh.axis_names else ()
+
+    def body(x_l, router_w, gate_w, up_w, down_w):
+        B_l, T, D = x_l.shape
+        S = B_l * T
+        C = max(1, int(S * k * spec.capacity_factor / E))
+        xf = x_l.reshape(S, D)
+        logits = (xf.astype(jnp.float32) @ router_w).astype(jnp.float32)  # (S, E)
+        probs = jax.nn.softmax(logits, -1)
+        gate_vals, expert_ids = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+        flat_e = expert_ids.reshape(-1)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos = jnp.take_along_axis(jnp.cumsum(onehot, 0) - onehot, flat_e[:, None], 1)[:, 0]
+        kept = pos < C
+        slot = jnp.where(kept, flat_e * C + pos, E * C)
+        token_idx = jnp.repeat(jnp.arange(S), k)
+        src = jnp.full((E * C + 1,), S, jnp.int32).at[slot].set(token_idx.astype(jnp.int32))
+        x_pad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], 0)
+        send = x_pad[src[: E * C]].reshape(E, C, D)
+
+        # ---- all-to-all: dim0 (expert) -> source shard on the wire
+        recv = jax.lax.all_to_all(send, ep_axis, split_axis=0, concat_axis=0, tiled=True)
+        # recv: (E_src * C, D) tokens for MY expert, grouped by source shard
+        h_in = recv.reshape(E * C, D)
+
+        # ---- local expert (ff sharded over tp_axis -> partial down + psum)
+        up = h_in @ up_w[0]
+        if glu:
+            h = act(h_in @ gate_w[0]) * up
+        else:
+            h = act(up)
+        y = h @ down_w[0]
+        y = jax.lax.psum(y, tp_axis)
+
+        # ---- return a2a: back to (E, C, D) layout on the source shard
+        back = jax.lax.all_to_all(y.reshape(E, C, D), ep_axis, split_axis=0, concat_axis=0, tiled=False)
+        y_flat = jnp.concatenate([back.reshape(E * C, D), jnp.zeros((1, D), y.dtype)], 0)
+        per_assign = y_flat[slot]
+        w_assign = jnp.where(kept, gate_vals.reshape(-1), 0.0).astype(per_assign.dtype)
+        out = jnp.zeros((S, D), per_assign.dtype).at[token_idx].add(per_assign * w_assign[:, None])
+        aux = _aux_loss(probs, flat_e, E, k)
+        # aux is per-shard; average over the mesh for a global scalar
+        aux = jax.lax.pmean(aux, ep_axis)
+        if pod:
+            aux = jax.lax.pmean(aux, "pod")
+        aux = jax.lax.pmean(aux, tp_axis)
+        return out.reshape(B_l, T, D).astype(x_l.dtype), aux
+
+    bspec = P((*pod, ep_axis), None, None)
+    wspec_r = P(None, None)
+    wspec = P(ep_axis, None, tp_axis)
+    wspec_d = P(ep_axis, tp_axis, None)
+    gate_w = p["gate"]["w"] if glu else p["up"]["w"]  # placeholder when non-glu
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(bspec, wspec_r, wspec, wspec, wspec_d),
+        out_specs=(bspec, P()),
+        check_vma=False,
+    )
+    return fn(x, p["router"]["w"], gate_w, p["up"]["w"], p["down"]["w"])

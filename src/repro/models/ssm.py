@@ -1,0 +1,239 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD: within a chunk the recurrence is evaluated as a decay-masked
+attention-like contraction (MXU-friendly); across chunks a lax.scan carries
+the (heads, head_dim, d_state) state.  A sequential O(T) reference
+(``ssd_ref``) backs the tests.
+
+Projections are kept *split* (z, x, B, C, dt and three depthwise convs)
+rather than fused, so tensor-parallel sharding is clean: z/x/out on the
+"model" axis (d_inner), B/C/dt replicated (they are head-shared / tiny).
+
+Decode carries (conv_state, ssm_state) and costs O(1) per token — this is
+what makes mamba2/jamba the long_500k-eligible archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMSpec
+
+from . import layers as L
+
+
+def ssm_init(key, d_model: int, spec: SSMSpec, dtype=jnp.float32):
+    d_inner = spec.expand * d_model
+    n_heads = d_inner // spec.head_dim
+    N = spec.d_state
+    ks = jax.random.split(key, 9)
+    return {
+        "in_z": L.linear_init(ks[0], d_model, d_inner, dtype, bias=False),
+        "in_x": L.linear_init(ks[1], d_model, d_inner, dtype, bias=False),
+        "in_B": L.linear_init(ks[2], d_model, N, dtype, bias=False),
+        "in_C": L.linear_init(ks[3], d_model, N, dtype, bias=False),
+        "in_dt": L.linear_init(ks[4], d_model, n_heads, dtype, bias=False),
+        "conv_x": {"w": 0.1 * jax.random.normal(ks[5], (spec.d_conv, d_inner), dtype),
+                   "b": jnp.zeros((d_inner,), dtype)},
+        "conv_B": {"w": 0.1 * jax.random.normal(ks[6], (spec.d_conv, N), dtype),
+                   "b": jnp.zeros((N,), dtype)},
+        "conv_C": {"w": 0.1 * jax.random.normal(ks[7], (spec.d_conv, N), dtype),
+                   "b": jnp.zeros((N,), dtype)},
+        "A_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(0.01)) * jnp.ones((n_heads,), jnp.float32),
+        "norm": L.rmsnorm_init(d_inner, dtype),
+        "out_proj": L.linear_init(ks[8], d_inner, d_model, dtype, bias=False),
+    }
+
+
+def _causal_conv(x, conv, init_state=None):
+    """Depthwise causal conv1d + SiLU.  x (B,T,C).  Returns (y, tail)."""
+    w, b = conv["w"], conv["b"]
+    K = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return jax.nn.silu(y + b), xp[:, -(K - 1) :, :]
+
+
+def ssd_chunked(x, dt, A, Bmat, Cmat, chunk: int, init_state=None, *, bf16_matmul=False):
+    """SSD over chunks.
+
+    x (B,T,H,P), dt (B,T,H) >=0, A (H,) negative, Bmat/Cmat (B,T,N).
+    Returns (y (B,T,H,P), final_state (B,H,P,N)).
+
+    ``bf16_matmul``: run the heavy einsums with bf16 operands (full MXU
+    rate) and fp32 accumulation; decay/cumsum math stays fp32.
+    """
+    md = jnp.bfloat16 if bf16_matmul else jnp.float32
+    pe = dict(preferred_element_type=jnp.float32)
+    Bb, T, H, P = x.shape
+    N = Bmat.shape[-1]
+    nc = T // chunk
+    assert T % chunk == 0, (T, chunk)
+    xc = x.reshape(Bb, nc, chunk, H, P)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    Bc = Bmat.reshape(Bb, nc, chunk, N)
+    Cc = Cmat.reshape(Bb, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]  # (B,nc,l,H) log-decay per step
+    cum = jnp.cumsum(dA, axis=2)  # inclusive cumsum over chunk
+
+    # intra-chunk: Y[i] += sum_{j<=i} C_i . B_j * exp(cum_i - cum_j) * dt_j * x_j
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,i,j,H)
+    idx = jnp.arange(chunk)
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    gate = jnp.where(causal, decay, 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc.astype(md), Bc.astype(md), **pe)  # (B,nc,i,j)
+    m = cb[..., None] * gate * dtc[:, :, None, :, :]  # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m.astype(md), xc.astype(md), **pe)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j  (B,nc,H,P,N)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,l,H)
+    s = jnp.einsum("bclh,bcln,bclhp->bchpn", (decay_to_end * dtc).astype(md),
+                   Bc.astype(md), xc.astype(md), **pe)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    def scan_fn(h, inp):
+        s_c, g_c = inp  # (B,H,P,N), (B,H)
+        h_new = h * g_c[:, :, None, None] + s_c
+        return h_new, h  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32) if init_state is None else init_state
+    s_sw = jnp.moveaxis(s, 1, 0).astype(jnp.float32)
+    g_sw = jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)
+    h_final, h_in = jax.lax.scan(scan_fn, h0, (s_sw, g_sw))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nc,H,P,N) state entering each chunk
+
+    # inter-chunk: Y[i] += exp(cum_i) * C_i . h_in
+    y_inter = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp", Cc.astype(md), h_in.astype(md),
+        jnp.exp(cum).astype(md), **pe,
+    )
+    y = (y_intra + y_inter).reshape(Bb, T, H, P)
+    return y, h_final
+
+
+def ssd_ref(x, dt, A, Bmat, Cmat):
+    """Sequential O(T) oracle: h_t = exp(dt A) h_{t-1} + dt B_t x_t;
+    y_t = C_t . h_t."""
+    Bb, T, H, P = x.shape
+    N = Bmat.shape[-1]
+
+    def step(h, t):
+        a = jnp.exp(dt[:, t] * A[None, :])  # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, t], Bmat[:, t], x[:, t])
+        h = h * a[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cmat[:, t], h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(T))
+    return jnp.moveaxis(ys, 0, 1)  # (B,T,H,P)
+
+
+def _project(p, x, spec: SSMSpec, d_model: int):
+    d_inner = spec.expand * d_model
+    H = d_inner // spec.head_dim
+    z = L.linear(p["in_z"], x)
+    xs = L.linear(p["in_x"], x)
+    Bm = L.linear(p["in_B"], x)
+    Cm = L.linear(p["in_C"], x)
+    dt = jax.nn.softplus(L.linear(p["in_dt"], x).astype(jnp.float32) + p["dt_bias"])
+    return z, xs, Bm, Cm, dt, d_inner, H
+
+
+def ssm_apply(p, x, spec: SSMSpec, *, chunk=None, bf16_matmul=False):
+    """Full Mamba2 block (training).  x (B,T,D) -> (B,T,D)."""
+    y, _ = ssm_prefill(p, x, spec, chunk=chunk, bf16_matmul=bf16_matmul)
+    return y
+
+
+def ssm_prefill(p, x, spec: SSMSpec, *, chunk=None, bf16_matmul=False):
+    """Returns (y (B,T,D), SSMCache) — cache usable for subsequent decode."""
+    Bb, T, D = x.shape
+    z, xs, Bm, Cm, dt, d_inner, H = _project(p, x, spec, D)
+    xs, tail_x = _causal_conv(xs, p["conv_x"])
+    Bm, tail_B = _causal_conv(Bm, p["conv_B"])
+    Cm, tail_C = _causal_conv(Cm, p["conv_C"])
+    xh = xs.reshape(Bb, T, H, spec.head_dim)
+    A = -jnp.exp(p["A_log"])
+    ck = chunk or min(spec.chunk, T)
+    Tp = -(-T // ck) * ck
+    if Tp != T:
+        # pad with dt=0 steps: decay exp(0)=1, update 0 -> state unaffected
+        padt = ((0, 0), (0, Tp - T))
+        xh_p = jnp.pad(xh, padt + ((0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, padt + ((0, 0),))
+        Bm_p = jnp.pad(Bm, padt + ((0, 0),))
+        Cm_p = jnp.pad(Cm, padt + ((0, 0),))
+    else:
+        xh_p, dt_p, Bm_p, Cm_p = xh, dt, Bm, Cm
+    cd = jnp.bfloat16 if bf16_matmul else jnp.float32
+    y, h_fin = ssd_chunked(
+        xh_p.astype(cd), dt_p, A, Bm_p.astype(cd), Cm_p.astype(cd), ck,
+        bf16_matmul=bf16_matmul,
+    )
+    y = y[:, :T]
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bb, T, d_inner).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = L.linear(p["out_proj"], y)
+    cache = SSMCache(
+        conv_x=tail_x, conv_B=tail_B, conv_C=tail_C, state=h_fin
+    )
+    return out, cache
+
+
+class SSMCache(NamedTuple):
+    conv_x: jax.Array  # (B, d_conv-1, d_inner)
+    conv_B: jax.Array  # (B, d_conv-1, N)
+    conv_C: jax.Array  # (B, d_conv-1, N)
+    state: jax.Array  # (B, H, P, N) fp32
+
+
+def ssm_cache_init(batch, d_model, spec: SSMSpec, dtype=jnp.float32) -> SSMCache:
+    d_inner = spec.expand * d_model
+    H = d_inner // spec.head_dim
+    K = spec.d_conv
+    return SSMCache(
+        conv_x=jnp.zeros((batch, K - 1, d_inner), dtype),
+        conv_B=jnp.zeros((batch, K - 1, spec.d_state), dtype),
+        conv_C=jnp.zeros((batch, K - 1, spec.d_state), dtype),
+        state=jnp.zeros((batch, H, spec.head_dim, spec.d_state), jnp.float32),
+    )
+
+
+def _conv_step(x1, conv, state):
+    """One-token depthwise conv.  x1 (B,1,C), state (B,K-1,C)."""
+    w, b = conv["w"], conv["b"]
+    seq = jnp.concatenate([state.astype(x1.dtype), x1], axis=1)  # (B,K,C)
+    y = jax.nn.silu(jnp.einsum("bkc,kc->bc", seq, w) + b)
+    return y, seq[:, 1:]
+
+
+def ssm_decode_step(p, x1, cache: SSMCache, spec: SSMSpec):
+    """One-token decode.  x1 (B,1,D) -> (y (B,1,D), new cache).  O(1)."""
+    Bb, _, D = x1.shape
+    z, xs, Bm, Cm, dt, d_inner, H = _project(p, x1, spec, D)
+    dt = dt[:, 0]  # (B,H)
+    xs, new_cx = _conv_step(xs, p["conv_x"], cache.conv_x)
+    Bm, new_cB = _conv_step(Bm, p["conv_B"], cache.conv_B)
+    Cm, new_cC = _conv_step(Cm, p["conv_C"], cache.conv_C)
+    xh = xs.reshape(Bb, H, spec.head_dim).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None, :])  # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh)
+    state = cache.state * a[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(Bb, 1, d_inner).astype(x1.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return L.linear(p["out_proj"], y), SSMCache(new_cx, new_cB, new_cC, state)

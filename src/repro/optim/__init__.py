@@ -1,0 +1,1 @@
+from .adam import adamw_init, adamw_update, clip_by_global_norm, OptState

@@ -1,0 +1,71 @@
+"""AdamW from scratch (no optax in this environment).
+
+State is a pytree mirroring params; with FSDP sharding rules the m/v moments
+inherit the parameter sharding, giving ZeRO-style sharded optimizer state
+for free under pjit.  Supports mixed precision: params may be bf16 while
+moments are always fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any  # pytree like params (fp32)
+    v: Any
+
+
+def adamw_init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), zeros, jax.tree.map(jnp.copy, zeros))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(
+    params,
+    grads,
+    state: OptState,
+    *,
+    lr: float = 2e-4,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: float = 0.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    if max_grad_norm > 0:
+        grads, gn = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        gn = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1, bc2 = 1.0 - b1**t, 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        if weight_decay:
+            upd = upd + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), m2, v2
+
+    flat = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step, new_m, new_v), {"grad_norm": gn}

@@ -1,0 +1,1 @@
+from .sharding import MeshAxes, lm_param_specs, lm_batch_specs, cache_specs, opt_specs

@@ -1,0 +1,229 @@
+"""Sharding rules: DP/FSDP on ("pod","data"), TP on "model", SP for long KV.
+
+The rules are divisibility-aware: a dim is sharded on an axis only when it
+divides evenly, otherwise it degrades to replication (recorded, so the
+dry-run artifact shows exactly which dims fell back — e.g. qwen2-vl's 12
+heads and llama4's 40 heads are not 16-divisible, so their attention runs
+TP-replicated and FSDP carries the memory, per DESIGN.md §5).
+
+Weight 2D sharding = Megatron TP on the "feature" dim + ZeRO-3-style FSDP on
+the other dim: XLA/GSPMD inserts the per-layer all-gathers automatically and
+the optimizer state (which mirrors param specs) stays fully sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LMConfig, ShapeConfig
+from repro.models import lm as LM
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    batch: tuple[str, ...]  # activation batch axes, e.g. ("pod","data")
+    fsdp: tuple[str, ...]  # weight FSDP axes (usually == batch)
+    tp: str = "model"
+
+    @staticmethod
+    def for_mesh(mesh: Mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        batch = tuple(n for n in names if n in ("pod", "data"))
+        return MeshAxes(batch=batch, fsdp=batch)
+
+
+def _size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+class SpecBuilder:
+    """Divisibility-aware spec construction with a fallback log."""
+
+    def __init__(self, mesh: Mesh, axes: MeshAxes):
+        self.mesh, self.axes = mesh, axes
+        self.fallbacks: list[str] = []
+
+    def dim(self, name: str, size: int, axis) -> Optional[Any]:
+        """axis: str | tuple | None -> axis if divisible else None."""
+        if axis is None:
+            return None
+        n = _size(self.mesh, axis)
+        if size % n == 0:
+            return axis
+        self.fallbacks.append(f"{name}: {size} % {axis}({n}) != 0 -> replicated")
+        return None
+
+
+def lm_param_specs(cfg: LMConfig, mesh: Mesh, axes: Optional[MeshAxes] = None):
+    """PartitionSpec pytree matching lm_init(cfg) exactly.
+
+    Returns (specs, fallback_log)."""
+    axes = axes or MeshAxes.for_mesh(mesh)
+    b = SpecBuilder(mesh, axes)
+    tp, fsdp = axes.tp, axes.fsdp
+    D, V = cfg.d_model, cfg.vocab
+    hd = cfg.hd
+
+    def lin(prefix, d_in, d_out, in_ax, out_ax, bias_key=None, stacked=True):
+        lead = (None,) if stacked else ()
+        spec = {"w": P(*lead, b.dim(f"{prefix}.in", d_in, in_ax), b.dim(f"{prefix}.out", d_out, out_ax))}
+        if bias_key:
+            spec["b"] = P(*lead, b.dim(f"{prefix}.b", d_out, out_ax))
+        return spec
+
+    def norm_spec(stacked=True):
+        lead = (None,) if stacked else ()
+        base = {"scale": P(*lead, None)}
+        if cfg.norm == "layernorm":
+            base["bias"] = P(*lead, None)
+        return base
+
+    specs: dict[str, Any] = {
+        "embed": {"table": P(b.dim("embed.V", V, tp), None)},
+        "final_norm": norm_spec(stacked=False),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = {"w": P(b.dim("head.D", D, fsdp), b.dim("head.V", V, tp))}
+
+    period = LM.superblock_period(cfg)
+    slot_sp = LM.slot_specs(cfg)
+    blocks: dict[str, Any] = {}
+    for i, sp in enumerate(slot_sp):
+        s: dict[str, Any] = {"norm1": norm_spec()}
+        if sp.kind == "attn":
+            h_ax = tp if cfg.n_heads % _size(mesh, tp) == 0 else None
+            kv_ax = tp if cfg.n_kv_heads % _size(mesh, tp) == 0 else None
+            if h_ax is None:
+                b.fallbacks.append(f"slot{i}.attn: {cfg.n_heads} heads !% tp -> replicated attn")
+            s["attn"] = {
+                "wq": lin("wq", D, cfg.n_heads * hd, fsdp, h_ax),
+                "wk": lin("wk", D, cfg.n_kv_heads * hd, fsdp, kv_ax),
+                "wv": lin("wv", D, cfg.n_kv_heads * hd, fsdp, kv_ax),
+                "wo": lin("wo", cfg.n_heads * hd, D, h_ax, fsdp),
+            }
+        else:
+            ssm = cfg.ssm
+            d_inner = ssm.expand * D
+            H = d_inner // ssm.head_dim
+            s["mamba"] = {
+                "in_z": lin("in_z", D, d_inner, fsdp, tp),
+                "in_x": lin("in_x", D, d_inner, fsdp, tp),
+                "in_B": lin("in_B", D, ssm.d_state, fsdp, None),
+                "in_C": lin("in_C", D, ssm.d_state, fsdp, None),
+                "in_dt": lin("in_dt", D, H, fsdp, tp if H % _size(mesh, tp) == 0 else None),
+                "conv_x": {"w": P(None, None, b.dim("conv_x", d_inner, tp)),
+                           "b": P(None, b.dim("conv_xb", d_inner, tp))},
+                "conv_B": {"w": P(None, None, None), "b": P(None, None)},
+                "conv_C": {"w": P(None, None, None), "b": P(None, None)},
+                "A_log": P(None, b.dim("A_log", H, tp)),
+                "D": P(None, b.dim("ssm.D", H, tp)),
+                "dt_bias": P(None, b.dim("dt_bias", H, tp)),
+                "norm": {"scale": P(None, b.dim("ssm.norm", d_inner, tp))},
+                "out_proj": lin("out_proj", d_inner, D, tp, fsdp),
+            }
+        if sp.ffn == "mlp":
+            s["norm2"] = norm_spec()
+            glu = cfg.mlp in ("swiglu", "geglu")
+            mspec = {
+                "up": lin("mlp.up", D, cfg.d_ff, fsdp, tp, bias_key=not glu),
+                "down": lin("mlp.down", cfg.d_ff, D, tp, fsdp, bias_key=not glu),
+            }
+            if glu:
+                mspec["gate"] = lin("mlp.gate", D, cfg.d_ff, fsdp, tp)
+            s["mlp"] = mspec
+        elif sp.ffn == "moe":
+            s["norm2"] = norm_spec()
+            E = cfg.moe.num_experts
+            if cfg.moe_ep:
+                # EP: one expert (group) per data shard; FSDP moves to the
+                # expert dim, so no per-layer weight all-gather is needed
+                e_ax = "data" if E % mesh.shape["data"] == 0 else None
+                if e_ax is None:
+                    b.fallbacks.append(f"moe_ep: E={E} !% data -> replicated experts")
+            else:
+                e_ax = None  # experts replicated (FSDP handles storage); EP variant in §Perf
+            d_ax = None if cfg.moe_ep else fsdp
+            r_ax = None if cfg.moe_ep else fsdp
+            ms: dict[str, Any] = {
+                "router": {"w": P(None, b.dim("router.D", D, r_ax), None)},
+                "up": {"w": P(None, e_ax, b.dim("moe.up.D", D, d_ax), b.dim("moe.up.ff", cfg.d_ff, tp))},
+                "down": {"w": P(None, e_ax, b.dim("moe.dn.ff", cfg.d_ff, tp), b.dim("moe.dn.D", D, d_ax))},
+            }
+            if cfg.mlp in ("swiglu", "geglu"):
+                ms["gate"] = {"w": P(None, e_ax, b.dim("moe.gt.D", D, d_ax), b.dim("moe.gt.ff", cfg.d_ff, tp))}
+            s["moe"] = ms
+        blocks[f"slot{i}"] = s
+    specs["blocks"] = blocks
+    return specs, b.fallbacks
+
+
+def lm_batch_specs(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh, axes: Optional[MeshAxes] = None):
+    """Specs for the input batch dict."""
+    axes = axes or MeshAxes.for_mesh(mesh)
+    nb = _size(mesh, axes.batch)
+    batch_ax = axes.batch if shape.global_batch % nb == 0 else None
+    sp: dict[str, Any] = {}
+    if cfg.frontend == "stub_embeds":
+        sp["embeds"] = P(batch_ax, None, None)
+    else:
+        sp["tokens"] = P(batch_ax, None)
+    if shape.mode == "train":
+        sp["labels"] = P(batch_ax, None)
+    if cfg.mrope_sections is not None:
+        sp["positions"] = P(batch_ax, None, None)
+    return sp
+
+
+def cache_specs(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh, axes: Optional[MeshAxes] = None,
+                seq_shard: bool = False):
+    """Specs for the decode cache pytree (matches lm.init_cache layout)."""
+    axes = axes or MeshAxes.for_mesh(mesh)
+    nb = _size(mesh, axes.batch)
+    batch_ax = axes.batch if shape.global_batch % nb == 0 else None
+    tp = axes.tp
+    kv_ax = tp if cfg.n_kv_heads and cfg.n_kv_heads % _size(mesh, tp) == 0 else None
+    specs = {}
+    for i, sp in enumerate(LM.slot_specs(cfg)):
+        if sp.kind == "attn":
+            local = sp.attn_kind == "local" and cfg.window
+            seq_ax = "data" if (seq_shard and not local) else None
+            specs[f"slot{i}"] = LM.AttnCache(
+                k=P(None, batch_ax, seq_ax, kv_ax, None),
+                v=P(None, batch_ax, seq_ax, kv_ax, None),
+                pos=P(None, batch_ax, seq_ax),
+            )
+        else:
+            d_inner = cfg.ssm.expand * cfg.d_model
+            H = d_inner // cfg.ssm.head_dim
+            h_ax = tp if H % _size(mesh, tp) == 0 else None
+            di_ax = tp if d_inner % _size(mesh, tp) == 0 else None
+            from repro.models.ssm import SSMCache
+
+            specs[f"slot{i}"] = SSMCache(
+                conv_x=P(None, batch_ax, None, di_ax),
+                conv_B=P(None, batch_ax, None, None),
+                conv_C=P(None, batch_ax, None, None),
+                state=P(None, batch_ax, h_ax, None, None),
+            )
+    return specs
+
+
+def opt_specs(param_specs):
+    """Adam m/v mirror the parameter specs (ZeRO-sharded moments)."""
+    from repro.optim.adam import OptState
+
+    return OptState(step=P(), m=param_specs, v=param_specs)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,127 @@
+"""Continuous-batching serving engine (slot-based, vLLM-style scheduling
+adapted to fixed-shape JAX: a fixed pool of B slots over a shared max_len
+cache; arrivals fill free slots via per-slot prefill-into-cache, finished
+sequences free their slot).
+
+Fixed shapes keep everything jit-cacheable: one prefill_one signature and
+one decode signature, reused forever — no recompilation as traffic varies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import lm as LM
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: list[int]  # prompt
+    max_new: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Greedy-decoding engine with B slots and a shared ring of caches.
+
+    The cache is allocated once at (B, max_len); per-slot prefill writes a
+    single slot's rows via dynamic_update_slice on the batch dim, so admitting
+    a request never reshapes or re-jits anything.
+    """
+
+    def __init__(self, params, cfg: LMConfig, *, slots: int = 4, max_len: int = 256,
+                 prompt_len: int = 32):
+        self.params, self.cfg = params, cfg
+        self.B, self.max_len, self.prompt_len = slots, max_len, prompt_len
+        self.cache = LM.init_cache(cfg, slots, max_len, jnp.float32)
+        self.pos = [0] * slots  # tokens in each slot's cache
+        self.active: list[Optional[Request]] = [None] * slots
+        self.last_tok = jnp.zeros((slots, 1), jnp.int32)
+
+        cfg_pad = cfg
+
+        @jax.jit
+        def prefill_one(params, tokens):  # tokens (1, prompt_len)
+            return LM.prefill(params, cfg_pad, {"tokens": tokens}, q_chunk=64,
+                              max_len=max_len)
+
+        @jax.jit
+        def decode(params, cache, toks, lens):
+            # per-slot cache_len: decode each slot at its own position.
+            # Our decode_step takes a scalar cache_len; serve with per-slot
+            # positions via vmap over the batch dim.
+            def one(cache_b, tok_b, len_b):
+                # cache_b leaves are (n_super, ...); reinsert batch at axis 1
+                c1 = jax.tree.map(lambda x: x[:, None], cache_b)
+                lg, c2 = LM.decode_step(params, cfg_pad, c1, tok_b[None], len_b)
+                return jax.tree.map(lambda x: x[:, 0], c2), lg[0]
+
+            # move the slot axis to the front of every cache leaf (it is
+            # axis 1: leaves are (n_super, B, ...))
+            cache_sw = jax.tree.map(lambda x: jnp.moveaxis(x, 1, 0), cache)
+            new_sw, lg = jax.vmap(one, in_axes=(0, 0, 0))(cache_sw, toks, lens)
+            new_cache = jax.tree.map(lambda x: jnp.moveaxis(x, 0, 1), new_sw)
+            return lg, new_cache
+
+        self._prefill_one = prefill_one
+        self._decode = decode
+
+    # ------------------------------------------------------------- admission
+    def try_admit(self, req: Request) -> bool:
+        for s in range(self.B):
+            if self.active[s] is None:
+                toks = (req.tokens + [0] * self.prompt_len)[: self.prompt_len]
+                logits, cache1 = self._prefill_one(
+                    self.params, jnp.asarray([toks], jnp.int32)
+                )
+                # copy slot s rows from the fresh single-row cache
+                def put(big, small):
+                    return jax.lax.dynamic_update_slice_in_dim(big, small, s, axis=1)
+
+                self.cache = jax.tree.map(put, self.cache, cache1)
+                self.pos[s] = min(len(req.tokens), self.prompt_len)
+                self.active[s] = req
+                first = int(jnp.argmax(logits[0]))
+                req.out.append(first)  # the prefill-step prediction
+                self.last_tok = self.last_tok.at[s, 0].set(first)
+                return True
+        return False
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> list[Request]:
+        """One decode step for every active slot; returns finished requests."""
+        if not any(a is not None for a in self.active):
+            return []
+        lens = jnp.asarray([self.pos[s] for s in range(self.B)], jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, self.last_tok, lens)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        finished = []
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[s])
+            req.out.append(tok)
+            self.pos[s] += 1
+            self.last_tok = self.last_tok.at[s, 0].set(tok)
+            if len(req.out) >= req.max_new or self.pos[s] >= self.max_len - 1:
+                req.done = True
+                finished.append(req)
+                self.active[s] = None
+                self.pos[s] = 0
+        return finished
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Drive a workload to completion (simple arrival loop)."""
+        pending = list(requests)
+        done: list[Request] = []
+        while pending or any(a is not None for a in self.active):
+            while pending and self.try_admit(pending[0]):
+                pending.pop(0)
+            done.extend(self.step())
+        return done

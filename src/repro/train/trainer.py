@@ -1,0 +1,158 @@
+"""Training loops: GAN (the paper's workload) and LM (assigned archs).
+
+Fault-tolerance contract:
+  * every N steps the full (params, opt_state, step) tree is checkpointed
+    atomically;
+  * a step failure (device error, preemption, injected fault) triggers
+    restore-from-latest and replay — the data pipeline is a pure function of
+    (seed, step) so replay is exact;
+  * async dispatch: the loop never blocks on metrics except at log
+    boundaries (straggler mitigation on real clusters: the host queue stays
+    full; a watchdog deadline marks a step lost instead of hanging).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import data as D
+from repro.configs.base import GANConfig
+from repro.models import gan as G
+from repro.optim import adamw_init, adamw_update
+from repro.train import checkpoint as C
+
+
+@dataclasses.dataclass
+class TrainHooks:
+    """Injection points used by tests (fault injection) and launchers."""
+
+    on_step: Optional[Callable[[int, dict], None]] = None
+    inject_fault_at: Optional[int] = None  # raise once at this step (test hook)
+    step_deadline_s: float = 0.0  # 0 = no watchdog
+
+
+# --------------------------------------------------------------- GAN loop
+def gan_losses(gp, dp, cfg: GANConfig, z, real, *, training=True):
+    fake, g_stats = G.generator_apply(gp, cfg, z, training=training)
+    d_fake, _ = G.discriminator_apply(dp, cfg, fake, training=training)
+    d_real, d_stats = G.discriminator_apply(dp, cfg, real, training=training)
+    bce = lambda logit, target: jnp.mean(
+        jnp.maximum(logit, 0) - logit * target + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    )
+    g_loss = bce(d_fake, jnp.ones_like(d_fake))  # non-saturating
+    d_loss = 0.5 * (bce(d_real, jnp.ones_like(d_real)) + bce(d_fake, jnp.zeros_like(d_fake)))
+    return g_loss, d_loss, (g_stats, d_stats, fake)
+
+
+def make_gan_step(cfg: GANConfig, lr=2e-4, b1=0.5):
+    """Returns jit'd alternating G/D update."""
+
+    def step(gp, dp, g_opt, d_opt, z, real):
+        def g_obj(gp_):
+            gl, _, (g_stats, _, _) = gan_losses(gp_, dp, cfg, z, real)
+            return gl, g_stats
+
+        (g_loss, g_stats), g_grads = jax.value_and_grad(g_obj, has_aux=True)(gp)
+        gp2, g_opt2, gm = adamw_update(gp, g_grads, g_opt, lr=lr, b1=b1)
+        gp2 = G.merge_bn_stats(gp2, g_stats)
+
+        def d_obj(dp_):
+            _, dl, (_, d_stats, _) = gan_losses(gp2, dp_, cfg, z, real)
+            return dl, d_stats
+
+        (d_loss, d_stats), d_grads = jax.value_and_grad(d_obj, has_aux=True)(dp)
+        dp2, d_opt2, dm = adamw_update(dp, d_grads, d_opt, lr=lr, b1=b1)
+        dp2 = G.merge_bn_stats(dp2, d_stats)
+        metrics = {
+            "g_loss": g_loss,
+            "d_loss": d_loss,
+            "g_grad_norm": gm["grad_norm"],
+            "d_grad_norm": dm["grad_norm"],
+        }
+        return gp2, dp2, g_opt2, d_opt2, metrics
+
+    return jax.jit(step)
+
+
+def train_gan(
+    cfg: GANConfig,
+    *,
+    steps: int = 200,
+    batch: int = 16,
+    seed: int = 0,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 50,
+    log_every: int = 10,
+    hooks: TrainHooks = TrainHooks(),
+    dtype=jnp.float32,
+) -> dict:
+    """End-to-end GAN training on synthetic data; restartable."""
+    k = jax.random.PRNGKey(seed)
+    kg, kd = jax.random.split(k)
+    gp = G.generator_init(kg, cfg, dtype)
+    dp = G.discriminator_init(kd, cfg, dtype)
+    g_opt, d_opt = adamw_init(gp), adamw_init(dp)
+    start = 0
+    if ckpt_dir:
+        last = C.latest_step(ckpt_dir)
+        if last is not None:
+            tree = C.restore_checkpoint(
+                ckpt_dir, last, {"gp": gp, "dp": dp, "g_opt": g_opt, "d_opt": d_opt}
+            )
+            gp, dp, g_opt, d_opt = tree["gp"], tree["dp"], tree["g_opt"], tree["d_opt"]
+            start = last
+
+    step_fn = make_gan_step(cfg)
+    metrics_hist = []
+    faulted = False
+    s = start
+    while s < steps:
+        t0 = time.monotonic()
+        try:
+            if hooks.inject_fault_at == s and not faulted:
+                faulted = True
+                raise RuntimeError(f"injected fault at step {s}")
+            z = D.latent_batch(seed, s, batch, cfg.z_dim) if cfg.z_dim else D.gan_batch(
+                seed, 1_000_000 + s, batch, cfg.img_hw
+            )
+            real = D.gan_batch(seed, s, batch, cfg.img_hw)
+            gp, dp, g_opt, d_opt, m = step_fn(gp, dp, g_opt, d_opt, z, real)
+            if hooks.step_deadline_s and time.monotonic() - t0 > hooks.step_deadline_s:
+                raise TimeoutError(f"step {s} exceeded deadline (straggler)")
+        except (RuntimeError, TimeoutError) as e:
+            # fault path: restore last checkpoint and replay
+            if not ckpt_dir:
+                raise
+            last = C.latest_step(ckpt_dir)
+            if last is None:
+                # no checkpoint yet: restart from init
+                kg, kd = jax.random.split(jax.random.PRNGKey(seed))
+                gp, dp = G.generator_init(kg, cfg, dtype), G.discriminator_init(kd, cfg, dtype)
+                g_opt, d_opt = adamw_init(gp), adamw_init(dp)
+                s = 0
+            else:
+                tree = C.restore_checkpoint(
+                    ckpt_dir, last, {"gp": gp, "dp": dp, "g_opt": g_opt, "d_opt": d_opt}
+                )
+                gp, dp, g_opt, d_opt = tree["gp"], tree["dp"], tree["g_opt"], tree["d_opt"]
+                s = last
+            continue
+        if (s + 1) % log_every == 0 or s + 1 == steps:
+            host_m = {k2: float(v) for k2, v in m.items()}
+            metrics_hist.append({"step": s + 1, **host_m})
+            if hooks.on_step:
+                hooks.on_step(s + 1, host_m)
+        if ckpt_dir and (s + 1) % ckpt_every == 0:
+            C.save_checkpoint(
+                ckpt_dir, s + 1, {"gp": gp, "dp": dp, "g_opt": g_opt, "d_opt": d_opt}
+            )
+        s += 1
+    return {
+        "params": {"gp": gp, "dp": dp},
+        "metrics": metrics_hist,
+        "final_step": s,
+    }

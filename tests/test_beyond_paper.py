@@ -1,0 +1,71 @@
+"""Beyond-paper extensions: F(4x4, 3x3) Winograd deconv (the paper fixes
+F(2x2, 3x3)); registry/shape-rule integrity; numerics knobs."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import LMS, REGISTRY, get_config, list_archs
+from repro.configs.base import SHAPES, shape_applicable
+from repro.core import DeconvDims, plan, standard_deconv2d, winograd_deconv2d
+
+
+# ----------------------------------------------------- F(4,3) deconv (new)
+@pytest.mark.parametrize("dims", [DeconvDims(5, 2, 2, 1), DeconvDims(4, 2, 1, 0)])
+def test_f43_winograd_deconv_exact(dims):
+    """F(4x4,3x3) (m=4): 36 positions per tile instead of 16, 4x4 outputs —
+    fewer multiplies per output than F(2,3) at lower numerical margin."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 8, 8, 3)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((dims.kernel, dims.kernel, 3, 4)), jnp.float32)
+    ref = standard_deconv2d(x, w, dims)
+    got = winograd_deconv2d(x, w, dims, m=4, r=3)
+    np.testing.assert_allclose(got, ref, atol=5e-4, rtol=1e-3)
+
+
+def test_f43_sparsity_counts():
+    """Structural sparsity generalizes: for F(4,3) (n=6) the ragged TDC
+    sub-kernels still produce whole zero rows/cols."""
+    sp = plan(DeconvDims(5, 2, 2, 1), m=4, r=3)
+    n2 = 36
+    assert sp.nnz_winograd.max() <= n2
+    # the 2x2 sub-kernel loses a row+col: 36 - (6+6-1) = 25
+    assert sp.nnz_winograd.min() == 25
+    assert sp.c_total < 4 * n2  # strictly better than dense
+
+
+def test_f43_fewer_mults_per_output_than_f23():
+    from repro.core.complexity import LayerShape, mults_winograd
+
+    l = LayerShape(8, 8, 64, 32, DeconvDims(5, 2, 2, 1))
+    m2 = mults_winograd(l, m=2, r=3)
+    m4 = mults_winograd(l, m=4, r=3)
+    assert m4 < m2  # F(4,3) amortizes transforms over 4x4 outputs
+
+
+# -------------------------------------------------------------- registry
+def test_registry_covers_assignment():
+    assert len(LMS) == 10
+    assert len(REGISTRY) == 14  # + 4 GAN archs
+    for a in list_archs():
+        assert get_config(a).arch_id == a
+
+
+def test_shape_skip_rules():
+    runnable = {
+        (a, s)
+        for a in LMS
+        for s in SHAPES
+        if shape_applicable(LMS[a], SHAPES[s])[0]
+    }
+    # 10 archs x 3 shapes + 4 long_500k-capable
+    assert len(runnable) == 34
+    assert ("mamba2-780m", "long_500k") in runnable
+    assert ("jamba-v0.1-52b", "long_500k") in runnable
+    assert ("gemma3-12b", "long_500k") in runnable
+    assert ("mixtral-8x22b", "long_500k") in runnable
+    assert ("llama3-8b", "long_500k") not in runnable
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("gpt-17")

@@ -1,0 +1,175 @@
+"""Correctness of the paper's core algorithm against the scatter oracle.
+
+Invariant under test: every deconv implementation (zero-padded, TDC,
+Winograd sparse, Winograd dense, lax cross-check) computes bit-for-math the
+same function as the standard scatter-sum deconvolution.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DeconvDims,
+    lax_deconv2d,
+    plan,
+    standard_deconv2d,
+    tdc_deconv2d,
+    winograd_deconv2d,
+    zero_padded_deconv2d,
+)
+from repro.core.winograd import f23, get_transform
+
+GAN_GEOMS = [  # the paper's Table I geometries
+    pytest.param(DeconvDims(5, 2, 2, 1), id="dcgan-k5s2"),
+    pytest.param(DeconvDims(4, 2, 1, 0), id="artgan-k4s2"),
+    pytest.param(DeconvDims(3, 1, 1, 0), id="artgan-k3s1"),
+]
+
+
+# ------------------------------------------------------------- transforms
+def test_f23_matches_paper_eq3():
+    tf = f23()
+    assert np.array_equal(tf.AT, [[1, 1, 1, 0], [0, 1, -1, -1]])
+    assert np.array_equal(tf.G, [[1, 0, 0], [0.5, 0.5, 0.5], [0.5, -0.5, 0.5], [0, 0, 1]])
+    assert np.array_equal(
+        tf.BT, [[1, 0, -1, 0], [0, 1, 1, 0], [0, -1, 1, 0], [0, 1, 0, -1]]
+    )
+
+
+@pytest.mark.parametrize("m,r", [(2, 3), (4, 3), (2, 2), (3, 3)])
+def test_winograd_identity_1d(m, r):
+    tf = get_transform(m, r)
+    rng = np.random.default_rng(0)
+    z, f = rng.standard_normal(tf.n), rng.standard_normal(r)
+    want = [sum(f[t] * z[j + t] for t in range(r)) for j in range(m)]
+    np.testing.assert_allclose(tf.correlate1d(z, f), want, atol=1e-9)
+
+
+# --------------------------------------------------------- sparsity plans
+def test_paper_c_values():
+    """C(3) = 49 and C(2) = 36 (paper eq. 5's C(K_C))."""
+    assert plan(DeconvDims(5, 2, 2, 1)).c_total == 49
+    assert plan(DeconvDims(4, 2, 1, 0)).c_total == 36
+    assert plan(DeconvDims(3, 1, 1, 0)).c_total == 16
+
+
+def test_case_classification():
+    sp5 = plan(DeconvDims(5, 2, 2, 1))
+    assert sorted(sp5.case.ravel().tolist()) == [1, 2, 2, 3]
+    sp4 = plan(DeconvDims(4, 2, 1, 0))
+    assert sp4.case.ravel().tolist() == [3, 3, 3, 3]  # paper: "all Case 3"
+
+
+def test_structural_masks_are_sound():
+    """Every structurally-masked position really is zero for random weights
+    (soundness); masks must never hide a nonzero (completeness is value-
+    dependent, soundness is not)."""
+    from repro.core.winograd_deconv import transform_weights
+
+    rng = np.random.default_rng(0)
+    for dims in [DeconvDims(5, 2, 2, 1), DeconvDims(4, 2, 1, 0), DeconvDims(6, 3, 2, 0)]:
+        sp = plan(dims)
+        w = jnp.asarray(rng.standard_normal((dims.kernel, dims.kernel, 2, 2)), jnp.float32)
+        ww = np.asarray(transform_weights(w, dims))
+        for ry in range(dims.stride):
+            for rx in range(dims.stride):
+                dead = ~sp.masks_winograd[ry, rx]
+                assert np.all(np.abs(ww[ry, rx][dead]) < 1e-7), (dims, ry, rx)
+
+
+# ------------------------------------------------------------ correctness
+@pytest.mark.parametrize("dims", GAN_GEOMS)
+def test_all_methods_match_oracle(dims):
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 4)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((dims.kernel, dims.kernel, 4, 6)), jnp.float32)
+    ref = standard_deconv2d(x, w, dims)
+    for fn in (lax_deconv2d, zero_padded_deconv2d, tdc_deconv2d):
+        np.testing.assert_allclose(fn(x, w, dims), ref, atol=2e-5)
+    np.testing.assert_allclose(winograd_deconv2d(x, w, dims), ref, atol=2e-5)
+    np.testing.assert_allclose(winograd_deconv2d(x, w, dims, dense=True), ref, atol=2e-5)
+
+
+def test_rectangular_input():
+    dims = DeconvDims(4, 2, 1, 0)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((1, 5, 9, 3)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 4, 3, 2)), jnp.float32)
+    np.testing.assert_allclose(
+        winograd_deconv2d(x, w, dims), standard_deconv2d(x, w, dims), atol=2e-5
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(2, 6),
+    s=st.integers(1, 3),
+    p=st.integers(0, 3),
+    op=st.integers(0, 2),
+    h=st.integers(2, 7),
+    wdim=st.integers(2, 7),
+    n=st.integers(1, 4),
+    mch=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_winograd_equals_oracle(k, s, p, op, h, wdim, n, mch, seed):
+    """Property: for ANY geometry with K_C <= 3, P < K, OP < S, Winograd-TDC
+    deconv == scatter oracle."""
+    if p >= k or op >= s:  # torch-invalid geometries
+        return
+    dims = DeconvDims(k, s, p, op)
+    if dims.kc > 3 or dims.out_size(h) <= 0 or dims.out_size(wdim) <= 0:
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, h, wdim, n)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, k, n, mch)), jnp.float32)
+    ref = standard_deconv2d(x, w, dims)
+    got = winograd_deconv2d(x, w, dims)
+    np.testing.assert_allclose(got, ref, atol=3e-4, rtol=1e-3)
+    np.testing.assert_allclose(tdc_deconv2d(x, w, dims), ref, atol=3e-4, rtol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_linearity(seed):
+    """Deconv is bilinear: f(ax+by, w) == a f(x,w) + b f(y,w)."""
+    dims = DeconvDims(4, 2, 1, 0)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, 5, 5, 3)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((1, 5, 5, 3)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 4, 3, 2)), jnp.float32)
+    a, b = 1.7, -0.3
+    lhs = winograd_deconv2d(a * x + b * y, w, dims)
+    rhs = a * winograd_deconv2d(x, w, dims) + b * winograd_deconv2d(y, w, dims)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-4, rtol=1e-3)
+
+
+def test_bf16_path():
+    """bf16 inputs: transforms run in fp32 (coefficients are exact in bf16),
+    output within bf16 tolerance of the fp32 oracle."""
+    dims = DeconvDims(5, 2, 2, 1)
+    rng = np.random.default_rng(7)
+    x32 = rng.standard_normal((1, 6, 6, 8)).astype(np.float32)
+    w32 = rng.standard_normal((5, 5, 8, 8)).astype(np.float32)
+    ref = standard_deconv2d(jnp.asarray(x32), jnp.asarray(w32), dims)
+    got = winograd_deconv2d(jnp.asarray(x32, jnp.bfloat16), jnp.asarray(w32, jnp.bfloat16), dims)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32), ref, atol=0.15, rtol=0.1)
+
+
+def test_grad_flows():
+    """The Winograd path is differentiable (needed for GAN training)."""
+    dims = DeconvDims(4, 2, 1, 0)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((1, 4, 4, 2)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 4, 2, 3)), jnp.float32)
+
+    def loss_wino(w):
+        return jnp.sum(winograd_deconv2d(x, w, dims) ** 2)
+
+    def loss_ref(w):
+        return jnp.sum(standard_deconv2d(x, w, dims) ** 2)
+
+    np.testing.assert_allclose(jax.grad(loss_wino)(w), jax.grad(loss_ref)(w), atol=1e-3, rtol=1e-3)

@@ -1,0 +1,68 @@
+"""Unit tests for the trip-count-aware HLO cost model (roofline source)."""
+import textwrap
+
+from repro.launch.hlo_costs import CostModel, analyze_text, parse_module
+
+HLO = textwrap.dedent(
+    """
+    HloModule test
+
+    %body (p.0: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p.0 = (s32[], f32[8,16]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p.0), index=0
+      %x = f32[8,16]{1,0} get-tuple-element(%p.0), index=1
+      %w = f32[16,16]{1,0} constant({...})
+      %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups=[2,4], to_apply=%add
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%ni, %ar)
+    }
+
+    %cond (p.1: (s32[], f32[8,16])) -> pred[] {
+      %p.1 = (s32[], f32[8,16]{1,0}) parameter(0)
+      %i.1 = s32[] get-tuple-element(%p.1), index=0
+      %n = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i.1, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+      %a = f32[8,16]{1,0} parameter(0)
+      %z = s32[] constant(0)
+      %tt = (s32[], f32[8,16]{1,0}) tuple(%z, %a)
+      %w.0 = (s32[], f32[8,16]{1,0}) while(%tt), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"},"known_init_step":{"init":"0","step":"1"}}
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%w.0), index=1
+    }
+    """
+)
+
+
+def test_parse_module_finds_computations():
+    comps = parse_module(HLO)
+    assert {"body", "cond", "main"} <= set(comps)
+    assert comps["main"].is_entry
+    ops = [i.opcode for i in comps["body"].instrs]
+    assert "dot" in ops and "all-reduce" in ops
+
+
+def test_while_trip_multiplication():
+    r = analyze_text(HLO, 8)
+    # dot: 2 * 8*16 * 16 = 4096 flops, x5 trips
+    assert r["flops_per_device"] >= 5 * 4096
+    assert r["flops_per_device"] < 5 * 4096 + 5 * 200  # + elementwise adds/compare
+    # all-reduce: f32[8,16]=512B, group 4 -> wire 2*512*3/4 = 768, x5
+    assert r["collectives_by_op"]["all-reduce"]["count"] == 5
+    assert r["collectives_by_op"]["all-reduce"]["wire_bytes"] == 5 * 768
+
+
+def test_f32_matmul_tracking():
+    r = analyze_text(HLO, 8)
+    # the dot has f32 operands -> all its flops are f32-classified
+    assert r["f32_matmul_flops_per_device"] == 5 * 4096
+
+
+def test_bf16_not_f32_classified():
+    hlo = HLO.replace("f32[", "bf16[")
+    r = analyze_text(hlo, 8)
+    assert r["f32_matmul_flops_per_device"] == 0
+    assert r["flops_per_device"] >= 5 * 4096

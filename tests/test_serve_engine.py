@@ -1,0 +1,49 @@
+"""Continuous-batching engine: slot reuse, per-slot positions, and
+equivalence with straight-line prefill+decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import data as D
+from repro.configs import smoke_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeEngine
+
+
+def make_engine(slots=2):
+    cfg = smoke_config("llama3-8b")
+    params = lm.lm_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    return ServeEngine(params, cfg, slots=slots, max_len=64, prompt_len=8), params, cfg
+
+
+def test_engine_completes_more_requests_than_slots():
+    eng, _, cfg = make_engine(slots=2)
+    reqs = [
+        Request(rid=i, tokens=list(range(1, 8)), max_new=4) for i in range(5)
+    ]
+    done = eng.run(reqs)
+    assert len(done) == 5
+    assert all(len(r.out) == 4 for r in done)
+    assert all(0 <= t < cfg.vocab for r in done for t in r.out)
+
+
+def test_engine_matches_straightline_decode():
+    """The engine's greedy output must equal plain prefill+decode."""
+    eng, params, cfg = make_engine(slots=1)
+    prompt = list(range(1, 8))
+    done = eng.run([Request(rid=0, tokens=prompt, max_new=3)])
+    got = done[0].out
+
+    toks = jnp.asarray([(prompt + [0] * 8)[:8]], jnp.int32)
+    logits, cache = lm.prefill(params, cfg, {"tokens": toks}, q_chunk=64, max_len=64)
+    want = [int(jnp.argmax(logits[0]))]
+    cur, pos = want[0], 7
+    for _ in range(2):
+        lg, cache = lm.decode_step(
+            params, cfg, cache, jnp.asarray([[cur]], jnp.int32), jnp.int32(pos)
+        )
+        cur = int(jnp.argmax(lg[0]))
+        want.append(cur)
+        pos += 1
+    # engine emits argmax-from-prefill as its first token too
+    assert got[: len(want)] == want[: len(got)]
