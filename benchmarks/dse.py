@@ -6,10 +6,18 @@ paper's FPGA constants, and reports the Pareto choice — reproducing the
 paper's selection of T_m=4, T_n=128.  A second sweep re-prices the model
 with TPU v5e constants to show how the optimum moves when bandwidth is
 200x higher (the DESIGN.md §2 hardware-adaptation note).
+
+A third, *measured* sweep (kernels/autotune.py) times the Pallas engine's
+real block-size design space — fused pre-PE vs unfused — because on TPU the
+analytic model can't see Mosaic's scheduling.  On CPU it runs the kernels in
+interpret mode on a small DCGAN-shaped layer (machinery check, not a perf
+number); on a TPU backend the same sweep is the real DSE.
 """
 from __future__ import annotations
 
 from repro.core.complexity import dse_model
+from repro.core.tdc import DeconvDims
+from repro.kernels.autotune import EngineConfig, autotune_deconv, small_candidates
 
 from .workloads import GAN_LAYERS
 
@@ -50,6 +58,31 @@ def best(rows):
     return max(feas or rows, key=lambda r: r["roof_gops"])
 
 
+def engine_block_sweep(
+    dims: DeconvDims | None = None,
+    input_shape: tuple[int, int, int, int] = (1, 8, 8, 32),
+    c_out: int = 32,
+    candidates: list[EngineConfig] | None = None,
+) -> list[dict]:
+    """Measured engine DSE: fused pre-PE block sweep next to the unfused
+    baseline.  Shapes default small so the CPU interpret-mode run stays in
+    seconds; on TPU pass a real layer shape."""
+    if dims is None:
+        dims = DeconvDims(5, 2, 2, 1)  # DCGAN's K5S2 geometry
+    if candidates is None:
+        candidates = small_candidates()
+    rows = autotune_deconv(dims, input_shape, c_out, candidates=candidates)
+    for r in rows:
+        c = r["config"]
+        blk = f"block_ty={c.block_ty}" if c.fuse_pre else f"block_t={c.block_t}"
+        status = f"ms={r['ms']:.2f}" if r["ok"] else f"error={r['error']}"
+        print(
+            f"dse,engine,pre_pe={'fused' if c.fuse_pre else 'unfused'},"
+            f"{blk},block_n={c.block_n},block_m={c.block_m},{status}"
+        )
+    return rows
+
+
 def main():
     f = sweep(FPGA)
     b = best(f)
@@ -58,6 +91,14 @@ def main():
     t = sweep(TPU, dsp_budget=1 << 30)
     bt = best(t)
     print(f"dse,tpu_v5e,best_t_m={bt['t_m']},best_t_n={bt['t_n']},roof_gops={bt['roof_gops']:.1f}")
+    rows = engine_block_sweep()
+    won = next((r for r in rows if r["ok"]), None)
+    if won is not None:
+        c = won["config"]
+        print(
+            f"dse,engine_best,pre_pe={'fused' if c.fuse_pre else 'unfused'},"
+            f"block_n={c.block_n},block_m={c.block_m},ms={won['ms']:.2f}"
+        )
 
 
 if __name__ == "__main__":

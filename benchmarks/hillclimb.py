@@ -44,6 +44,11 @@ def main():
     ap.add_argument("--set", action="append", default=[], help="field=value LMConfig overrides")
     ap.add_argument("--impl", default=None, help="GAN deconv impl override")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument(
+        "--autotune-deconv", action="store_true",
+        help="sweep Pallas engine block sizes (fused + unfused pre-PE) over "
+        "the GAN's deconv layers and record the winners in the artifact",
+    )
     args = ap.parse_args()
 
     import repro.configs as CFG
@@ -60,6 +65,8 @@ def main():
     if over:
         cfg = dataclasses.replace(cfg, **over)
     CFG.REGISTRY[args.arch] = cfg
+    if args.autotune_deconv and not isinstance(cfg, GANConfig):
+        raise SystemExit("--autotune-deconv only applies to GAN archs")
 
     import repro.launch.dryrun as DR
 
@@ -68,6 +75,35 @@ def main():
     rec = DR.run_cell(args.arch, args.shape, args.multi_pod, out_dir)
     rec["tag"] = args.tag
     rec["overrides"] = over
+
+    if args.autotune_deconv:
+        from repro.kernels.autotune import autotune_deconv, small_candidates
+
+        candidates = small_candidates()
+        tuned = []
+        h = cfg.seed_hw
+        for li, d in enumerate(cfg.deconvs):
+            rows = autotune_deconv(
+                d.dims, (1, h, h, d.c_in), d.c_out, candidates=candidates
+            )
+            won = next((r for r in rows if r["ok"]), None)
+            if won:
+                c = won["config"]
+                print(
+                    f"AUTOTUNE,{args.arch},deconv{li},"
+                    f"pre_pe={'fused' if c.fuse_pre else 'unfused'},"
+                    f"block={c.block_ty if c.fuse_pre else c.block_t},"
+                    f"block_n={c.block_n},block_m={c.block_m},ms={won['ms']:.2f}"
+                )
+                tuned.append(
+                    {"layer": li, "ok": True, "fuse_pre": c.fuse_pre,
+                     "ms": won["ms"], "config": dataclasses.asdict(c)}
+                )
+            else:  # every candidate failed — surface it, don't skip the layer
+                print(f"AUTOTUNE,{args.arch},deconv{li},error={rows[0]['error']}")
+                tuned.append({"layer": li, "ok": False, "error": rows[0]["error"]})
+            h = d.dims.out_size(h)
+        rec["deconv_autotune"] = tuned
     name = f"{args.arch}__{args.shape}__{args.tag}"
     with open(os.path.join(out_dir, name + ".json"), "w") as f:
         json.dump(rec, f, indent=1)

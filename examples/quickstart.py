@@ -34,6 +34,11 @@ err = float(jnp.abs(
     winograd_deconv2d_fused(x, w, dims, interpret=True, block_t=16, block_n=8, block_m=8) - ref
 ).max())
 print(f"  {'Winograd-TDC (Pallas kernel, interpret)':40s} max|err| = {err:.2e}")
+err = float(jnp.abs(
+    winograd_deconv2d_fused(x, w, dims, fuse_pre=True, interpret=True,
+                            block_ty=4, block_n=8, block_m=8) - ref
+).max())
+print(f"  {'  + fused pre-PE (B-transform in VMEM)':40s} max|err| = {err:.2e}")
 
 sp = plan(dims)
 print(f"\nstructural sparsity for K_D=5,S=2: C(K_C) = {sp.c_total} (paper: 49), "

@@ -1,0 +1,164 @@
+"""Block-size / fusion autotuner for the Winograd-DeConv Pallas engine.
+
+The paper fixes its tiling (T_m=4, T_n=128) by an analytic roofline DSE
+(Sec. IV-C, reproduced in benchmarks/dse.py and following Ahmad & Pasha,
+arXiv:1903.01811); on TPU the analytic model mispredicts because Mosaic's
+scheduling and VMEM double-buffering are opaque, so we *measure*: enumerate
+(block_t | block_ty, block_n, block_m) x {fused, unfused pre-PE} and time
+the jitted engine end-to-end.
+
+Entry points:
+  candidate_configs(...)  -> the default sweep grid
+  autotune_deconv(...)    -> timed sweep for one (dims, input shape) cell,
+                             sorted fastest-first
+  best_config(...)        -> just the winner
+
+Used by benchmarks/dse.py (reports the sweep next to the analytic model)
+and benchmarks/hillclimb.py (--autotune-deconv).  On CPU the kernels run in
+interpret mode — timings there order host-loop overheads, not MXU work, so
+they validate the machinery; on a real TPU backend the same sweep measures
+the thing the paper's DSE approximates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tdc import DeconvDims
+
+from . import ops
+
+__all__ = [
+    "EngineConfig", "candidate_configs", "small_candidates",
+    "autotune_deconv", "best_config",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """One point of the engine design space."""
+
+    fuse_pre: bool
+    block_t: int = 128  # unfused: flat tile-axis block
+    block_ty: int = 8  # fused: tile-row block (T block = block_ty * tx)
+    block_n: int = 128
+    block_m: int = 128
+
+    def kwargs(self) -> dict:
+        return dict(
+            fuse_pre=self.fuse_pre,
+            block_t=self.block_t,
+            block_ty=self.block_ty,
+            block_n=self.block_n,
+            block_m=self.block_m,
+        )
+
+
+def candidate_configs(
+    *,
+    block_t: Sequence[int] = (64, 128, 256),
+    block_ty: Sequence[int] = (4, 8, 16),
+    block_n: Sequence[int] = (128, 256),
+    block_m: Sequence[int] = (128, 256),
+    include_fused: bool = True,
+    include_unfused: bool = True,
+) -> list[EngineConfig]:
+    """The default sweep grid over block sizes and the pre-PE fusion choice."""
+    out: list[EngineConfig] = []
+    for bn in block_n:
+        for bm in block_m:
+            if include_unfused:
+                out.extend(
+                    EngineConfig(False, block_t=bt, block_n=bn, block_m=bm)
+                    for bt in block_t
+                )
+            if include_fused:
+                out.extend(
+                    EngineConfig(True, block_ty=bty, block_n=bn, block_m=bm)
+                    for bty in block_ty
+                )
+    return out
+
+
+def small_candidates() -> list[EngineConfig]:
+    """The compact fused-vs-unfused grid both benchmarks sweep by default —
+    small enough for CPU interpret mode, one axis of block variation each."""
+    return [
+        EngineConfig(False, block_t=64, block_n=128, block_m=128),
+        EngineConfig(False, block_t=128, block_n=128, block_m=128),
+        EngineConfig(True, block_ty=4, block_n=128, block_m=128),
+        EngineConfig(True, block_ty=8, block_n=128, block_m=128),
+    ]
+
+
+def _time_one(fn, args, repeats: int) -> float:
+    y = fn(*args)
+    jax.block_until_ready(y)  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_deconv(
+    dims: DeconvDims,
+    input_shape: tuple[int, int, int, int],  # (B, H, W, N)
+    c_out: int,
+    *,
+    dtype=jnp.float32,
+    candidates: Iterable[EngineConfig] | None = None,
+    interpret: bool | None = None,
+    repeats: int = 3,
+    seed: int = 0,
+) -> list[dict]:
+    """Time every candidate engine config for one deconv layer.
+
+    Returns a list of rows {config, ms, ok, error} sorted fastest-first;
+    configs that fail to compile/run are kept (ok=False) so sweeps surface
+    infeasible corners instead of hiding them.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if candidates is None:
+        candidates = candidate_configs()
+    B, H, W, N = input_shape
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((B, H, W, N)), dtype)
+    w = jnp.asarray(
+        rng.standard_normal((dims.kernel, dims.kernel, N, c_out)), dtype
+    )
+    rows: list[dict] = []
+    for cfg in candidates:
+        fn = lambda x, w, cfg=cfg: ops.winograd_deconv2d_fused(
+            x, w, dims, interpret=interpret, **cfg.kwargs()
+        )
+        try:
+            dt = _time_one(fn, (x, w), repeats)
+            rows.append({"config": cfg, "ms": dt * 1e3, "ok": True, "error": ""})
+        except Exception as e:  # infeasible block shape, OOM, ...
+            rows.append(
+                {"config": cfg, "ms": float("inf"), "ok": False,
+                 "error": f"{type(e).__name__}: {e}"[:200]}
+            )
+    rows.sort(key=lambda r: r["ms"])
+    return rows
+
+
+def best_config(
+    dims: DeconvDims,
+    input_shape: tuple[int, int, int, int],
+    c_out: int,
+    **kw,
+) -> EngineConfig:
+    rows = autotune_deconv(dims, input_shape, c_out, **kw)
+    for r in rows:
+        if r["ok"]:
+            return r["config"]
+    raise RuntimeError(f"no engine config ran for {dims}: {rows[0]['error']}")

@@ -19,9 +19,9 @@ from repro.core.winograd import get_transform
 from repro.core.winograd_deconv import transform_input_tiles, transform_weights
 
 from . import ref as _ref
-from .winograd_deconv import winograd_domain_engine
+from .winograd_deconv import winograd_domain_engine, winograd_fused_pre_engine
 
-__all__ = ["pack_weights", "winograd_deconv2d_fused", "packed_layout"]
+__all__ = ["pack_weights", "winograd_deconv2d_fused", "packed_layout", "cells_layout"]
 
 
 @functools.lru_cache(maxsize=None)
@@ -109,8 +109,77 @@ def _engine_bwd(pos_idx, sub_slices, m2, interpret, bt, bn, bm, res, g):
 _engine_vjp.defvjp(_engine_fwd, _engine_bwd)
 
 
+def cells_layout(x_pad: jax.Array, ty: int, tx: int, m: int, n: int) -> jax.Array:
+    """Padded NHWC image -> the fused engine's cell layout (B, Gy, Gx, m*m, N).
+
+    Pure reshape/transpose (space-to-depth by the tile stride m) — XLA fuses
+    it into the producing op, so unlike ``transform_input_tiles`` nothing
+    tile-overlapping ever materializes in HBM.
+    """
+    B, Hp, Wp, N = x_pad.shape
+    q = -(-n // m)
+    gy, gx = ty + q - 1, tx + q - 1
+    need_h, need_w = gy * m, gx * m
+    x_pad = jnp.pad(
+        x_pad,
+        ((0, 0), (0, max(0, need_h - Hp)), (0, max(0, need_w - Wp)), (0, 0)),
+    )[:, :need_h, :need_w, :]
+    return jnp.transpose(
+        x_pad.reshape(B, gy, m, gx, m, N), (0, 1, 3, 2, 4, 5)
+    ).reshape(B, gy, gx, m * m, N)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("dims", "m", "r", "backend", "interpret", "block_t", "block_n", "block_m")
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14)
+)
+def _fused_pre_vjp(
+    cells, ww, inv, bt_mat, pos_idx, sub_slices, m, n, ty, tx, m2,
+    interpret, bty, bn, bm,
+):
+    """Fused pre-PE engine with a custom VJP (backward = VJP of the
+    mathematically-identical reference contraction, as for _engine_vjp)."""
+    return winograd_fused_pre_engine(
+        cells, ww, inv, bt_mat,
+        pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, tx=tx, m2=m2,
+        interpret=interpret, block_ty=bty, block_n=bn, block_m=bm,
+    )
+
+
+def _fused_pre_fwd(
+    cells, ww, inv, bt_mat, pos_idx, sub_slices, m, n, ty, tx, m2,
+    interpret, bty, bn, bm,
+):
+    y = _fused_pre_vjp(
+        cells, ww, inv, bt_mat, pos_idx, sub_slices, m, n, ty, tx, m2,
+        interpret, bty, bn, bm,
+    )
+    return y, (cells, ww, inv)
+
+
+def _fused_pre_bwd(
+    bt_mat, pos_idx, sub_slices, m, n, ty, tx, m2, interpret, bty, bn, bm, res, g
+):
+    cells, ww, inv = res
+    _, vjp = jax.vjp(
+        lambda a, b: _ref.fused_pre_engine_ref(
+            a, b, inv, bt_mat,
+            pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, tx=tx, m2=m2,
+        ),
+        cells, ww,
+    )
+    dcells, dww = vjp(g)
+    return dcells, dww, jnp.zeros_like(inv)
+
+
+_fused_pre_vjp.defvjp(_fused_pre_fwd, _fused_pre_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "dims", "m", "r", "backend", "interpret", "fuse_pre",
+        "block_t", "block_n", "block_m", "block_ty",
+    ),
 )
 def winograd_deconv2d_fused(
     x: jax.Array,
@@ -121,11 +190,21 @@ def winograd_deconv2d_fused(
     r: int = 3,
     backend: str = "pallas",
     interpret: bool = False,
+    fuse_pre: bool = False,
     block_t: int = 128,
     block_n: int = 128,
     block_m: int = 128,
+    block_ty: int = 8,
 ) -> jax.Array:
-    """Winograd DeConv with the Pallas engine. x:(B,H,W,N) w:(KD,KD,N,M)."""
+    """Winograd DeConv with the Pallas engine. x:(B,H,W,N) w:(KD,KD,N,M).
+
+    ``fuse_pre=True`` runs the pre-PE B-transform inside the engine kernel
+    (paper Fig. 7's fully fused pre/com/post-PE pipeline): the input reaches
+    the kernel in the m x m cell layout and the (T, n^2, N) transformed-tile
+    intermediate never materializes in HBM.  ``block_ty`` is the fused
+    variant's tile-row block (its T block is block_ty * tx tiles);
+    ``block_t`` blocks the unfused variant's flat tile axis.
+    """
     tf = get_transform(m, r)
     B, H, W, N = x.shape
     M = w.shape[-1]
@@ -146,20 +225,40 @@ def winograd_deconv2d_fused(
             (0, 0),
         ),
     )
-    xw = transform_input_tiles(x_pad, (ty, tx), m, r).astype(x.dtype)
-    xw_mat = xw.reshape(B * ty * tx, tf.n * tf.n, N)
-
-    kw = dict(pos_idx=pos_idx, sub_slices=sub_slices, m2=m * m)
-    if backend == "pallas":
-        y = _engine_vjp(
-            xw_mat, ww_packed, jnp.asarray(inv_np),
-            kw["pos_idx"], kw["sub_slices"], kw["m2"],
-            interpret, block_t, block_n, block_m,
-        )
-    elif backend == "ref":
-        y = _ref.engine_ref(xw_mat, ww_packed, jnp.asarray(inv_np), **kw)
+    inv = jnp.asarray(inv_np)
+    m2 = m * m
+    if fuse_pre:
+        cells = cells_layout(x_pad, ty, tx, m, tf.n).astype(x.dtype)
+        bt_mat = tuple(tuple(float(v) for v in row) for row in tf.BT)
+        if backend == "pallas":
+            y = _fused_pre_vjp(
+                cells, ww_packed, inv, bt_mat, pos_idx, sub_slices,
+                m, tf.n, ty, tx, m2, interpret, block_ty, block_n, block_m,
+            )
+        elif backend == "ref":
+            y = _ref.fused_pre_engine_ref(
+                cells, ww_packed, inv, bt_mat,
+                pos_idx=pos_idx, sub_slices=sub_slices,
+                m=m, n=tf.n, ty=ty, tx=tx, m2=m2,
+            )
+        else:
+            raise ValueError(backend)
+        y = y.reshape(B * ty * tx, -1, M)
     else:
-        raise ValueError(backend)
+        xw = transform_input_tiles(x_pad, (ty, tx), m, r).astype(x.dtype)
+        xw_mat = xw.reshape(B * ty * tx, tf.n * tf.n, N)
+        if backend == "pallas":
+            y = _engine_vjp(
+                xw_mat, ww_packed, inv, pos_idx, sub_slices, m2,
+                interpret, block_t, block_n, block_m,
+            )
+        elif backend == "ref":
+            y = _ref.engine_ref(
+                xw_mat, ww_packed, inv,
+                pos_idx=pos_idx, sub_slices=sub_slices, m2=m2,
+            )
+        else:
+            raise ValueError(backend)
 
     # (T, S2*m2, M) -> (S,S,B,Ty*m,Tx*m,M) -> interleave
     y = y.reshape(B, ty, tx, S, S, m, m, M)

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.core.winograd_deconv import winograd_deconv2d as winograd_deconv2d_ref  # noqa: F401
 
-__all__ = ["engine_ref", "winograd_deconv2d_ref"]
+__all__ = ["engine_ref", "fused_pre_engine_ref", "winograd_deconv2d_ref"]
 
 
 def engine_ref(
@@ -41,3 +41,42 @@ def engine_ref(
             jnp.einsum("ctm,ca->tam", y[lo:hi], inv_packed[lo:hi].astype(jnp.float32))
         )
     return jnp.concatenate(outs, axis=1).astype(xw.dtype)
+
+
+def fused_pre_engine_ref(
+    cells: jax.Array,  # (B, Gy, Gx, m*m, N) space-to-depth padded input
+    ww_packed: jax.Array,  # (C, N, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    bt_mat,  # (n, n) B^T
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m: int,
+    n: int,
+    ty: int,
+    tx: int,
+    m2: int,
+) -> jax.Array:
+    """Oracle for the fused pre-PE engine: same cell layout in, same
+    (B, ty, tx, S2*m2, M) out — B-transform done with plain jnp gathers."""
+    B, Gy, Gx, m2c, N = cells.shape
+    M = ww_packed.shape[-1]
+    # cells -> padded image -> overlapping n x n tiles at stride m
+    img = jnp.transpose(
+        cells.reshape(B, Gy, Gx, m, m, N), (0, 1, 3, 2, 4, 5)
+    ).reshape(B, Gy * m, Gx * m, N)
+    idx_y = (m * jnp.arange(ty))[:, None] + jnp.arange(n)[None, :]
+    idx_x = (m * jnp.arange(tx))[:, None] + jnp.arange(n)[None, :]
+    tiles = img[:, idx_y][:, :, :, idx_x]  # (B, ty, n, tx, n, N)
+    tiles = jnp.transpose(tiles, (0, 1, 3, 2, 4, 5))  # (B, ty, tx, n, n, N)
+    bt = jnp.asarray(bt_mat, jnp.float32)
+    xw = jnp.einsum(
+        "ua,zyxabc,vb->zyxuvc", bt, tiles.astype(jnp.float32), bt,
+        precision=jax.lax.Precision.HIGHEST,
+    ).astype(cells.dtype)
+    xw_mat = xw.reshape(B * ty * tx, n * n, N)
+    y = engine_ref(
+        xw_mat, ww_packed, inv_packed,
+        pos_idx=pos_idx, sub_slices=sub_slices, m2=m2,
+    )
+    return y.reshape(B, ty, tx, -1, M)

@@ -2,11 +2,18 @@
 
 Maps the paper's PE array (Fig. 7) onto the TPU:
 
-  pre-PE   -> host-side B-transform + reorganization to the n^2 x N layout
-              (XLA; cheap, bandwidth-bound) and *packed* weight layout: only
-              the C(K_C) structurally-nonzero Winograd positions are stored,
-              so zero weights never reach VMEM — the idle-cycle skipping of
-              Fig. 6 becomes a smaller grid of MXU matmuls.
+  pre-PE   -> two variants.  Unfused (winograd_domain_engine): host-side
+              B-transform + reorganization to the n^2 x N layout (XLA;
+              cheap but bandwidth-bound — overlapping n x n tiles re-read
+              every input pixel (n/m)^2 times from HBM).  Fused
+              (winograd_fused_pre_engine): the engine consumes the padded
+              input directly in an m x m cell layout and runs the
+              B-transform in VMEM as unrolled adds — the TPU analogue of
+              the paper's line buffer (Sec. V).  Both use the *packed*
+              weight layout: only the C(K_C) structurally-nonzero Winograd
+              positions are stored, so zero weights never reach VMEM — the
+              idle-cycle skipping of Fig. 6 becomes a smaller grid of MXU
+              matmuls.
   com-PE   -> this kernel: grid (T_blocks, M_blocks, N_blocks); per step an
               unrolled sequence of (T_t x N_t) @ (N_t x M_t) MXU matmuls, one
               per packed position, accumulated in fp32 VMEM scratch across
@@ -34,21 +41,24 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["winograd_domain_engine"]
+from repro.compat import tpu_compiler_params
+
+__all__ = ["winograd_domain_engine", "winograd_fused_pre_engine"]
 
 
-def _engine_kernel(
-    xw_ref,  # (T_t, n2, N_t) transformed input tiles
+def _com_post_pe(
+    xw,  # (T_t, n2, N_t) transformed input tiles (VMEM value)
     ww_ref,  # (C, N_t, M_t) packed nonzero transformed weights
     inv_ref,  # (C, m2) fp32 inverse-transform rows
     out_ref,  # (T_t, S2*m2, M_t)
     acc_ref,  # scratch (C, T_t, M_t) fp32
     *,
-    pos_idx: tuple[int, ...],  # packed position -> winograd position (len C)
-    sub_slices: tuple[tuple[int, int], ...],  # per sub-filter (start, end) in packed dim
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
     m2: int,
     n_steps: int,
 ):
+    """Shared com-PE + post-PE stage of both engine variants."""
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -56,7 +66,6 @@ def _engine_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # --- com-PE: one MXU matmul per packed (structurally nonzero) position
-    xw = xw_ref[...]
     for p, pos in enumerate(pos_idx):
         x_p = xw[:, pos, :]  # (T_t, N_t) static row select
         w_p = ww_ref[p, :, :]  # (N_t, M_t)
@@ -86,6 +95,24 @@ def _engine_kernel(
             out_ref[:, s * m2 : (s + 1) * m2, :] = jnp.transpose(
                 y, (1, 0, 2)
             ).astype(out_ref.dtype)
+
+
+def _engine_kernel(
+    xw_ref,  # (T_t, n2, N_t) transformed input tiles
+    ww_ref,  # (C, N_t, M_t) packed nonzero transformed weights
+    inv_ref,  # (C, m2) fp32 inverse-transform rows
+    out_ref,  # (T_t, S2*m2, M_t)
+    acc_ref,  # scratch (C, T_t, M_t) fp32
+    *,
+    pos_idx: tuple[int, ...],  # packed position -> winograd position (len C)
+    sub_slices: tuple[tuple[int, int], ...],  # per sub-filter (start, end) in packed dim
+    m2: int,
+    n_steps: int,
+):
+    _com_post_pe(
+        xw_ref[...], ww_ref, inv_ref, out_ref, acc_ref,
+        pos_idx=pos_idx, sub_slices=sub_slices, m2=m2, n_steps=n_steps,
+    )
 
 
 @functools.partial(
@@ -135,7 +162,7 @@ def winograd_domain_engine(
         out_specs=pl.BlockSpec((bt, S2 * m2, bm), lambda i, j, k: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((Tp, S2 * m2, Mp), xw.dtype),
         scratch_shapes=[pltpu.VMEM((C, bt, bm), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
@@ -145,3 +172,197 @@ def winograd_domain_engine(
 
 def _rup(x: int, mult: int) -> int:
     return -(-x // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Fused pre-PE variant: the engine consumes the padded input directly (in the
+# m x m "cell" layout below) and runs the B-transform in VMEM, so the
+# (T, n^2, N) transformed-tile intermediate never round-trips through HBM.
+#
+# Input layout ("cells", built host-side as a pure reshape/transpose):
+#   cells[b, gy, gx, p*m+q, c] = x_pad[b, m*gy+p, m*gx+q, c]
+# i.e. space-to-depth by the output tile stride m.  An n x n Winograd tile at
+# tile coords (ty, tx) is exactly the Q x Q patch of cells at (ty..ty+Q-1,
+# tx..tx+Q-1) with Q = ceil(n / m), cropped to n — so overlapping tile reads
+# become *non-overlapping* cell reads plus a one-cell halo.  The halo is
+# expressed by passing the cells array twice: once blocked by bty cell rows
+# (index iy) and once as a thin Q-1-row block starting at (iy+1)*bty — the
+# TPU analogue of the paper's line buffer (Sec. V), which keeps each input
+# row resident instead of re-fetching it per overlapping tile.
+# ---------------------------------------------------------------------------
+
+
+def _fused_pre_kernel(
+    c0_ref,  # (1, bty, Gxp, m2c, N_t) cell rows [iy*bty, (iy+1)*bty)
+    c1_ref,  # (1, h, Gxp, m2c, N_t) halo cell rows [(iy+1)*bty, (iy+1)*bty+h)
+    ww_ref,  # (C, N_t, M_t)
+    inv_ref,  # (C, m2)
+    out_ref,  # (bty*tx, S2*m2, M_t)
+    acc_ref,  # scratch (C, bty*tx, M_t) fp32
+    *,
+    bt_const: tuple[tuple[float, ...], ...],  # B^T as nested tuple (n, n)
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m: int,
+    n: int,
+    tx: int,
+    m2: int,
+    n_steps: int,
+    in_dtype,
+):
+    bty = c0_ref.shape[1]
+    bn = c0_ref.shape[4]
+    q = -(-n // m)
+    cells = jnp.concatenate([c0_ref[0], c1_ref[0]], axis=0)  # (bty+h, Gxp, m2c, N_t)
+
+    # --- pre-PE step 1: stitch n x n tiles out of m x m cells (line buffer).
+    # Tile (j, t) row a = m*dy + p comes from cell (j+dy, t+dx) row p.
+    rows = []
+    for dy in range(q):
+        cols = []
+        for dx in range(q):
+            piece = cells[dy : dy + bty, dx : dx + tx]  # (bty, tx, m2c, N_t)
+            cols.append(piece.reshape(bty, tx, m, m, bn))
+        rows.append(jnp.concatenate(cols, axis=3))  # (bty, tx, m, q*m, N_t)
+    z = jnp.concatenate(rows, axis=2)[:, :, :n, :n, :]  # (bty, tx, n, n, N_t)
+    z = z.reshape(bty * tx, n, n, bn).astype(jnp.float32)
+
+    # --- pre-PE step 2: B^T Z B as unrolled scalar multiply-adds (the
+    # paper's adder-network pre-PE: for F(2,3) every B^T entry is 0 or ±1,
+    # so this is pure VPU adds — and Pallas kernels cannot capture array
+    # constants anyway).
+    def _bt_apply(vals):  # vals: list of n arrays; returns list of n arrays
+        out = []
+        for u in range(n):
+            acc = None
+            for a in range(n):
+                coef = bt_const[u][a]
+                if coef == 0.0:
+                    continue
+                term = vals[a] if coef == 1.0 else (
+                    -vals[a] if coef == -1.0 else vals[a] * coef
+                )
+                acc = term if acc is None else acc + term
+            out.append(acc if acc is not None else jnp.zeros_like(vals[0]))
+        return out
+
+    zr = _bt_apply([z[:, a, :, :] for a in range(n)])  # rows: (T_t, n, N_t) each
+    xw_uv = []
+    for u in range(n):
+        xw_uv.extend(_bt_apply([zr[u][:, b, :] for b in range(n)]))
+    xw = jnp.stack(xw_uv, axis=1)  # (T_t, n*n, N_t)
+    # Match the unfused path, which stores transformed tiles in the input
+    # dtype before the channel contraction.
+    xw = xw.astype(in_dtype)
+
+    _com_post_pe(
+        xw, ww_ref, inv_ref, out_ref, acc_ref,
+        pos_idx=pos_idx, sub_slices=sub_slices, m2=m2, n_steps=n_steps,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bt_mat", "pos_idx", "sub_slices", "m", "n", "ty", "tx", "m2",
+        "block_ty", "block_n", "block_m", "interpret",
+    ),
+)
+def winograd_fused_pre_engine(
+    cells: jax.Array,  # (B, Gy, Gx, m*m, N) space-to-depth padded input
+    ww_packed: jax.Array,  # (C, N, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    bt_mat: tuple[tuple[float, ...], ...],  # B^T as a static (n, n) nested tuple
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m: int,
+    n: int,
+    ty: int,
+    tx: int,
+    m2: int,
+    block_ty: int = 8,
+    block_n: int = 128,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused pre-PE + com-PE + post-PE engine.
+
+    Consumes the cell layout directly and returns (B, ty, tx, S2*m2, M) —
+    the same per-tile sub-pixel outputs as ``winograd_domain_engine`` on the
+    reorganized (T, n2, N) matrix, without materializing it in HBM.
+
+    Grid: (B * ty_blocks, M_blocks, N_blocks); each step stages a
+    (block_ty + halo) strip of cell rows in VMEM, B-transforms it, and feeds
+    the packed-position MXU matmuls.
+    """
+    B, Gy, Gx, m2c, N = cells.shape
+    C, _, M = ww_packed.shape
+    S2 = len(sub_slices)
+    q = -(-n // m)
+
+    bty = min(block_ty, ty)
+    n_ty_blocks = -(-ty // bty)
+    bn = min(block_n, _rup(N, 128))
+    bm = min(block_m, _rup(M, 128))
+    Np, Mp = _rup(N, bn), _rup(M, bm)
+    # The halo operand only needs the q-1 cell rows past the main block, not
+    # a full second bty block — fetching bty rows would double the input DMA
+    # on the exact bandwidth-bound path this kernel exists to fix.  Its block
+    # row count h must divide the (iy+1)*bty element offset; fall back to a
+    # full block otherwise (never taken for the supported q=2 geometries).
+    h = q - 1 if q > 1 and bty % (q - 1) == 0 else bty
+    # Pad y a full extra block so the last halo read is in-bounds and both
+    # specs' block shapes divide the array; x needs tx + q - 1 cell columns
+    # in-block.  (Padding is HBM capacity only — DMA per step is bty + h.)
+    Gyp = (n_ty_blocks + 1) * bty
+    Gxp = max(Gx, tx + q - 1)
+    cells_p = jnp.pad(
+        cells, ((0, 0), (0, Gyp - Gy), (0, Gxp - Gx), (0, 0), (0, Np - N))
+    )
+    ww_p = jnp.pad(ww_packed, ((0, 0), (0, Np - N), (0, Mp - M)))
+    grid = (B * n_ty_blocks, Mp // bm, Np // bn)
+
+    cell_block = (1, bty, Gxp, m2c, bn)
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_pre_kernel,
+            bt_const=bt_mat,
+            pos_idx=pos_idx,
+            sub_slices=sub_slices,
+            m=m,
+            n=n,
+            tx=tx,
+            m2=m2,
+            n_steps=grid[2],
+            in_dtype=cells.dtype,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                cell_block,
+                lambda i, j, k: (i // n_ty_blocks, i % n_ty_blocks, 0, 0, k),
+            ),
+            pl.BlockSpec(
+                (1, h, Gxp, m2c, bn),
+                lambda i, j, k: (
+                    i // n_ty_blocks,
+                    (i % n_ty_blocks + 1) * (bty // h),
+                    0, 0, k,
+                ),
+            ),
+            pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bty * tx, S2 * m2, bm), lambda i, j, k: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (B * n_ty_blocks * bty * tx, S2 * m2, Mp), cells.dtype
+        ),
+        scratch_shapes=[pltpu.VMEM((C, bty * tx, bm), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(cells_p, cells_p, ww_p, inv_packed)
+    out = out.reshape(B, n_ty_blocks * bty, tx, S2 * m2, Mp)
+    return out[:, :ty, :, :, :M]

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import get_config
 from repro.configs.base import GANConfig, LMConfig, SHAPES, ShapeConfig
 from repro.models import lm as LM
@@ -110,7 +111,7 @@ def lm_input_specs(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh):
 def build_lm_step(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh):
     """Returns (jit_fn, arg_structs, meta)."""
     args, in_sh, out_sh, meta = lm_input_specs(cfg, shape, mesh)
-    named = lambda tree: jax.tree.map(
+    named = lambda tree: compat.tree_map(
         lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
     )
     shard_act = None  # activation constraints come from input/param shardings
@@ -222,7 +223,7 @@ def build_gan_step(cfg: GANConfig, mesh: Mesh):
         dp2, do2, _ = adamw_update(dp_, dgrads, do_, lr=2e-4, b1=0.5)
         return gp2, dp2, go2, do2, gl, dl
 
-    named = lambda tree: jax.tree.map(
+    named = lambda tree: compat.tree_map(
         lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
     )
     fn = jax.jit(

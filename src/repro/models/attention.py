@@ -182,7 +182,8 @@ def seq_sharded_decode_attention(
     long_500k cells.
     """
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+
+    from repro.compat import shard_map
 
     B, S, Hkv, hd = k_cache.shape
     scale = 1.0 / math.sqrt(hd)

@@ -1,7 +1,8 @@
 """GAN generators/discriminators built on the Winograd-DeConv core.
 
 The generator's deconv layers dispatch to any of the paper's three method
-families (``deconv_impl``): 'ref' / 'pallas' (this paper), 'tdc' ([14]),
+families (``deconv_impl``): 'ref' / 'pallas' / 'pallas_fused_pre' (this
+paper; the latter fuses the pre-PE B-transform into the engine), 'tdc' ([14]),
 'zero_padded' ([10-12]), 'lax' (XLA's own conv_transpose) — all numerically
 identical, so speed comparisons are apples-to-apples.
 """
@@ -32,9 +33,14 @@ def _deconv_apply(impl: str, x, w, dims: DeconvDims):
         return winograd_deconv2d(x, w, dims, dense=True, bf16=True)
     if impl == "pallas":
         return kops.winograd_deconv2d_fused(x, w, dims)
+    if impl == "pallas_fused_pre":
+        return kops.winograd_deconv2d_fused(x, w, dims, fuse_pre=True)
     if impl == "pallas_interpret":
         return kops.winograd_deconv2d_fused(x, w, dims, interpret=True,
                                             block_t=16, block_n=8, block_m=8)
+    if impl == "pallas_fused_pre_interpret":
+        return kops.winograd_deconv2d_fused(x, w, dims, fuse_pre=True, interpret=True,
+                                            block_ty=4, block_n=8, block_m=8)
     if impl == "tdc":
         return tdc_deconv2d(x, w, dims)
     if impl == "zero_padded":

@@ -112,8 +112,9 @@ def moe_apply_ep(
     drops, residual passes through.  Requires E == mesh.shape[ep_axis].
     This is the §Perf beyond-baseline variant for the MoE cells.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     E, k = spec.num_experts, spec.top_k
     n_ep = mesh.shape[ep_axis]

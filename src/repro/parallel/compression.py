@@ -15,9 +15,11 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def init_residuals(grads) -> Any:
-    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    return compat.tree_map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
 
 
 def _quantize(x: jax.Array):
@@ -43,15 +45,15 @@ def compressed_psum(grads, residuals, axis_name: str):
         new_r = gf - q.astype(jnp.float32) * scale  # local quantization error
         return deq.astype(g.dtype), new_r
 
-    flat_g, tree = jax.tree.flatten(grads)
-    flat_r = jax.tree.leaves(residuals)
+    flat_g, tree = compat.tree_flatten(grads)
+    flat_r = compat.tree_leaves(residuals)
     out = [one(g, r) for g, r in zip(flat_g, flat_r)]
-    new_g = jax.tree.unflatten(tree, [o[0] for o in out])
-    new_r = jax.tree.unflatten(tree, [o[1] for o in out])
+    new_g = compat.tree_unflatten(tree, [o[0] for o in out])
+    new_r = compat.tree_unflatten(tree, [o[1] for o in out])
     return new_g, new_r
 
 
 def wire_bytes_saved(grads) -> int:
     """fp32 all-reduce bytes minus int8 bytes (reporting helper)."""
-    total = sum(g.size for g in jax.tree.leaves(grads))
+    total = sum(g.size for g in compat.tree_leaves(grads))
     return total * 4 - total * 1

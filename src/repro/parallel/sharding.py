@@ -19,6 +19,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import LMConfig, ShapeConfig
 from repro.models import lm as LM
 
@@ -222,7 +223,7 @@ def opt_specs(param_specs):
 
 
 def named(mesh: Mesh, spec_tree):
-    return jax.tree.map(
+    return compat.tree_map(
         lambda s: NamedSharding(mesh, s),
         spec_tree,
         is_leaf=lambda x: isinstance(x, P),

@@ -1,0 +1,24 @@
+"""hypothesis is a dev-only dependency (requirements-dev.txt): without it
+the property tests must skip instead of erroring their module at collection.
+
+Usage in a test module:
+
+    from _hypothesis_compat import given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+
+    class _NoStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _NoStrategies()
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)

@@ -115,7 +115,7 @@ def test_gradient_compression_psum():
         """
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.compat import shard_map
         from repro.launch.mesh import make_mesh
         from repro.parallel.compression import compressed_psum, init_residuals
 
