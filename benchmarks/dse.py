@@ -63,21 +63,24 @@ def engine_block_sweep(
     input_shape: tuple[int, int, int, int] = (1, 8, 8, 32),
     c_out: int = 32,
     candidates: list[EngineConfig] | None = None,
+    mode: str = "fwd",
 ) -> list[dict]:
     """Measured engine DSE: fused pre-PE block sweep next to the unfused
-    baseline.  Shapes default small so the CPU interpret-mode run stays in
-    seconds; on TPU pass a real layer shape."""
+    baseline.  ``mode='grad'`` times value_and_grad instead, sweeping the
+    Pallas *backward* engines' design space.  Shapes default small so the
+    CPU interpret-mode run stays in seconds; on TPU pass a real layer
+    shape."""
     if dims is None:
         dims = DeconvDims(5, 2, 2, 1)  # DCGAN's K5S2 geometry
     if candidates is None:
         candidates = small_candidates()
-    rows = autotune_deconv(dims, input_shape, c_out, candidates=candidates)
+    rows = autotune_deconv(dims, input_shape, c_out, candidates=candidates, mode=mode)
     for r in rows:
         c = r["config"]
         blk = f"block_ty={c.block_ty}" if c.fuse_pre else f"block_t={c.block_t}"
         status = f"ms={r['ms']:.2f}" if r["ok"] else f"error={r['error']}"
         print(
-            f"dse,engine,pre_pe={'fused' if c.fuse_pre else 'unfused'},"
+            f"dse,engine,mode={mode},pre_pe={'fused' if c.fuse_pre else 'unfused'},"
             f"{blk},block_n={c.block_n},block_m={c.block_m},{status}"
         )
     return rows
@@ -98,6 +101,16 @@ def main():
         print(
             f"dse,engine_best,pre_pe={'fused' if c.fuse_pre else 'unfused'},"
             f"block_n={c.block_n},block_m={c.block_m},ms={won['ms']:.2f}"
+        )
+    # Backward-engine DSE: same candidates timed through value_and_grad
+    # (smaller shape — the grad graph runs three kernels per candidate).
+    rows_g = engine_block_sweep(input_shape=(1, 6, 6, 16), c_out=16, mode="grad")
+    won_g = next((r for r in rows_g if r["ok"]), None)
+    if won_g is not None:
+        c = won_g["config"]
+        print(
+            f"dse,engine_best_grad,pre_pe={'fused' if c.fuse_pre else 'unfused'},"
+            f"block_n={c.block_n},block_m={c.block_m},ms={won_g['ms']:.2f}"
         )
 
 

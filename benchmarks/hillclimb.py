@@ -49,6 +49,11 @@ def main():
         help="sweep Pallas engine block sizes (fused + unfused pre-PE) over "
         "the GAN's deconv layers and record the winners in the artifact",
     )
+    ap.add_argument(
+        "--autotune-deconv-mode", default="fwd", choices=("fwd", "grad", "step"),
+        help="what the deconv autotune times: inference, value_and_grad "
+        "(the Pallas backward engines), or a full AdamW step",
+    )
     args = ap.parse_args()
 
     import repro.configs as CFG
@@ -84,24 +89,29 @@ def main():
         h = cfg.seed_hw
         for li, d in enumerate(cfg.deconvs):
             rows = autotune_deconv(
-                d.dims, (1, h, h, d.c_in), d.c_out, candidates=candidates
+                d.dims, (1, h, h, d.c_in), d.c_out, candidates=candidates,
+                mode=args.autotune_deconv_mode,
             )
             won = next((r for r in rows if r["ok"]), None)
             if won:
                 c = won["config"]
                 print(
                     f"AUTOTUNE,{args.arch},deconv{li},"
+                    f"mode={args.autotune_deconv_mode},"
                     f"pre_pe={'fused' if c.fuse_pre else 'unfused'},"
                     f"block={c.block_ty if c.fuse_pre else c.block_t},"
                     f"block_n={c.block_n},block_m={c.block_m},ms={won['ms']:.2f}"
                 )
                 tuned.append(
                     {"layer": li, "ok": True, "fuse_pre": c.fuse_pre,
+                     "mode": args.autotune_deconv_mode,
                      "ms": won["ms"], "config": dataclasses.asdict(c)}
                 )
             else:  # every candidate failed — surface it, don't skip the layer
                 print(f"AUTOTUNE,{args.arch},deconv{li},error={rows[0]['error']}")
-                tuned.append({"layer": li, "ok": False, "error": rows[0]["error"]})
+                tuned.append({"layer": li, "ok": False,
+                              "mode": args.autotune_deconv_mode,
+                              "error": rows[0]["error"]})
             h = d.dims.out_size(h)
         rec["deconv_autotune"] = tuned
     name = f"{args.arch}__{args.shape}__{args.tag}"

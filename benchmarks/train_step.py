@@ -1,0 +1,160 @@
+"""Train-step benchmark: fwd, bwd (value_and_grad) and full-AdamW-step wall
+time for the Winograd-DeConv layer families, emitting BENCH_train_step.json
+so the perf trajectory of the training path is tracked PR over PR.
+
+Variants per layer (all numerically identical forward):
+  ref                        pure-JAX winograd path (XLA fwd + XLA bwd)
+  pallas                     unfused Pallas engine, Pallas backward engines
+  pallas_fused_pre           fused pre-PE engine, fused Pallas backward
+  pallas_prepacked           pallas + weights prepacked once (Winograd-domain
+                             step: no G-transform/pack anywhere in the step)
+  pallas_fused_pre_prepacked fused + prepacked
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.train_step                  # full layers
+  PYTHONPATH=src python -m benchmarks.train_step --smoke          # CI: tiny
+  PYTHONPATH=src python -m benchmarks.train_step --arch dcgan --out f.json
+
+On CPU the Pallas variants run in interpret mode: timings order host-loop
+overheads rather than MXU work (the prepacked-vs-unpacked delta — the
+per-step G-transform + pack — is real on both).  On a TPU backend the same
+driver measures the production numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tdc import DeconvDims
+from repro.kernels.autotune import EngineConfig, make_timed_fn, time_one
+
+from .workloads import GAN_LAYERS
+
+MODES = ("fwd", "grad", "step")
+
+
+def _variants(interpret: bool) -> list[tuple[str, EngineConfig | None]]:
+    """(name, EngineConfig) rows; None marks the pure-JAX reference."""
+    if interpret:  # CPU-feasible block sizes, shared with the model impls
+        from repro.kernels.ops import INTERPRET_BLOCKS, INTERPRET_BLOCKS_FUSED
+
+        fwd_kw, fused_kw = INTERPRET_BLOCKS, INTERPRET_BLOCKS_FUSED
+    else:
+        fwd_kw, fused_kw = {}, {}
+    return [
+        ("ref", None),
+        ("pallas", EngineConfig(False, **fwd_kw)),
+        ("pallas_fused_pre", EngineConfig(True, **fused_kw)),
+        ("pallas_prepacked", EngineConfig(False, prepack=True, **fwd_kw)),
+        ("pallas_fused_pre_prepacked", EngineConfig(True, prepack=True, **fused_kw)),
+    ]
+
+
+def bench_layer(
+    dims: DeconvDims,
+    input_shape: tuple[int, int, int, int],
+    c_out: int,
+    *,
+    interpret: bool,
+    repeats: int = 3,
+    seed: int = 0,
+) -> list[dict]:
+    rng = np.random.default_rng(seed)
+    B, H, W, N = input_shape
+    x = jnp.asarray(rng.standard_normal((B, H, W, N)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((dims.kernel, dims.kernel, N, c_out)), jnp.float32)
+    rows = []
+    for name, cfg in _variants(interpret):
+        row = {"variant": name}
+        for mode in MODES:
+            try:
+                fn, make_args = make_timed_fn(cfg, dims, mode, interpret)
+                row[f"{mode}_ms"] = time_one(fn, make_args(x, w), repeats) * 1e3
+            except Exception as e:
+                row[f"{mode}_ms"] = None
+                row[f"{mode}_error"] = f"{type(e).__name__}: {e}"[:200]
+        rows.append(row)
+    return rows
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one gan_zoo arch (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + first layer per arch (CI-sized)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_train_step.json")
+    args = ap.parse_args(argv)
+
+    interpret = jax.default_backend() != "tpu"
+    archs = [args.arch] if args.arch else sorted(GAN_LAYERS)
+    report = {
+        "backend": jax.default_backend(),
+        "interpret": interpret,
+        "smoke": args.smoke,
+        "modes": list(MODES),
+        "layers": [],
+    }
+    for arch in archs:
+        layers = GAN_LAYERS[arch]
+        if args.smoke:
+            layers = layers[:1]
+        for li, l in enumerate(layers):
+            if args.smoke:  # shrink to seconds-scale on CPU interpret
+                # 32 channels keeps the per-step G-transform + pack delta
+                # (the thing prepacking removes) above the CPU timing noise
+                shape = (1, min(l.h_in, 4), min(l.w_in, 4), min(l.n_in, 32))
+                c_out = min(l.m_out, 32)
+            else:
+                shape = (l.batch, l.h_in, l.w_in, l.n_in)
+                c_out = l.m_out
+            rows = bench_layer(
+                l.dims, shape, c_out, interpret=interpret, repeats=args.repeats
+            )
+            entry = {
+                "arch": arch, "layer": li,
+                "dims": {"kernel": l.dims.kernel, "stride": l.dims.stride,
+                         "padding": l.dims.padding, "output_padding": l.dims.output_padding},
+                "input": list(shape), "c_out": c_out,
+                "variants": rows,
+            }
+            report["layers"].append(entry)
+            for r in rows:
+                cells = ",".join(
+                    f"{m}={r[f'{m}_ms']:.2f}" if r[f"{m}_ms"] is not None else f"{m}=FAIL"
+                    for m in MODES
+                )
+                print(f"train_step,{arch},layer{li},{r['variant']},{cells}")
+
+    # headline: does the prepacked fused path beat the unpacked one end-to-end?
+    speedups = []
+    for entry in report["layers"]:
+        v = {r["variant"]: r for r in entry["variants"]}
+        a = v.get("pallas_fused_pre", {}).get("step_ms")
+        b = v.get("pallas_fused_pre_prepacked", {}).get("step_ms")
+        if a and b:
+            speedups.append(a / b)
+    if speedups:
+        report["prepacked_step_speedup_geomean"] = float(
+            np.exp(np.mean(np.log(speedups)))
+        )
+        print(
+            "train_step,summary,prepacked_fused_step_speedup_geomean="
+            f"{report['prepacked_step_speedup_geomean']:.3f}"
+        )
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"train_step,wrote,{args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

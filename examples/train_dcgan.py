@@ -21,7 +21,11 @@ def main():
     ap.add_argument("--width-div", type=int, default=8)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_dcgan_ckpt")
     ap.add_argument("--impl", default="ref",
-                    choices=["ref", "pallas_interpret", "tdc", "zero_padded", "lax"])
+                    choices=["ref", "pallas_interpret", "tdc", "zero_padded", "lax",
+                             # Winograd-domain training: params are the packed
+                             # transformed weights, bwd = Pallas engines
+                             "prepacked_ref", "pallas_prepacked_interpret",
+                             "pallas_fused_pre_prepacked_interpret"])
     args = ap.parse_args()
 
     cfg = DCGAN

@@ -4,17 +4,24 @@ The paper fixes its tiling (T_m=4, T_n=128) by an analytic roofline DSE
 (Sec. IV-C, reproduced in benchmarks/dse.py and following Ahmad & Pasha,
 arXiv:1903.01811); on TPU the analytic model mispredicts because Mosaic's
 scheduling and VMEM double-buffering are opaque, so we *measure*: enumerate
-(block_t | block_ty, block_n, block_m) x {fused, unfused pre-PE} and time
-the jitted engine end-to-end.
+(block_t | block_ty, block_n, block_m) x {fused, unfused pre-PE} — and,
+since PR 2, the backward engines' block sizes — and time the jitted engine
+end-to-end.
 
 Entry points:
-  candidate_configs(...)  -> the default sweep grid
+  candidate_configs(...)  -> the default sweep grid (optional bwd axes)
   autotune_deconv(...)    -> timed sweep for one (dims, input shape) cell,
-                             sorted fastest-first
+                             sorted fastest-first; mode selects what is
+                             timed: "fwd" (inference), "grad"
+                             (value_and_grad, exercising the Pallas backward
+                             engines), or "step" (full AdamW update —
+                             prepacked configs keep the whole step in the
+                             Winograd domain)
   best_config(...)        -> just the winner
 
-Used by benchmarks/dse.py (reports the sweep next to the analytic model)
-and benchmarks/hillclimb.py (--autotune-deconv).  On CPU the kernels run in
+Used by benchmarks/dse.py (reports the sweep next to the analytic model),
+benchmarks/train_step.py (the train-step benchmark) and
+benchmarks/hillclimb.py (--autotune-deconv).  On CPU the kernels run in
 interpret mode — timings there order host-loop overheads, not MXU work, so
 they validate the machinery; on a real TPU backend the same sweep measures
 the thing the paper's DSE approximates.
@@ -23,31 +30,42 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Iterable, Sequence
+from typing import Iterable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tdc import DeconvDims
+from repro.optim import adamw_init, adamw_update
 
 from . import ops
 
 __all__ = [
     "EngineConfig", "candidate_configs", "small_candidates",
-    "autotune_deconv", "best_config",
+    "autotune_deconv", "best_config", "make_timed_fn", "time_one",
 ]
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """One point of the engine design space."""
+    """One point of the engine design space.
+
+    ``bwd_block_*`` tile the backward engines (None mirrors the forward
+    choice); ``prepack`` times the prepacked-weights path (G-transform +
+    pack hoisted out of the step entirely).
+    """
 
     fuse_pre: bool
     block_t: int = 128  # unfused: flat tile-axis block
     block_ty: int = 8  # fused: tile-row block (T block = block_ty * tx)
     block_n: int = 128
     block_m: int = 128
+    bwd_block_t: Optional[int] = None
+    bwd_block_ty: Optional[int] = None
+    bwd_block_n: Optional[int] = None
+    bwd_block_m: Optional[int] = None
+    prepack: bool = False
 
     def kwargs(self) -> dict:
         return dict(
@@ -56,6 +74,10 @@ class EngineConfig:
             block_ty=self.block_ty,
             block_n=self.block_n,
             block_m=self.block_m,
+            bwd_block_t=self.bwd_block_t,
+            bwd_block_ty=self.bwd_block_ty,
+            bwd_block_n=self.bwd_block_n,
+            bwd_block_m=self.bwd_block_m,
         )
 
 
@@ -65,23 +87,45 @@ def candidate_configs(
     block_ty: Sequence[int] = (4, 8, 16),
     block_n: Sequence[int] = (128, 256),
     block_m: Sequence[int] = (128, 256),
+    bwd_block_t: Sequence[Optional[int]] = (None,),
+    bwd_block_ty: Sequence[Optional[int]] = (None,),
+    bwd_block_n: Sequence[Optional[int]] = (None,),
+    bwd_block_m: Sequence[Optional[int]] = (None,),
     include_fused: bool = True,
     include_unfused: bool = True,
+    prepack: bool = False,
 ) -> list[EngineConfig]:
-    """The default sweep grid over block sizes and the pre-PE fusion choice."""
+    """The default sweep grid over block sizes and the pre-PE fusion choice.
+
+    The backward axes default to a single None (mirror-forward) point so
+    forward-only sweeps stay the same size; pass explicit lists (e.g.
+    ``bwd_block_n=(64, 128, 256)``) to sweep the backward engines too.
+    """
     out: list[EngineConfig] = []
     for bn in block_n:
         for bm in block_m:
-            if include_unfused:
-                out.extend(
-                    EngineConfig(False, block_t=bt, block_n=bn, block_m=bm)
-                    for bt in block_t
-                )
-            if include_fused:
-                out.extend(
-                    EngineConfig(True, block_ty=bty, block_n=bn, block_m=bm)
-                    for bty in block_ty
-                )
+            for bbn in bwd_block_n:
+                for bbm in bwd_block_m:
+                    if include_unfused:
+                        out.extend(
+                            EngineConfig(
+                                False, block_t=bt, block_n=bn, block_m=bm,
+                                bwd_block_t=bbt, bwd_block_n=bbn,
+                                bwd_block_m=bbm, prepack=prepack,
+                            )
+                            for bt in block_t
+                            for bbt in bwd_block_t
+                        )
+                    if include_fused:
+                        out.extend(
+                            EngineConfig(
+                                True, block_ty=bty, block_n=bn, block_m=bm,
+                                bwd_block_ty=bbty, bwd_block_n=bbn,
+                                bwd_block_m=bbm, prepack=prepack,
+                            )
+                            for bty in block_ty
+                            for bbty in bwd_block_ty
+                        )
     return out
 
 
@@ -96,7 +140,7 @@ def small_candidates() -> list[EngineConfig]:
     ]
 
 
-def _time_one(fn, args, repeats: int) -> float:
+def time_one(fn, args, repeats: int) -> float:
     y = fn(*args)
     jax.block_until_ready(y)  # compile + warm
     best = float("inf")
@@ -105,6 +149,61 @@ def _time_one(fn, args, repeats: int) -> float:
         jax.block_until_ready(fn(*args))
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def make_timed_fn(cfg: Optional[EngineConfig], dims: DeconvDims, mode: str, interpret: bool):
+    """Build the callable the sweep times, per mode x variant.
+
+    ``cfg=None`` times the pure-JAX reference path (no Pallas, no packing);
+    ``cfg.prepack`` hoists the G-transform + pack out of the timed region.
+    Returns (fn, make_args) where make_args(x, w) produces fn's argument
+    tuple.  The three variants differ only in the forward callable and which
+    leaf of the params the optimizer updates.
+    """
+    if cfg is None:
+        from repro.core.winograd_deconv import winograd_deconv2d
+
+        fwd = lambda x, p: winograd_deconv2d(x, p, dims)
+        make_params = lambda w: w
+        get_leaf = lambda p: p
+        set_leaf = lambda p, leaf: leaf
+    elif cfg.prepack:
+        kw = dict(interpret=interpret, **cfg.kwargs())
+        fwd = lambda x, p: ops.winograd_deconv2d_packed(x, p, dims, **kw)
+        make_params = lambda w: ops.prepack(w, dims)
+        get_leaf = lambda p: p.ww
+        set_leaf = lambda p, leaf: ops.PackedDeconv(leaf, p.inv)
+    else:
+        kw = dict(interpret=interpret, **cfg.kwargs())
+        fwd = lambda x, p: ops.winograd_deconv2d_fused(x, p, dims, **kw)
+        make_params = lambda w: w
+        get_leaf = lambda p: p
+        set_leaf = lambda p, leaf: leaf
+
+    def loss(x, p):
+        return jnp.sum(fwd(x, p).astype(jnp.float32) ** 2)
+
+    if mode == "fwd":
+        fn = jax.jit(fwd)
+    elif mode == "grad":
+        fn = jax.jit(jax.value_and_grad(loss, argnums=1))
+    elif mode == "step":
+        def step(x, p, opt):
+            _, g = jax.value_and_grad(loss, argnums=1)(x, p)
+            leaf2, opt2, _ = adamw_update(get_leaf(p), get_leaf(g), opt, lr=1e-3)
+            return set_leaf(p, leaf2), opt2
+
+        fn = jax.jit(step)
+    else:
+        raise ValueError(mode)
+
+    def make_args(x, w):
+        p = make_params(w)
+        if mode == "step":
+            return (x, p, adamw_init(get_leaf(p)))
+        return (x, p)
+
+    return fn, make_args
 
 
 def autotune_deconv(
@@ -117,13 +216,18 @@ def autotune_deconv(
     interpret: bool | None = None,
     repeats: int = 3,
     seed: int = 0,
+    mode: str = "fwd",
 ) -> list[dict]:
     """Time every candidate engine config for one deconv layer.
 
-    Returns a list of rows {config, ms, ok, error} sorted fastest-first;
-    configs that fail to compile/run are kept (ok=False) so sweeps surface
+    ``mode='fwd'`` times inference; ``'grad'`` times value_and_grad (the
+    Pallas backward engines); ``'step'`` times a full AdamW update.  Returns
+    a list of rows {config, ms, ok, error} sorted fastest-first; configs
+    that fail to compile/run are kept (ok=False) so sweeps surface
     infeasible corners instead of hiding them.
     """
+    if mode not in ("fwd", "grad", "step"):  # fail fast: a bad mode is a
+        raise ValueError(mode)  # caller error, not a per-config infeasibility
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if candidates is None:
@@ -136,11 +240,10 @@ def autotune_deconv(
     )
     rows: list[dict] = []
     for cfg in candidates:
-        fn = lambda x, w, cfg=cfg: ops.winograd_deconv2d_fused(
-            x, w, dims, interpret=interpret, **cfg.kwargs()
-        )
         try:
-            dt = _time_one(fn, (x, w), repeats)
+            fn, make_args = make_timed_fn(cfg, dims, mode, interpret)
+            args = make_args(x, w)
+            dt = time_one(fn, args, repeats)
             rows.append({"config": cfg, "ms": dt * 1e3, "ok": True, "error": ""})
         except Exception as e:  # infeasible block shape, OOM, ...
             rows.append(

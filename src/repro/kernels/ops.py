@@ -1,14 +1,25 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``winograd_deconv2d_fused`` is the production entry point: same signature and
-semantics as core.winograd_deconv2d but with the Winograd-domain engine
-running as a fused Pallas kernel.  ``backend='ref'`` dispatches to the
-pure-jnp oracle instead (useful under jit on CPU); ``interpret=True`` runs
-the real kernel body in interpret mode (correctness on CPU).
+Two entry points:
+
+``winograd_deconv2d_fused`` — same signature and semantics as
+core.winograd_deconv2d but with the Winograd-domain engine running as a
+fused Pallas kernel.  ``backend='ref'`` dispatches to the pure-jnp oracle
+instead (useful under jit on CPU); ``interpret=True`` runs the real kernel
+body in interpret mode (correctness on CPU).
+
+``prepack`` + ``winograd_deconv2d_packed`` — the production training/serving
+path.  ``prepack`` runs the G-transform and zero-skipping pack ONCE,
+returning a :class:`PackedDeconv` pytree; ``winograd_deconv2d_packed``
+consumes it directly, so a training step (or a serving call) never re-runs
+``transform_weights``/``pack_weights``.  Gradients w.r.t. the packed weights
+are produced by the Pallas backward engines — the whole step stays in the
+Winograd domain.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -19,9 +30,31 @@ from repro.core.winograd import get_transform
 from repro.core.winograd_deconv import transform_input_tiles, transform_weights
 
 from . import ref as _ref
-from .winograd_deconv import winograd_domain_engine, winograd_fused_pre_engine
+from .winograd_deconv import (
+    winograd_domain_engine,
+    winograd_domain_engine_bwd_w,
+    winograd_domain_engine_bwd_x,
+    winograd_fused_pre_engine,
+    winograd_fused_pre_engine_bwd_w,
+    winograd_fused_pre_engine_bwd_x,
+)
 
-__all__ = ["pack_weights", "winograd_deconv2d_fused", "packed_layout", "cells_layout"]
+__all__ = [
+    "pack_weights",
+    "winograd_deconv2d_fused",
+    "winograd_deconv2d_packed",
+    "packed_layout",
+    "cells_layout",
+    "PackedDeconv",
+    "prepack",
+    "INTERPRET_BLOCKS",
+    "INTERPRET_BLOCKS_FUSED",
+]
+
+# CPU-feasible tilings for interpret-mode runs (models' *_interpret impls
+# and the CPU benchmark profiles share these — keep them in one place).
+INTERPRET_BLOCKS = dict(block_t=16, block_n=8, block_m=8)
+INTERPRET_BLOCKS_FUSED = dict(block_ty=4, block_n=8, block_m=8)
 
 
 @functools.lru_cache(maxsize=None)
@@ -57,53 +90,101 @@ def packed_layout(dims: DeconvDims, m: int = 2, r: int = 3):
     return tuple(pos_idx), tuple(sub_slices), inv_packed, keeps
 
 
+@functools.lru_cache(maxsize=None)
+def _pack_gather_idx(dims: DeconvDims, m: int, r: int) -> np.ndarray:
+    """Packed row -> flat (S*S*n*n) index into the transformed weight tensor.
+
+    Precomputing this collapses the per-position Python loop of gathers in
+    ``pack_weights`` into a single ``jnp.take`` — one gather op in the trace
+    regardless of C, instead of C stacked slices."""
+    pos_idx, sub_slices, _, _ = packed_layout(dims, m, r)
+    n2 = get_transform(m, r).n ** 2
+    idx = np.empty(len(pos_idx), np.int32)
+    for s, (lo, hi) in enumerate(sub_slices):
+        idx[lo:hi] = s * n2 + np.asarray(pos_idx[lo:hi], np.int32)
+    return idx
+
+
 def pack_weights(w: jax.Array, dims: DeconvDims, m: int = 2, r: int = 3) -> jax.Array:
     """Deconv weights (K_D,K_D,N,M) -> packed Winograd-domain (C, N, M).
 
     Only the C(K_C) structurally nonzero positions are stored (paper Fig. 5's
-    reorganized filter layout with zero rows removed).
+    reorganized filter layout with zero rows removed), selected by one
+    precomputed index array.
     """
-    pos_idx, sub_slices, _, keeps = packed_layout(dims, m, r)
-    ww = transform_weights(w, dims, m, r)  # (S,S,n,n,N,M)
-    n = get_transform(m, r).n
-    rows = []
-    i = 0
-    for ry in range(dims.stride):
-        for rx in range(dims.stride):
-            for u, v in keeps[i]:
-                rows.append(ww[ry, rx, u, v])
-            i += 1
-    if not rows:
+    idx = _pack_gather_idx(dims, m, r)
+    if idx.size == 0:
         return jnp.zeros((0, *w.shape[2:]), w.dtype)
-    return jnp.stack(rows).astype(w.dtype)
+    ww = transform_weights(w, dims, m, r)  # (S,S,n,n,N,M)
+    flat = ww.reshape(-1, *ww.shape[4:])  # (S*S*n*n, N, M)
+    return jnp.take(flat, jnp.asarray(idx), axis=0).astype(w.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
-def _engine_vjp(xw, ww, inv, pos_idx, sub_slices, m2, interpret, bt, bn, bm):
-    """Engine with a custom VJP: forward = Pallas kernel, backward = the VJP
-    of the mathematically-identical reference contraction (pallas_call has no
-    autodiff rule; the two paths are the same linear map)."""
+class PackedDeconv(NamedTuple):
+    """Pre-packed Winograd-domain deconv weights (a pytree).
+
+    ``ww`` is the trainable leaf — its cotangent comes straight out of the
+    Pallas backward engine, so optimizing it keeps the whole training step in
+    the Winograd domain.  ``inv`` is the static packed inverse-transform
+    (gradient always zero); it rides along so apply sites need no layout
+    lookup.
+    """
+
+    ww: jax.Array  # (C, N, M) packed transformed weights
+    inv: jax.Array  # (C, m2) fp32 inverse-transform rows
+
+
+def prepack(w: jax.Array, dims: DeconvDims, m: int = 2, r: int = 3) -> PackedDeconv:
+    """One-time G-transform + zero-skipping pack of raw deconv weights."""
+    _, _, inv_np, _ = packed_layout(dims, m, r)
+    return PackedDeconv(pack_weights(w, dims, m, r), jnp.asarray(inv_np))
+
+
+# ------------------------------------------------------------------ VJPs
+# Forward = Pallas engine; backward = the Pallas backward engines (both
+# cotangents are packed Winograd-domain contractions on the same grid
+# machinery — see kernels/winograd_deconv.py).  ref.py never runs here.
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11, 12)
+)
+def _engine_vjp(
+    xw, ww, inv, pos_idx, sub_slices, m2, interpret, bt, bn, bm,
+    bwd_bt, bwd_bn, bwd_bm,
+):
     return winograd_domain_engine(
         xw, ww, inv, pos_idx=pos_idx, sub_slices=sub_slices, m2=m2,
         interpret=interpret, block_t=bt, block_n=bn, block_m=bm,
     )
 
 
-def _engine_fwd(xw, ww, inv, pos_idx, sub_slices, m2, interpret, bt, bn, bm):
-    y = _engine_vjp(xw, ww, inv, pos_idx, sub_slices, m2, interpret, bt, bn, bm)
+def _engine_fwd(
+    xw, ww, inv, pos_idx, sub_slices, m2, interpret, bt, bn, bm,
+    bwd_bt, bwd_bn, bwd_bm,
+):
+    y = _engine_vjp(
+        xw, ww, inv, pos_idx, sub_slices, m2, interpret, bt, bn, bm,
+        bwd_bt, bwd_bn, bwd_bm,
+    )
     return y, (xw, ww, inv)
 
 
-def _engine_bwd(pos_idx, sub_slices, m2, interpret, bt, bn, bm, res, g):
+def _engine_bwd(
+    pos_idx, sub_slices, m2, interpret, bt, bn, bm, bwd_bt, bwd_bn, bwd_bm,
+    res, g,
+):
     xw, ww, inv = res
-    _, vjp = jax.vjp(
-        lambda a, b: _ref.engine_ref(
-            a, b, inv, pos_idx=pos_idx, sub_slices=sub_slices, m2=m2
-        ),
-        xw, ww,
+    dxw = winograd_domain_engine_bwd_x(
+        g, ww, inv, pos_idx=pos_idx, sub_slices=sub_slices, m2=m2,
+        n2=xw.shape[1], interpret=interpret,
+        block_t=bwd_bt, block_n=bwd_bn, block_m=bwd_bm,
     )
-    dxw, dww = vjp(g)
-    return dxw, dww, jnp.zeros_like(inv)
+    dww = winograd_domain_engine_bwd_w(
+        xw, g, inv, pos_idx=pos_idx, sub_slices=sub_slices, m2=m2,
+        interpret=interpret, block_t=bwd_bt, block_n=bwd_bn, block_m=bwd_bm,
+    )
+    return dxw.astype(xw.dtype), dww.astype(ww.dtype), jnp.zeros_like(inv)
 
 
 _engine_vjp.defvjp(_engine_fwd, _engine_bwd)
@@ -130,14 +211,15 @@ def cells_layout(x_pad: jax.Array, ty: int, tx: int, m: int, n: int) -> jax.Arra
 
 
 @functools.partial(
-    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14)
+    jax.custom_vjp,
+    nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17),
 )
 def _fused_pre_vjp(
     cells, ww, inv, bt_mat, pos_idx, sub_slices, m, n, ty, tx, m2,
-    interpret, bty, bn, bm,
+    interpret, bty, bn, bm, bwd_bty, bwd_bn, bwd_bm,
 ):
-    """Fused pre-PE engine with a custom VJP (backward = VJP of the
-    mathematically-identical reference contraction, as for _engine_vjp)."""
+    """Fused pre-PE engine with a custom VJP; both cotangents run as fused
+    Pallas kernels too (the input cotangent emits the cell layout directly)."""
     return winograd_fused_pre_engine(
         cells, ww, inv, bt_mat,
         pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, tx=tx, m2=m2,
@@ -147,28 +229,33 @@ def _fused_pre_vjp(
 
 def _fused_pre_fwd(
     cells, ww, inv, bt_mat, pos_idx, sub_slices, m, n, ty, tx, m2,
-    interpret, bty, bn, bm,
+    interpret, bty, bn, bm, bwd_bty, bwd_bn, bwd_bm,
 ):
     y = _fused_pre_vjp(
         cells, ww, inv, bt_mat, pos_idx, sub_slices, m, n, ty, tx, m2,
-        interpret, bty, bn, bm,
+        interpret, bty, bn, bm, bwd_bty, bwd_bn, bwd_bm,
     )
     return y, (cells, ww, inv)
 
 
 def _fused_pre_bwd(
-    bt_mat, pos_idx, sub_slices, m, n, ty, tx, m2, interpret, bty, bn, bm, res, g
+    bt_mat, pos_idx, sub_slices, m, n, ty, tx, m2, interpret, bty, bn, bm,
+    bwd_bty, bwd_bn, bwd_bm, res, g,
 ):
     cells, ww, inv = res
-    _, vjp = jax.vjp(
-        lambda a, b: _ref.fused_pre_engine_ref(
-            a, b, inv, bt_mat,
-            pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, tx=tx, m2=m2,
-        ),
-        cells, ww,
+    gy, gx = cells.shape[1], cells.shape[2]
+    dcells = winograd_fused_pre_engine_bwd_x(
+        g, ww, inv, bt_mat,
+        pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, tx=tx,
+        gy=gy, gx=gx, m2=m2, interpret=interpret,
+        block_ty=bwd_bty, block_n=bwd_bn, block_m=bwd_bm,
     )
-    dcells, dww = vjp(g)
-    return dcells, dww, jnp.zeros_like(inv)
+    dww = winograd_fused_pre_engine_bwd_w(
+        cells, g, inv, bt_mat,
+        pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, tx=tx, m2=m2,
+        interpret=interpret, block_ty=bwd_bty, block_n=bwd_bn, block_m=bwd_bm,
+    )
+    return dcells.astype(cells.dtype), dww.astype(ww.dtype), jnp.zeros_like(inv)
 
 
 _fused_pre_vjp.defvjp(_fused_pre_fwd, _fused_pre_bwd)
@@ -179,6 +266,107 @@ _fused_pre_vjp.defvjp(_fused_pre_fwd, _fused_pre_bwd)
     static_argnames=(
         "dims", "m", "r", "backend", "interpret", "fuse_pre",
         "block_t", "block_n", "block_m", "block_ty",
+        "bwd_block_t", "bwd_block_n", "bwd_block_m", "bwd_block_ty",
+    ),
+)
+def winograd_deconv2d_packed(
+    x: jax.Array,
+    packed: PackedDeconv,
+    dims: DeconvDims,
+    *,
+    m: int = 2,
+    r: int = 3,
+    backend: str = "pallas",
+    interpret: bool = False,
+    fuse_pre: bool = False,
+    block_t: int = 128,
+    block_n: int = 128,
+    block_m: int = 128,
+    block_ty: int = 8,
+    bwd_block_t: int | None = None,
+    bwd_block_n: int | None = None,
+    bwd_block_m: int | None = None,
+    bwd_block_ty: int | None = None,
+) -> jax.Array:
+    """Winograd DeConv from pre-packed weights.  x: (B,H,W,N).
+
+    The apply half of the prepack-then-apply API: no G-transform, no pack —
+    the packed (C, N, M) weights go straight to the engine, and ``jax.grad``
+    w.r.t. ``packed.ww`` comes straight out of the Pallas backward engine
+    (training in the Winograd domain).  ``bwd_block_*`` tile the backward
+    kernels; ``None`` mirrors the forward choice.
+    """
+    tf = get_transform(m, r)
+    B, H, W, N = x.shape
+    M = packed.ww.shape[-1]
+    S = dims.stride
+    HO, WO = dims.out_size(H), dims.out_size(W)
+    hj, wj = dims.j_extent(H), dims.j_extent(W)
+    ty, tx = -(-hj // m), -(-wj // m)
+    kc = dims.kc
+
+    pos_idx, sub_slices, _, _ = packed_layout(dims, m, r)
+    x_pad = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (kc - 1, max(0, m * (ty - 1) + tf.n - (H + kc - 1))),
+            (kc - 1, max(0, m * (tx - 1) + tf.n - (W + kc - 1))),
+            (0, 0),
+        ),
+    )
+    m2 = m * m
+    bwd_t = block_t if bwd_block_t is None else bwd_block_t
+    bwd_n = block_n if bwd_block_n is None else bwd_block_n
+    bwd_m = block_m if bwd_block_m is None else bwd_block_m
+    bwd_ty = block_ty if bwd_block_ty is None else bwd_block_ty
+    if fuse_pre:
+        cells = cells_layout(x_pad, ty, tx, m, tf.n).astype(x.dtype)
+        bt_mat = tuple(tuple(float(v) for v in row) for row in tf.BT)
+        if backend == "pallas":
+            y = _fused_pre_vjp(
+                cells, packed.ww, packed.inv, bt_mat, pos_idx, sub_slices,
+                m, tf.n, ty, tx, m2, interpret, block_ty, block_n, block_m,
+                bwd_ty, bwd_n, bwd_m,
+            )
+        elif backend == "ref":
+            y = _ref.fused_pre_engine_ref(
+                cells, packed.ww, packed.inv, bt_mat,
+                pos_idx=pos_idx, sub_slices=sub_slices,
+                m=m, n=tf.n, ty=ty, tx=tx, m2=m2,
+            )
+        else:
+            raise ValueError(backend)
+        y = y.reshape(B * ty * tx, -1, M)
+    else:
+        xw = transform_input_tiles(x_pad, (ty, tx), m, r).astype(x.dtype)
+        xw_mat = xw.reshape(B * ty * tx, tf.n * tf.n, N)
+        if backend == "pallas":
+            y = _engine_vjp(
+                xw_mat, packed.ww, packed.inv, pos_idx, sub_slices, m2,
+                interpret, block_t, block_n, block_m, bwd_t, bwd_n, bwd_m,
+            )
+        elif backend == "ref":
+            y = _ref.engine_ref(
+                xw_mat, packed.ww, packed.inv,
+                pos_idx=pos_idx, sub_slices=sub_slices, m2=m2,
+            )
+        else:
+            raise ValueError(backend)
+
+    # (T, S2*m2, M) -> (S,S,B,Ty*m,Tx*m,M) -> interleave
+    y = y.reshape(B, ty, tx, S, S, m, m, M)
+    y = jnp.transpose(y, (3, 4, 0, 1, 5, 2, 6, 7)).reshape(S, S, B, ty * m, tx * m, M)
+    y = y[:, :, :, :hj, :wj, :].astype(x.dtype)
+    return interleave_crop(y, dims, (HO, WO))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "dims", "m", "r", "backend", "interpret", "fuse_pre",
+        "block_t", "block_n", "block_m", "block_ty",
+        "bwd_block_t", "bwd_block_n", "bwd_block_m", "bwd_block_ty",
     ),
 )
 def winograd_deconv2d_fused(
@@ -195,6 +383,10 @@ def winograd_deconv2d_fused(
     block_n: int = 128,
     block_m: int = 128,
     block_ty: int = 8,
+    bwd_block_t: int | None = None,
+    bwd_block_n: int | None = None,
+    bwd_block_m: int | None = None,
+    bwd_block_ty: int | None = None,
 ) -> jax.Array:
     """Winograd DeConv with the Pallas engine. x:(B,H,W,N) w:(KD,KD,N,M).
 
@@ -204,64 +396,14 @@ def winograd_deconv2d_fused(
     intermediate never materializes in HBM.  ``block_ty`` is the fused
     variant's tile-row block (its T block is block_ty * tx tiles);
     ``block_t`` blocks the unfused variant's flat tile axis.
+
+    This convenience wrapper re-packs ``w`` on every call; hot paths should
+    ``prepack`` once and call ``winograd_deconv2d_packed``.
     """
-    tf = get_transform(m, r)
-    B, H, W, N = x.shape
-    M = w.shape[-1]
-    S = dims.stride
-    HO, WO = dims.out_size(H), dims.out_size(W)
-    hj, wj = dims.j_extent(H), dims.j_extent(W)
-    ty, tx = -(-hj // m), -(-wj // m)
-    kc = dims.kc
-
-    pos_idx, sub_slices, inv_np, _ = packed_layout(dims, m, r)
-    ww_packed = pack_weights(w, dims, m, r)
-    x_pad = jnp.pad(
-        x,
-        (
-            (0, 0),
-            (kc - 1, max(0, m * (ty - 1) + tf.n - (H + kc - 1))),
-            (kc - 1, max(0, m * (tx - 1) + tf.n - (W + kc - 1))),
-            (0, 0),
-        ),
+    return winograd_deconv2d_packed(
+        x, prepack(w, dims, m, r), dims,
+        m=m, r=r, backend=backend, interpret=interpret, fuse_pre=fuse_pre,
+        block_t=block_t, block_n=block_n, block_m=block_m, block_ty=block_ty,
+        bwd_block_t=bwd_block_t, bwd_block_n=bwd_block_n,
+        bwd_block_m=bwd_block_m, bwd_block_ty=bwd_block_ty,
     )
-    inv = jnp.asarray(inv_np)
-    m2 = m * m
-    if fuse_pre:
-        cells = cells_layout(x_pad, ty, tx, m, tf.n).astype(x.dtype)
-        bt_mat = tuple(tuple(float(v) for v in row) for row in tf.BT)
-        if backend == "pallas":
-            y = _fused_pre_vjp(
-                cells, ww_packed, inv, bt_mat, pos_idx, sub_slices,
-                m, tf.n, ty, tx, m2, interpret, block_ty, block_n, block_m,
-            )
-        elif backend == "ref":
-            y = _ref.fused_pre_engine_ref(
-                cells, ww_packed, inv, bt_mat,
-                pos_idx=pos_idx, sub_slices=sub_slices,
-                m=m, n=tf.n, ty=ty, tx=tx, m2=m2,
-            )
-        else:
-            raise ValueError(backend)
-        y = y.reshape(B * ty * tx, -1, M)
-    else:
-        xw = transform_input_tiles(x_pad, (ty, tx), m, r).astype(x.dtype)
-        xw_mat = xw.reshape(B * ty * tx, tf.n * tf.n, N)
-        if backend == "pallas":
-            y = _engine_vjp(
-                xw_mat, ww_packed, inv, pos_idx, sub_slices, m2,
-                interpret, block_t, block_n, block_m,
-            )
-        elif backend == "ref":
-            y = _ref.engine_ref(
-                xw_mat, ww_packed, inv,
-                pos_idx=pos_idx, sub_slices=sub_slices, m2=m2,
-            )
-        else:
-            raise ValueError(backend)
-
-    # (T, S2*m2, M) -> (S,S,B,Ty*m,Tx*m,M) -> interleave
-    y = y.reshape(B, ty, tx, S, S, m, m, M)
-    y = jnp.transpose(y, (3, 4, 0, 1, 5, 2, 6, 7)).reshape(S, S, B, ty * m, tx * m, M)
-    y = y[:, :, :, :hj, :wj, :].astype(x.dtype)
-    return interleave_crop(y, dims, (HO, WO))

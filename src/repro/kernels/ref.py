@@ -11,7 +11,15 @@ import jax.numpy as jnp
 
 from repro.core.winograd_deconv import winograd_deconv2d as winograd_deconv2d_ref  # noqa: F401
 
-__all__ = ["engine_ref", "fused_pre_engine_ref", "winograd_deconv2d_ref"]
+__all__ = [
+    "engine_ref",
+    "fused_pre_engine_ref",
+    "winograd_deconv2d_ref",
+    "engine_bwd_x_ref",
+    "engine_bwd_w_ref",
+    "fused_pre_engine_bwd_x_ref",
+    "fused_pre_engine_bwd_w_ref",
+]
 
 
 def engine_ref(
@@ -80,3 +88,123 @@ def fused_pre_engine_ref(
         pos_idx=pos_idx, sub_slices=sub_slices, m2=m2,
     )
     return y.reshape(B, ty, tx, -1, M)
+
+
+# ------------------------------------------------------------- backward
+# Oracles for the Pallas backward engines.  Both cotangents of the forward
+# engine are packed Winograd-domain contractions:
+#   gw[p,t,m]  = sum_a inv[p,a] * g[t, s(p)*m2+a, m]
+#   dxw[t,j,n] = sum_{p: pos_p=j} sum_m gw[p,t,m] * ww[p,n,m]
+#   dww[p,n,m] = sum_t xw[t,pos_p,n] * gw[p,t,m]
+
+
+def _gw_ref(g, inv_packed, sub_slices, m2):
+    """Inverse-transform-weighted cotangent (C, T, M) fp32."""
+    parts = []
+    for s, (lo, hi) in enumerate(sub_slices):
+        if hi == lo:
+            continue
+        parts.append(
+            jnp.einsum(
+                "ca,tam->ctm",
+                inv_packed[lo:hi].astype(jnp.float32),
+                g[:, s * m2 : (s + 1) * m2, :].astype(jnp.float32),
+                precision=jax.lax.Precision.HIGHEST,
+            )
+        )
+    return jnp.concatenate(parts, axis=0)
+
+
+def engine_bwd_x_ref(
+    g: jax.Array,  # (T, S2*m2, M)
+    ww_packed: jax.Array,  # (C, N, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m2: int,
+    n2: int,
+) -> jax.Array:
+    """Oracle for the input-tile cotangent: returns (T, n2, N)."""
+    T = g.shape[0]
+    N = ww_packed.shape[1]
+    gw = _gw_ref(g, inv_packed, sub_slices, m2)  # (C, T, M)
+    d = jnp.einsum(
+        "ctm,cnm->tcn", gw, ww_packed.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST,
+    )  # (T, C, N)
+    dxw = jnp.zeros((T, n2, N), jnp.float32)
+    dxw = dxw.at[:, jnp.asarray(pos_idx), :].add(d)  # repeated positions accumulate
+    return dxw.astype(g.dtype)
+
+
+def engine_bwd_w_ref(
+    xw: jax.Array,  # (T, n2, N)
+    g: jax.Array,  # (T, S2*m2, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m2: int,
+) -> jax.Array:
+    """Oracle for the packed-weight cotangent: returns (C, N, M)."""
+    gw = _gw_ref(g, inv_packed, sub_slices, m2)  # (C, T, M)
+    xg = xw[:, jnp.asarray(pos_idx), :].astype(jnp.float32)  # (T, C, N)
+    dww = jnp.einsum("tcn,ctm->cnm", xg, gw, precision=jax.lax.Precision.HIGHEST)
+    return dww.astype(g.dtype)
+
+
+def fused_pre_engine_bwd_x_ref(
+    g: jax.Array,  # (B, ty, tx, S2*m2, M)
+    ww_packed: jax.Array,
+    inv_packed: jax.Array,
+    bt_mat,
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m: int,
+    n: int,
+    ty: int,
+    tx: int,
+    gy: int,
+    gx: int,
+    m2: int,
+) -> jax.Array:
+    """Oracle for the fused engine's cell-layout input cotangent: the VJP of
+    the (linear-in-cells) reference forward, evaluated at zero primal."""
+    cells0 = jnp.zeros((g.shape[0], gy, gx, m * m, ww_packed.shape[1]), g.dtype)
+    _, vjp = jax.vjp(
+        lambda c: fused_pre_engine_ref(
+            c, ww_packed, inv_packed, bt_mat,
+            pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, tx=tx, m2=m2,
+        ),
+        cells0,
+    )
+    return vjp(g)[0]
+
+
+def fused_pre_engine_bwd_w_ref(
+    cells: jax.Array,  # (B, Gy, Gx, m*m, N)
+    g: jax.Array,  # (B, ty, tx, S2*m2, M)
+    inv_packed: jax.Array,
+    bt_mat,
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m: int,
+    n: int,
+    ty: int,
+    tx: int,
+    m2: int,
+) -> jax.Array:
+    """Oracle for the fused engine's packed-weight cotangent (C, N, M)."""
+    C = len(pos_idx)
+    ww0 = jnp.zeros((C, cells.shape[-1], g.shape[-1]), g.dtype)
+    _, vjp = jax.vjp(
+        lambda w: fused_pre_engine_ref(
+            cells, w, inv_packed, bt_mat,
+            pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, tx=tx, m2=m2,
+        ),
+        ww0,
+    )
+    return vjp(g)[0]

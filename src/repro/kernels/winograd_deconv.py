@@ -43,7 +43,14 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 
-__all__ = ["winograd_domain_engine", "winograd_fused_pre_engine"]
+__all__ = [
+    "winograd_domain_engine",
+    "winograd_fused_pre_engine",
+    "winograd_domain_engine_bwd_x",
+    "winograd_domain_engine_bwd_w",
+    "winograd_fused_pre_engine_bwd_x",
+    "winograd_fused_pre_engine_bwd_w",
+]
 
 
 def _com_post_pe(
@@ -192,6 +199,54 @@ def _rup(x: int, mult: int) -> int:
 # ---------------------------------------------------------------------------
 
 
+def _adder_apply(coef: tuple[tuple[float, ...], ...], vals):
+    """out[u] = sum_a coef[u][a] * vals[a] as unrolled scalar multiply-adds
+    (the paper's adder-network transform: for F(2,3) every entry is 0 or ±1,
+    so this is pure VPU adds — and Pallas kernels cannot capture array
+    constants anyway)."""
+    out = []
+    for row in coef:
+        acc = None
+        for a, c in enumerate(row):
+            if c == 0.0:
+                continue
+            term = vals[a] if c == 1.0 else (-vals[a] if c == -1.0 else vals[a] * c)
+            acc = term if acc is None else acc + term
+        out.append(acc if acc is not None else jnp.zeros_like(vals[0]))
+    return out
+
+
+def _cells_to_xw(c0_ref, c1_ref, *, bt_const, m, n, tx, in_dtype):
+    """Fused pre-PE: stitch n x n tiles from m x m cell rows (line buffer)
+    and apply B^T Z B in VMEM.  Returns xw (bty*tx, n*n, N_t) in ``in_dtype``."""
+    bty = c0_ref.shape[1]
+    bn = c0_ref.shape[4]
+    q = -(-n // m)
+    cells = jnp.concatenate([c0_ref[0], c1_ref[0]], axis=0)  # (bty+h, Gxp, m2c, N_t)
+
+    # --- pre-PE step 1: stitch n x n tiles out of m x m cells (line buffer).
+    # Tile (j, t) row a = m*dy + p comes from cell (j+dy, t+dx) row p.
+    rows = []
+    for dy in range(q):
+        cols = []
+        for dx in range(q):
+            piece = cells[dy : dy + bty, dx : dx + tx]  # (bty, tx, m2c, N_t)
+            cols.append(piece.reshape(bty, tx, m, m, bn))
+        rows.append(jnp.concatenate(cols, axis=3))  # (bty, tx, m, q*m, N_t)
+    z = jnp.concatenate(rows, axis=2)[:, :, :n, :n, :]  # (bty, tx, n, n, N_t)
+    z = z.reshape(bty * tx, n, n, bn).astype(jnp.float32)
+
+    # --- pre-PE step 2: B^T Z B via the adder network.
+    zr = _adder_apply(bt_const, [z[:, a, :, :] for a in range(n)])  # (T_t, n, N_t) each
+    xw_uv = []
+    for u in range(n):
+        xw_uv.extend(_adder_apply(bt_const, [zr[u][:, b, :] for b in range(n)]))
+    xw = jnp.stack(xw_uv, axis=1)  # (T_t, n*n, N_t)
+    # Match the unfused path, which stores transformed tiles in the input
+    # dtype before the channel contraction.
+    return xw.astype(in_dtype)
+
+
 def _fused_pre_kernel(
     c0_ref,  # (1, bty, Gxp, m2c, N_t) cell rows [iy*bty, (iy+1)*bty)
     c1_ref,  # (1, h, Gxp, m2c, N_t) halo cell rows [(iy+1)*bty, (iy+1)*bty+h)
@@ -210,51 +265,7 @@ def _fused_pre_kernel(
     n_steps: int,
     in_dtype,
 ):
-    bty = c0_ref.shape[1]
-    bn = c0_ref.shape[4]
-    q = -(-n // m)
-    cells = jnp.concatenate([c0_ref[0], c1_ref[0]], axis=0)  # (bty+h, Gxp, m2c, N_t)
-
-    # --- pre-PE step 1: stitch n x n tiles out of m x m cells (line buffer).
-    # Tile (j, t) row a = m*dy + p comes from cell (j+dy, t+dx) row p.
-    rows = []
-    for dy in range(q):
-        cols = []
-        for dx in range(q):
-            piece = cells[dy : dy + bty, dx : dx + tx]  # (bty, tx, m2c, N_t)
-            cols.append(piece.reshape(bty, tx, m, m, bn))
-        rows.append(jnp.concatenate(cols, axis=3))  # (bty, tx, m, q*m, N_t)
-    z = jnp.concatenate(rows, axis=2)[:, :, :n, :n, :]  # (bty, tx, n, n, N_t)
-    z = z.reshape(bty * tx, n, n, bn).astype(jnp.float32)
-
-    # --- pre-PE step 2: B^T Z B as unrolled scalar multiply-adds (the
-    # paper's adder-network pre-PE: for F(2,3) every B^T entry is 0 or ±1,
-    # so this is pure VPU adds — and Pallas kernels cannot capture array
-    # constants anyway).
-    def _bt_apply(vals):  # vals: list of n arrays; returns list of n arrays
-        out = []
-        for u in range(n):
-            acc = None
-            for a in range(n):
-                coef = bt_const[u][a]
-                if coef == 0.0:
-                    continue
-                term = vals[a] if coef == 1.0 else (
-                    -vals[a] if coef == -1.0 else vals[a] * coef
-                )
-                acc = term if acc is None else acc + term
-            out.append(acc if acc is not None else jnp.zeros_like(vals[0]))
-        return out
-
-    zr = _bt_apply([z[:, a, :, :] for a in range(n)])  # rows: (T_t, n, N_t) each
-    xw_uv = []
-    for u in range(n):
-        xw_uv.extend(_bt_apply([zr[u][:, b, :] for b in range(n)]))
-    xw = jnp.stack(xw_uv, axis=1)  # (T_t, n*n, N_t)
-    # Match the unfused path, which stores transformed tiles in the input
-    # dtype before the channel contraction.
-    xw = xw.astype(in_dtype)
-
+    xw = _cells_to_xw(c0_ref, c1_ref, bt_const=bt_const, m=m, n=n, tx=tx, in_dtype=in_dtype)
     _com_post_pe(
         xw, ww_ref, inv_ref, out_ref, acc_ref,
         pos_idx=pos_idx, sub_slices=sub_slices, m2=m2, n_steps=n_steps,
@@ -366,3 +377,537 @@ def winograd_fused_pre_engine(
     )(cells_p, cells_p, ww_p, inv_packed)
     out = out.reshape(B, n_ty_blocks * bty, tx, S2 * m2, Mp)
     return out[:, :ty, :, :, :M]
+
+
+# ---------------------------------------------------------------------------
+# Backward engines.  Both cotangents of the forward engine are themselves
+# packed Winograd-domain contractions, so they map onto the same grid /
+# BlockSpec machinery as the forward com-PE:
+#
+#   gw[p,t,m]  = sum_a inv[p,a] * g[t, s(p)*m2+a, m]   (post-PE transposed)
+#   dxw[t,j,n] = sum_{p: pos_p=j} sum_m gw[p,t,m] * ww[p,n,m]   (reduce M)
+#   dww[p,n,m] = sum_t xw[t,pos_p,n] * gw[p,t,m]                (reduce T)
+#
+# Structural zeros are skipped exactly as in the forward pass: only the C
+# packed positions ever touch VMEM, and Winograd positions no packed p maps
+# to are written as zeros without compute.
+# ---------------------------------------------------------------------------
+
+
+def _gw_from_cotangent(g, inv_ref, sub_slices, m2):
+    """Per-packed-position weighted cotangent gw (C, T_t, M_t) fp32 from the
+    output cotangent g (T_t, S2*m2, M_t): the transpose of the post-PE sparse
+    inverse transform, one small MXU contraction per sub-filter."""
+    parts = []
+    for s, (lo, hi) in enumerate(sub_slices):
+        if hi == lo:  # structurally empty sub-filter
+            continue
+        gs = g[:, s * m2 : (s + 1) * m2, :]  # (T_t, m2, M_t)
+        inv_s = inv_ref[lo:hi, :].astype(jnp.float32)  # (c_s, m2)
+        parts.append(
+            jax.lax.dot_general(
+                inv_s, gs, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # (c_s, T_t, M_t)
+        )
+    return jnp.concatenate(parts, axis=0)
+
+
+def _scatter_packed_to_winograd(gw, ww_ref, pos_idx, n2):
+    """dxw (T_t, n2, N_t) fp32: per packed position one MXU matmul
+    gw[p] @ ww[p]^T, accumulated into its Winograd position (positions that
+    several sub-filters keep share a row; unkept positions stay zero)."""
+    parts: list = [None] * n2
+    for p, pos in enumerate(pos_idx):
+        w_p = ww_ref[p, :, :].astype(jnp.float32)  # (N_t, M_t)
+        contrib = jax.lax.dot_general(
+            gw[p], w_p, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (T_t, N_t)
+        parts[pos] = contrib if parts[pos] is None else parts[pos] + contrib
+    zero = jnp.zeros((gw.shape[1], ww_ref.shape[1]), jnp.float32)
+    return jnp.stack([v if v is not None else zero for v in parts], axis=1)
+
+
+def _engine_bwd_x_kernel(
+    g_ref,  # (T_t, S2*m2, M_t) output cotangent
+    ww_ref,  # (C, N_t, M_t) packed transformed weights
+    inv_ref,  # (C, m2) fp32
+    out_ref,  # (T_t, n2, N_t) input-tile cotangent
+    acc_ref,  # scratch (T_t, n2, N_t) fp32
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m2: int,
+    n2: int,
+    n_steps: int,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    gw = _gw_from_cotangent(g, inv_ref, sub_slices, m2)  # (C, T_t, M_t)
+    acc_ref[...] += _scatter_packed_to_winograd(gw, ww_ref, pos_idx, n2)
+
+    @pl.when(k == n_steps - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("pos_idx", "sub_slices", "m2", "n2", "block_t", "block_n", "block_m", "interpret"),
+)
+def winograd_domain_engine_bwd_x(
+    g: jax.Array,  # (T, S2*m2, M) cotangent of the forward output
+    ww_packed: jax.Array,  # (C, N, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m2: int,
+    n2: int,
+    block_t: int = 128,
+    block_n: int = 128,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """dL/dxw (T, n2, N) of ``winograd_domain_engine``: the M axis becomes
+    the accumulated grid axis; everything else mirrors the forward engine."""
+    T, s2m2, M = g.shape
+    C, N, _ = ww_packed.shape
+    bt = min(block_t, _rup(T, 8))
+    bn = min(block_n, _rup(N, 128))
+    bm = min(block_m, _rup(M, 128))
+    Tp, Np, Mp = _rup(T, bt), _rup(N, bn), _rup(M, bm)
+    g_p = jnp.pad(g, ((0, Tp - T), (0, 0), (0, Mp - M)))
+    ww_p = jnp.pad(ww_packed, ((0, 0), (0, Np - N), (0, Mp - M)))
+    grid = (Tp // bt, Np // bn, Mp // bm)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _engine_bwd_x_kernel,
+            pos_idx=pos_idx,
+            sub_slices=sub_slices,
+            m2=m2,
+            n2=n2,
+            n_steps=grid[2],
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, s2m2, bm), lambda i, j, k: (i, 0, k)),
+            pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, j, k)),
+            pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, n2, bn), lambda i, j, k: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((Tp, n2, Np), g.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, n2, bn), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(g_p, ww_p, inv_packed)
+    return out[:T, :, :N]
+
+
+def _engine_bwd_w_kernel(
+    xw_ref,  # (T_t, n2, N_t) transformed input tiles
+    g_ref,  # (T_t, S2*m2, M_t) output cotangent
+    inv_ref,  # (C, m2) fp32
+    out_ref,  # (C, N_t, M_t) packed-weight cotangent
+    acc_ref,  # scratch (C, N_t, M_t) fp32
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m2: int,
+    n_steps: int,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    gw = _gw_from_cotangent(g, inv_ref, sub_slices, m2)  # (C, T_t, M_t)
+    xw = xw_ref[...]
+    for p, pos in enumerate(pos_idx):
+        x_p = xw[:, pos, :].astype(jnp.float32)  # (T_t, N_t)
+        acc_ref[p, :, :] += jax.lax.dot_general(
+            x_p, gw[p], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (N_t, M_t)
+
+    @pl.when(k == n_steps - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("pos_idx", "sub_slices", "m2", "block_t", "block_n", "block_m", "interpret"),
+)
+def winograd_domain_engine_bwd_w(
+    xw: jax.Array,  # (T, n2, N)
+    g: jax.Array,  # (T, S2*m2, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m2: int,
+    block_t: int = 128,
+    block_n: int = 128,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """dL/dww_packed (C, N, M) of ``winograd_domain_engine``: the tile axis T
+    becomes the accumulated grid axis (the channel-accumulate of the forward
+    engine, transposed onto the weight cotangent)."""
+    T, n2, N = xw.shape
+    _, s2m2, M = g.shape
+    C = len(pos_idx)
+    bt = min(block_t, _rup(T, 8))
+    bn = min(block_n, _rup(N, 128))
+    bm = min(block_m, _rup(M, 128))
+    Tp, Np, Mp = _rup(T, bt), _rup(N, bn), _rup(M, bm)
+    xw_p = jnp.pad(xw, ((0, Tp - T), (0, 0), (0, Np - N)))
+    g_p = jnp.pad(g, ((0, Tp - T), (0, 0), (0, Mp - M)))
+    grid = (Np // bn, Mp // bm, Tp // bt)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _engine_bwd_w_kernel,
+            pos_idx=pos_idx,
+            sub_slices=sub_slices,
+            m2=m2,
+            n_steps=grid[2],
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, n2, bn), lambda i, j, k: (k, 0, i)),
+            pl.BlockSpec((bt, s2m2, bm), lambda i, j, k: (k, 0, j)),
+            pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((C, Np, Mp), g.dtype),
+        scratch_shapes=[pltpu.VMEM((C, bn, bm), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(xw_p, g_p, inv_packed)
+    return out[:, :N, :M]
+
+
+# ---------------------------------------------------------------------------
+# Fused pre-PE backward: the input cotangent never leaves the Winograd domain
+# either.  dcells = scatter of B (dXw) B^T over the overlapping tiles — the
+# transpose of the forward line buffer.  The halo runs in *reverse*: an
+# output block of cell rows [iy*bty, +bty) receives contributions from tile
+# rows [iy*bty - (q-1), iy*bty + bty), so the tile cotangent is passed twice
+# — once blocked by bty rows and once as a thin (q-1)-row block *preceding*
+# the main block (one leading zero block makes the iy=0 read in-bounds).
+# ---------------------------------------------------------------------------
+
+
+def _fused_pre_bwd_x_kernel(
+    g0_ref,  # (1, bty, tx, S2*m2, M_t) tile-cotangent rows [iy*bty, +bty)
+    g1_ref,  # (1, h, tx, S2*m2, M_t) halo rows [iy*bty - h, iy*bty)
+    ww_ref,  # (C, N_t, M_t)
+    inv_ref,  # (C, m2) fp32
+    out_ref,  # (1, bty, gxc, m*m, N_t) cell-layout input cotangent
+    acc_ref,  # scratch ((h+bty)*tx, n2, N_t) fp32
+    *,
+    b_const: tuple[tuple[float, ...], ...],  # (B^T)^T as a static nested tuple
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m: int,
+    n: int,
+    tx: int,
+    m2: int,
+    n_steps: int,
+):
+    k = pl.program_id(2)
+    bty = out_ref.shape[1]
+    gxc = out_ref.shape[2]
+    h = g1_ref.shape[1]
+    bn = ww_ref.shape[1]
+    q = -(-n // m)
+    n2 = n * n
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g_all = jnp.concatenate([g1_ref[0], g0_ref[0]], axis=0)  # (h+bty, tx, S2m2, M_t)
+    gt = g_all.reshape((h + bty) * tx, g_all.shape[2], g_all.shape[3]).astype(jnp.float32)
+    gw = _gw_from_cotangent(gt, inv_ref, sub_slices, m2)  # (C, T_t, M_t)
+    acc_ref[...] += _scatter_packed_to_winograd(gw, ww_ref, pos_idx, n2)
+
+    @pl.when(k == n_steps - 1)
+    def _finalize():
+        dxw = acc_ref[...].reshape(h + bty, tx, n, n, bn)
+        # dZ = B dXw B^T via the adder network with transposed coefficients.
+        rows = _adder_apply(b_const, [dxw[:, :, u] for u in range(n)])
+        dz = [
+            _adder_apply(b_const, [rows[a][:, :, v] for v in range(n)])
+            for a in range(n)
+        ]  # dz[a][b]: (h+bty, tx, N_t)
+        # Transpose of the tile gather: cell (j, c) intra position (p, qq)
+        # sums dz[m*dy+p][m*dx+qq] of tile (j - dy, c - dx); with tile rows
+        # staged at local offset +h, tile row j - dy sits at slice j + h - dy.
+        cellv = []
+        for p in range(m):
+            for qq in range(m):
+                acc = None
+                for dy in range(q):
+                    if m * dy + p >= n:
+                        continue
+                    for dx in range(q):
+                        if m * dx + qq >= n:
+                            continue
+                        piece = dz[m * dy + p][m * dx + qq][h - dy : h - dy + bty]
+                        pads = []
+                        if dx:
+                            pads.append(jnp.zeros((bty, dx, bn), jnp.float32))
+                        pads.append(piece)
+                        if gxc - tx - dx:
+                            pads.append(jnp.zeros((bty, gxc - tx - dx, bn), jnp.float32))
+                        shifted = pads[0] if len(pads) == 1 else jnp.concatenate(pads, axis=1)
+                        acc = shifted if acc is None else acc + shifted
+                cellv.append(
+                    acc if acc is not None else jnp.zeros((bty, gxc, bn), jnp.float32)
+                )
+        out = jnp.stack(cellv, axis=2)  # (bty, gxc, m*m, N_t)
+        out_ref[...] = out[None].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bt_mat", "pos_idx", "sub_slices", "m", "n", "ty", "tx", "gy", "gx",
+        "m2", "block_ty", "block_n", "block_m", "interpret",
+    ),
+)
+def winograd_fused_pre_engine_bwd_x(
+    g: jax.Array,  # (B, ty, tx, S2*m2, M) cotangent of the fused engine output
+    ww_packed: jax.Array,  # (C, N, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    bt_mat: tuple[tuple[float, ...], ...],  # B^T as a static (n, n) nested tuple
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m: int,
+    n: int,
+    ty: int,
+    tx: int,
+    gy: int,
+    gx: int,
+    m2: int,
+    block_ty: int = 8,
+    block_n: int = 128,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """dL/dcells (B, gy, gx, m*m, N) of ``winograd_fused_pre_engine``.
+
+    Grid (B * (ty_blocks + 1), N_blocks, M_blocks); the extra output block
+    row absorbs the last tile row's q-1 spilled cell rows, and M is the
+    accumulated axis.  The B-transpose adder network and the overlap scatter
+    run in VMEM on the final M step, so the (T, n2, N) tile cotangent never
+    materializes in HBM — the line buffer argument, transposed.
+    """
+    B, _, _, s2m2, M = g.shape
+    C, N, _ = ww_packed.shape
+    q = -(-n // m)
+    bty = min(block_ty, ty)
+    ntb = -(-ty // bty)
+    nob = ntb + 1
+    h = q - 1 if q > 1 and bty % (q - 1) == 0 else bty
+    if h < q - 1:
+        raise ValueError(f"block_ty={block_ty} smaller than the q-1={q-1} halo")
+    bn = min(block_n, _rup(N, 128))
+    bm = min(block_m, _rup(M, 128))
+    Np, Mp = _rup(N, bn), _rup(M, bm)
+    # One leading zero block keeps the preceding-rows halo read in-bounds at
+    # iy=0; trailing zeros back the extra output block row.  (HBM capacity
+    # only — DMA per step is bty + h tile rows.)
+    g_p = jnp.pad(
+        g, ((0, 0), (bty, (nob + 1) * bty - bty - ty), (0, 0), (0, 0), (0, Mp - M))
+    )
+    ww_p = jnp.pad(ww_packed, ((0, 0), (0, Np - N), (0, Mp - M)))
+    grid = (B * nob, Np // bn, Mp // bm)
+    m2c = m * m
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_pre_bwd_x_kernel,
+            b_const=tuple(zip(*bt_mat)),
+            pos_idx=pos_idx,
+            sub_slices=sub_slices,
+            m=m,
+            n=n,
+            tx=tx,
+            m2=m2,
+            n_steps=grid[2],
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, bty, tx, s2m2, bm),
+                lambda i, j, k: (i // nob, i % nob + 1, 0, 0, k),
+            ),
+            pl.BlockSpec(
+                (1, h, tx, s2m2, bm),
+                lambda i, j, k: (i // nob, (i % nob + 1) * (bty // h) - 1, 0, 0, k),
+            ),
+            pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, j, k)),
+            pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bty, gx, m2c, bn), lambda i, j, k: (i // nob, i % nob, 0, 0, j)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, nob * bty, gx, m2c, Np), g.dtype),
+        scratch_shapes=[pltpu.VMEM(((h + bty) * tx, n * n, bn), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(g_p, g_p, ww_p, inv_packed)
+    out = out[:, :, :, :, :N]
+    if out.shape[1] < gy:  # cell rows past the tile extent are structurally zero
+        out = jnp.pad(out, ((0, 0), (0, gy - out.shape[1]), (0, 0), (0, 0), (0, 0)))
+    return out[:, :gy]
+
+
+def _fused_pre_bwd_w_kernel(
+    c0_ref,  # (1, bty, Gxp, m2c, N_t) cell rows (as in the fused forward)
+    c1_ref,  # (1, h, Gxp, m2c, N_t) halo cell rows
+    g_ref,  # (1, bty, tx, S2*m2, M_t) output cotangent for this tile-row block
+    inv_ref,  # (C, m2) fp32
+    out_ref,  # (C, N_t, M_t) packed-weight cotangent
+    acc_ref,  # scratch (C, N_t, M_t) fp32
+    *,
+    bt_const: tuple[tuple[float, ...], ...],  # B^T as a static nested tuple
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m: int,
+    n: int,
+    tx: int,
+    m2: int,
+    n_steps: int,
+    in_dtype,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Recompute the transformed tiles from cells in VMEM (same line-buffer +
+    # adder-network stage as the forward kernel), then contract with the
+    # inverse-weighted cotangent over this block's tiles.
+    xw = _cells_to_xw(c0_ref, c1_ref, bt_const=bt_const, m=m, n=n, tx=tx, in_dtype=in_dtype)
+    g = g_ref[0].reshape(xw.shape[0], g_ref.shape[3], g_ref.shape[4]).astype(jnp.float32)
+    gw = _gw_from_cotangent(g, inv_ref, sub_slices, m2)  # (C, T_t, M_t)
+    for p, pos in enumerate(pos_idx):
+        x_p = xw[:, pos, :].astype(jnp.float32)  # (T_t, N_t)
+        acc_ref[p, :, :] += jax.lax.dot_general(
+            x_p, gw[p], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == n_steps - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bt_mat", "pos_idx", "sub_slices", "m", "n", "ty", "tx", "m2",
+        "block_ty", "block_n", "block_m", "interpret",
+    ),
+)
+def winograd_fused_pre_engine_bwd_w(
+    cells: jax.Array,  # (B, Gy, Gx, m*m, N) the forward's cell-layout input
+    g: jax.Array,  # (B, ty, tx, S2*m2, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    bt_mat: tuple[tuple[float, ...], ...],
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m: int,
+    n: int,
+    ty: int,
+    tx: int,
+    m2: int,
+    block_ty: int = 8,
+    block_n: int = 128,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """dL/dww_packed (C, N, M) of ``winograd_fused_pre_engine``: the grid
+    reduces over (batch x tile-row blocks), re-deriving each block's
+    transformed tiles from the cell layout in VMEM exactly as the forward
+    does (so xw never round-trips through HBM in the backward pass either).
+    """
+    B, Gy, Gx, m2c, N = cells.shape
+    _, _, _, s2m2, M = g.shape
+    C = len(pos_idx)
+    q = -(-n // m)
+    bty = min(block_ty, ty)
+    ntb = -(-ty // bty)
+    bn = min(block_n, _rup(N, 128))
+    bm = min(block_m, _rup(M, 128))
+    Np, Mp = _rup(N, bn), _rup(M, bm)
+    h = q - 1 if q > 1 and bty % (q - 1) == 0 else bty
+    Gyp = (ntb + 1) * bty
+    Gxp = max(Gx, tx + q - 1)
+    cells_p = jnp.pad(
+        cells, ((0, 0), (0, Gyp - Gy), (0, Gxp - Gx), (0, 0), (0, Np - N))
+    )
+    g_p = jnp.pad(g, ((0, 0), (0, ntb * bty - ty), (0, 0), (0, 0), (0, Mp - M)))
+    grid = (Np // bn, Mp // bm, B * ntb)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_pre_bwd_w_kernel,
+            bt_const=bt_mat,
+            pos_idx=pos_idx,
+            sub_slices=sub_slices,
+            m=m,
+            n=n,
+            tx=tx,
+            m2=m2,
+            n_steps=grid[2],
+            in_dtype=cells.dtype,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, bty, Gxp, m2c, bn),
+                lambda i, j, k: (k // ntb, k % ntb, 0, 0, i),
+            ),
+            pl.BlockSpec(
+                (1, h, Gxp, m2c, bn),
+                lambda i, j, k: (k // ntb, (k % ntb + 1) * (bty // h), 0, 0, i),
+            ),
+            pl.BlockSpec(
+                (1, bty, tx, s2m2, bm),
+                lambda i, j, k: (k // ntb, k % ntb, 0, 0, j),
+            ),
+            pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((C, Np, Mp), g.dtype),
+        scratch_shapes=[pltpu.VMEM((C, bn, bm), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(cells_p, cells_p, g_p, inv_packed)
+    return out[:, :N, :M]

@@ -5,6 +5,13 @@ families (``deconv_impl``): 'ref' / 'pallas' / 'pallas_fused_pre' (this
 paper; the latter fuses the pre-PE B-transform into the engine), 'tdc' ([14]),
 'zero_padded' ([10-12]), 'lax' (XLA's own conv_transpose) — all numerically
 identical, so speed comparisons are apples-to-apples.
+
+``*_prepacked`` impls train and serve *in the Winograd domain*: the
+generator's deconv params are the packed (C, N, M) transformed weights
+(``kernels.ops.prepack``, run once at init), the forward consumes them
+directly, and ``jax.grad`` flows straight out of the Pallas backward
+engines into the optimizer — no G-transform, pack, or their transposes
+anywhere in the training step.
 """
 from __future__ import annotations
 
@@ -23,8 +30,53 @@ from . import layers as L
 
 Params = dict[str, Any]
 
+# deconv_impl -> winograd_deconv2d_packed kwargs for the prepacked variants
+# (params hold packed Winograd-domain weights instead of raw K_D x K_D ones).
+_PREPACKED_KW: dict[str, dict] = {
+    "prepacked_ref": dict(backend="ref"),
+    "pallas_prepacked": dict(backend="pallas"),
+    "pallas_fused_pre_prepacked": dict(backend="pallas", fuse_pre=True),
+    "pallas_prepacked_interpret": dict(
+        backend="pallas", interpret=True, **kops.INTERPRET_BLOCKS
+    ),
+    "pallas_fused_pre_prepacked_interpret": dict(
+        backend="pallas", fuse_pre=True, interpret=True,
+        **kops.INTERPRET_BLOCKS_FUSED,
+    ),
+}
 
-def _deconv_apply(impl: str, x, w, dims: DeconvDims):
+# raw-weight impl -> its prepacked equivalent (used by serving to drop the
+# per-call G-transform without changing the numerics of the chosen backend).
+PREPACKED_EQUIV: dict[str, str] = {
+    "ref": "prepacked_ref",
+    "pallas": "pallas_prepacked",
+    "pallas_fused_pre": "pallas_fused_pre_prepacked",
+    "pallas_interpret": "pallas_prepacked_interpret",
+    "pallas_fused_pre_interpret": "pallas_fused_pre_prepacked_interpret",
+}
+
+
+def uses_prepacked(impl: str) -> bool:
+    """True if ``impl`` stores packed Winograd-domain weights in params."""
+    return impl in _PREPACKED_KW
+
+
+def _packed_of(wd: Params, dims: DeconvDims) -> kops.PackedDeconv:
+    """Rehydrate a PackedDeconv from the trainable ``ww`` leaf (the static
+    inverse-transform rows come from the cached layout, so they never enter
+    the param tree and the optimizer never touches them)."""
+    inv_np = kops.packed_layout(dims)[2]
+    return kops.PackedDeconv(wd["ww"], jnp.asarray(inv_np))
+
+
+def _deconv_apply(impl: str, x, wd: Params, dims: DeconvDims):
+    """Apply one deconv layer; ``wd`` is the layer's param dict ({"w": raw}
+    or {"ww": packed} for the prepacked impls)."""
+    if impl in _PREPACKED_KW:
+        return kops.winograd_deconv2d_packed(
+            x, _packed_of(wd, dims), dims, **_PREPACKED_KW[impl]
+        )
+    w = wd["w"]
     if impl == "ref":
         return winograd_deconv2d(x, w, dims)
     if impl == "ref_bf16":
@@ -37,10 +89,10 @@ def _deconv_apply(impl: str, x, w, dims: DeconvDims):
         return kops.winograd_deconv2d_fused(x, w, dims, fuse_pre=True)
     if impl == "pallas_interpret":
         return kops.winograd_deconv2d_fused(x, w, dims, interpret=True,
-                                            block_t=16, block_n=8, block_m=8)
+                                            **kops.INTERPRET_BLOCKS)
     if impl == "pallas_fused_pre_interpret":
         return kops.winograd_deconv2d_fused(x, w, dims, fuse_pre=True, interpret=True,
-                                            block_ty=4, block_n=8, block_m=8)
+                                            **kops.INTERPRET_BLOCKS_FUSED)
     if impl == "tdc":
         return tdc_deconv2d(x, w, dims)
     if impl == "zero_padded":
@@ -48,6 +100,17 @@ def _deconv_apply(impl: str, x, w, dims: DeconvDims):
     if impl == "lax":
         return lax_deconv2d(x, w, dims)
     raise ValueError(impl)
+
+
+def prepack_generator(params: Params, cfg: GANConfig) -> Params:
+    """One-time conversion of raw-weight generator params to the packed
+    Winograd-domain layout (for use with a ``*_prepacked`` deconv_impl)."""
+    out = dict(params)
+    for i, d in enumerate(cfg.deconvs):
+        wd = params[f"deconv{i}"]
+        if "w" in wd:
+            out[f"deconv{i}"] = {"ww": kops.prepack(wd["w"], d.dims).ww}
+    return out
 
 
 # ---------------------------------------------------------------- generator
@@ -65,9 +128,13 @@ def generator_init(key: jax.Array, cfg: GANConfig, dtype=jnp.float32) -> Params:
             p[f"enc{i}_bn"] = L.batchnorm_init(e.c_out, dtype)
         ki += 1
     for i, d in enumerate(cfg.deconvs):
-        p[f"deconv{i}"] = {
-            "w": L.normal_init(keys[ki], (d.dims.kernel, d.dims.kernel, d.c_in, d.c_out), 0.02, dtype)
-        }
+        w = L.normal_init(keys[ki], (d.dims.kernel, d.dims.kernel, d.c_in, d.c_out), 0.02, dtype)
+        if uses_prepacked(cfg.deconv_impl):
+            # Winograd-domain params: the G-transform runs here, once, and
+            # never again — training updates the packed weights directly.
+            p[f"deconv{i}"] = {"ww": kops.prepack(w, d.dims).ww}
+        else:
+            p[f"deconv{i}"] = {"w": w}
         if d.norm == "batch":
             p[f"deconv{i}_bn"] = L.batchnorm_init(d.c_out, dtype)
         ki += 1
@@ -95,7 +162,7 @@ def generator_apply(
                 new_stats[f"enc{i}_bn"] = s
             h = L.ACTIVATIONS[e.act](h)
     for i, d in enumerate(cfg.deconvs):
-        h = _deconv_apply(cfg.deconv_impl, h, p[f"deconv{i}"]["w"], d.dims)
+        h = _deconv_apply(cfg.deconv_impl, h, p[f"deconv{i}"], d.dims)
         if d.norm == "batch":
             h, s = L.batchnorm(p[f"deconv{i}_bn"], h, training=training)
             new_stats[f"deconv{i}_bn"] = s

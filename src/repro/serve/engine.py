@@ -1,10 +1,18 @@
-"""Continuous-batching serving engine (slot-based, vLLM-style scheduling
-adapted to fixed-shape JAX: a fixed pool of B slots over a shared max_len
-cache; arrivals fill free slots via per-slot prefill-into-cache, finished
-sequences free their slot).
+"""Serving engines.
 
-Fixed shapes keep everything jit-cacheable: one prefill_one signature and
-one decode signature, reused forever — no recompilation as traffic varies.
+``ServeEngine`` — continuous-batching LM engine (slot-based, vLLM-style
+scheduling adapted to fixed-shape JAX: a fixed pool of B slots over a shared
+max_len cache; arrivals fill free slots via per-slot prefill-into-cache,
+finished sequences free their slot).
+
+``GanServeEngine`` — batched image-generation service over the Winograd
+DeConv generator.  Weights are prepacked into the Winograd domain ONCE at
+construction (kernels.ops.prepack), so a serving call runs only the fused
+engine: no G-transform or weight pack ever executes on the request path.
+
+Fixed shapes keep everything jit-cacheable: one prefill_one signature, one
+decode signature, one generate signature — reused forever, no recompilation
+as traffic varies.
 """
 from __future__ import annotations
 
@@ -14,7 +22,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import LMConfig
+from repro.configs.base import GANConfig, LMConfig
 from repro.models import lm as LM
 
 
@@ -125,3 +133,51 @@ class ServeEngine:
                 pending.pop(0)
             done.extend(self.step())
         return done
+
+
+# ------------------------------------------------------------------- GAN
+class GanServeEngine:
+    """Image-generation service over prepacked Winograd-domain weights.
+
+    Construction pays the G-transform + zero-skipping pack exactly once
+    (``models.gan.prepack_generator``); every ``generate`` call after that
+    feeds the packed (C, N, M) weights straight to the engine.  Requests are
+    padded to a fixed ``batch`` so a single jitted signature serves all
+    traffic sizes.
+    """
+
+    def __init__(self, gen_params, cfg: GANConfig, *, batch: int = 8):
+        from repro.models import gan as G
+
+        impl = G.PREPACKED_EQUIV.get(cfg.deconv_impl, cfg.deconv_impl)
+        self.cfg = dataclasses.replace(cfg, deconv_impl=impl)
+        self.batch = batch
+        self.params = (
+            G.prepack_generator(gen_params, cfg)
+            if G.uses_prepacked(impl)
+            else gen_params
+        )
+        cfg_packed = self.cfg
+
+        @jax.jit
+        def _generate(params, z):
+            img, _ = G.generator_apply(params, cfg_packed, z, training=False)
+            return img
+
+        self._generate = _generate
+        self.served = 0
+
+    def generate(self, z: jax.Array) -> jax.Array:
+        """z: (b, z_dim) latents (or (b, H, W, 3) images for image-to-image
+        models), b <= batch.  Returns the b generated images."""
+        b = z.shape[0]
+        if b > self.batch:
+            raise ValueError(f"request batch {b} > engine batch {self.batch}")
+        z_pad = jnp.pad(z, ((0, self.batch - b),) + ((0, 0),) * (z.ndim - 1))
+        imgs = self._generate(self.params, z_pad)
+        self.served += b
+        return imgs[:b]
+
+    def run(self, requests: list[jax.Array]) -> list[jax.Array]:
+        """Serve a queue of variable-size latent batches."""
+        return [self.generate(z) for z in requests]

@@ -89,8 +89,18 @@ def train_gan(
     log_every: int = 10,
     hooks: TrainHooks = TrainHooks(),
     dtype=jnp.float32,
+    deconv_impl: Optional[str] = None,
 ) -> dict:
-    """End-to-end GAN training on synthetic data; restartable."""
+    """End-to-end GAN training on synthetic data; restartable.
+
+    ``deconv_impl`` overrides ``cfg.deconv_impl``; with a ``*_prepacked``
+    impl the generator trains in the Winograd domain — params hold the
+    packed transformed weights (G-transform runs once at init), the forward
+    consumes them directly, and the backward is the Pallas engines, so no
+    step ever re-runs the weight transform or pack.
+    """
+    if deconv_impl is not None:
+        cfg = dataclasses.replace(cfg, deconv_impl=deconv_impl)
     k = jax.random.PRNGKey(seed)
     kg, kd = jax.random.split(k)
     gp = G.generator_init(kg, cfg, dtype)

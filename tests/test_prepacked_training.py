@@ -1,0 +1,76 @@
+"""Winograd-domain training & serving: prepacked generator params match the
+raw-weight path exactly, a GAN train step updates the packed weights, and
+the serving engine prepacks once and serves batches of any size."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.gan_zoo import DCGAN
+from repro.models import gan as G
+from repro.serve.engine import GanServeEngine
+from repro.train.trainer import train_gan
+
+
+def tiny_cfg(impl="ref"):
+    """DCGAN shrunk to test scale (stem 16ch, 8ch trunk)."""
+    return dataclasses.replace(
+        DCGAN,
+        stem_ch=16,
+        deconvs=tuple(
+            dataclasses.replace(d, c_in=16 if i == 0 else 8, c_out=8 if i < 3 else 3)
+            for i, d in enumerate(DCGAN.deconvs)
+        ),
+        deconv_impl=impl,
+    )
+
+
+def test_prepacked_generator_matches_raw():
+    cfg = tiny_cfg("ref")
+    cfg_p = dataclasses.replace(cfg, deconv_impl="prepacked_ref")
+    k = jax.random.PRNGKey(0)
+    p_raw = G.generator_init(k, cfg)
+    z = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.z_dim))
+    img_raw, _ = G.generator_apply(p_raw, cfg, z, training=False)
+
+    # converting raw params and initializing directly in the packed domain
+    # both reproduce the raw-weight forward exactly
+    img_conv, _ = G.generator_apply(G.prepack_generator(p_raw, cfg), cfg_p, z, training=False)
+    np.testing.assert_array_equal(np.asarray(img_raw), np.asarray(img_conv))
+    img_init, _ = G.generator_apply(G.generator_init(k, cfg_p), cfg_p, z, training=False)
+    np.testing.assert_array_equal(np.asarray(img_raw), np.asarray(img_init))
+
+
+def test_winograd_domain_train_step():
+    """Two GAN steps with packed params: finite losses, and the packed
+    (C, N, M) weights — not raw K_D x K_D ones — are what the optimizer
+    updates."""
+    cfg = tiny_cfg()
+    out = train_gan(
+        cfg, steps=2, batch=2, log_every=1, deconv_impl="prepacked_ref"
+    )
+    gp = out["params"]["gp"]
+    assert "ww" in gp["deconv0"] and "w" not in gp["deconv0"]
+    assert gp["deconv0"]["ww"].shape[0] == 49  # C(3) for K5S2, packed leaf
+    assert all(np.isfinite(m["g_loss"]) for m in out["metrics"])
+    # params moved: a step actually flowed gradients into the packed leaf
+    p0 = G.generator_init(jax.random.split(jax.random.PRNGKey(0))[0],
+                          dataclasses.replace(cfg, deconv_impl="prepacked_ref"))
+    delta = float(jnp.abs(gp["deconv0"]["ww"] - p0["deconv0"]["ww"]).sum())
+    assert delta > 0
+
+
+def test_gan_serve_engine_prepacks_and_serves():
+    cfg = tiny_cfg("ref")
+    p_raw = G.generator_init(jax.random.PRNGKey(0), cfg)
+    eng = GanServeEngine(p_raw, cfg, batch=4)
+    # engine converted the params to the packed layout once at construction
+    assert "ww" in eng.params["deconv0"]
+    z2 = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.z_dim))
+    z3 = jax.random.normal(jax.random.PRNGKey(2), (3, cfg.z_dim))
+    imgs = eng.run([z2, z3])
+    assert [i.shape[0] for i in imgs] == [2, 3]
+    assert eng.served == 5
+    want, _ = G.generator_apply(p_raw, cfg, z2, training=False)
+    np.testing.assert_array_equal(np.asarray(imgs[0]), np.asarray(want))
