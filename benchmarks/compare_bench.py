@@ -1,0 +1,167 @@
+"""Benchmark trend gate: diff a fresh BENCH_train_step.json against the
+committed baseline and fail (exit 1) on a regression.
+
+CI runs this right after the smoke benchmark, so a PR that slows a layer's
+train step down, breaks a variant outright, or erodes the prepacked-step
+speedup turns the job red instead of silently shifting the committed
+trajectory.  Three checks:
+
+  * ``prepacked_step_speedup_geomean`` (the headline: does hoisting the
+    G-transform + pack out of the step still pay?) must not drop by more
+    than ``--geomean-tol`` relative to the baseline;
+  * every (arch, layer, variant, mode) wall time present in the baseline
+    must still run (a fresh ``None``/error where the baseline had a number
+    is always a failure) and must not exceed baseline * (1 + ``--rel-tol``);
+  * the sharded per-device-count step times gate under the same
+    ``--rel-tol``; ``--sharded-only`` restricts the gate to that table (the
+    multi-device CI job) and then treats missing device counts as failures.
+
+Interpret-mode CPU timings on shared runners are noisy, so the per-time
+tolerance is deliberately loose by default (2.5x) — it catches the
+order-of-magnitude regressions (a kernel falling off its fast path, a
+per-step repack sneaking back in), while the geomean — a same-machine ratio,
+so machine speed cancels — gates the prepacking win much tighter.
+
+Usage:
+  python -m benchmarks.compare_bench --baseline BENCH_train_step.json \
+      --fresh BENCH_fresh.json [--rel-tol 1.5] [--geomean-tol 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+MODES = ("fwd", "grad", "step")
+
+
+def _layer_key(entry: dict) -> tuple:
+    return (entry["arch"], entry["layer"])
+
+
+def _times(report: dict) -> dict[tuple, float]:
+    """Flatten to {(arch, layer, variant, mode): ms} (numeric entries only)."""
+    out: dict[tuple, float] = {}
+    for entry in report.get("layers", []):
+        for row in entry.get("variants", []):
+            for mode in MODES:
+                ms = row.get(f"{mode}_ms")
+                if ms is not None:
+                    out[_layer_key(entry) + (row["variant"], mode)] = float(ms)
+    return out
+
+
+def compare(
+    baseline: dict,
+    fresh: dict,
+    *,
+    rel_tol: float = 1.5,
+    geomean_tol: float = 0.25,
+    sharded_only: bool = False,
+) -> list[str]:
+    """Returns the list of regression messages (empty = gate passes).
+
+    ``sharded_only`` gates just the per-device-count table (the multi-device
+    CI job's fresh report has no per-layer section) and is strict about
+    missing entries: a fresh run that silently fell back to fewer devices
+    must fail, not skip.
+    """
+    failures: list[str] = []
+
+    if not sharded_only:
+        bg = baseline.get("prepacked_step_speedup_geomean")
+        fg = fresh.get("prepacked_step_speedup_geomean")
+        if bg is not None:
+            if fg is None:
+                failures.append(
+                    "prepacked_step_speedup_geomean missing from fresh report "
+                    f"(baseline {bg:.3f})"
+                )
+            elif fg < bg * (1 - geomean_tol):
+                failures.append(
+                    f"prepacked_step_speedup_geomean regressed: {fg:.3f} < "
+                    f"{bg:.3f} * (1 - {geomean_tol}) = {bg * (1 - geomean_tol):.3f}"
+                )
+
+        base_t, fresh_t = _times(baseline), _times(fresh)
+        for key, b_ms in sorted(base_t.items()):
+            f_ms = fresh_t.get(key)
+            name = "/".join(str(k) for k in key)
+            if f_ms is None:
+                failures.append(
+                    f"{name}: baseline ran in {b_ms:.2f}ms, fresh failed or is missing"
+                )
+            elif f_ms > b_ms * (1 + rel_tol):
+                failures.append(
+                    f"{name}: {f_ms:.2f}ms > {b_ms:.2f}ms * (1 + {rel_tol}) = "
+                    f"{b_ms * (1 + rel_tol):.2f}ms"
+                )
+
+    b_sh = baseline.get("sharded", {}).get("step_ms", {})
+    f_sh = fresh.get("sharded", {}).get("step_ms", {})
+    if sharded_only and not b_sh:
+        # comparing nothing must not read as success — a refreshed baseline
+        # that lost its sharded table would otherwise disarm this gate forever
+        failures.append(
+            "baseline has no sharded table (regenerate it with --devices N)"
+        )
+    if sharded_only and b_sh and not f_sh:
+        failures.append("baseline has a sharded table but the fresh report has none")
+    for d, b_ms in sorted(b_sh.items(), key=lambda kv: int(kv[0])):
+        f_ms = f_sh.get(d)
+        if f_ms is None:
+            if sharded_only:
+                failures.append(
+                    f"sharded/devices={d}: baseline ran in {b_ms:.2f}ms, fresh "
+                    "is missing (device-count override not applied?)"
+                )
+            continue  # mixed report swept fewer device counts: not a regression
+        if f_ms > b_ms * (1 + rel_tol):
+            failures.append(
+                f"sharded/devices={d}: {f_ms:.2f}ms > {b_ms:.2f}ms * "
+                f"(1 + {rel_tol}) = {b_ms * (1 + rel_tol):.2f}ms"
+            )
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_train_step.json",
+                    help="committed reference report")
+    ap.add_argument("--fresh", required=True, help="report from this run")
+    ap.add_argument("--rel-tol", type=float, default=1.5,
+                    help="per-time slack: fail above baseline*(1+tol)")
+    ap.add_argument("--geomean-tol", type=float, default=0.25,
+                    help="relative drop allowed on the prepacked-step "
+                         "speedup geomean")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="gate only the per-device-count sharded step times "
+                         "(strict about missing entries)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    failures = compare(
+        baseline, fresh, rel_tol=args.rel_tol, geomean_tol=args.geomean_tol,
+        sharded_only=args.sharded_only,
+    )
+    n_base = len(baseline.get("sharded", {}).get("step_ms", {})) if args.sharded_only \
+        else len(_times(baseline))
+    if failures:
+        print(f"compare_bench: {len(failures)} regression(s) vs {args.baseline}:")
+        for msg in failures:
+            print(f"  REGRESSION {msg}")
+        return 1
+    fg = None if args.sharded_only else fresh.get("prepacked_step_speedup_geomean")
+    print(
+        f"compare_bench: OK — {n_base} baseline timings within tolerance"
+        + (f", speedup geomean {fg:.3f}" if fg else "")
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,11 +14,20 @@ Usage:
   PYTHONPATH=src python -m benchmarks.train_step                  # full layers
   PYTHONPATH=src python -m benchmarks.train_step --smoke          # CI: tiny
   PYTHONPATH=src python -m benchmarks.train_step --arch dcgan --out f.json
+  PYTHONPATH=src python -m benchmarks.train_step --smoke --devices 8
+                                                  # + sharded GAN step times
 
 On CPU the Pallas variants run in interpret mode: timings order host-loop
 overheads rather than MXU work (the prepacked-vs-unpacked delta — the
 per-step G-transform + pack — is real on both).  On a TPU backend the same
 driver measures the production numbers.
+
+``--devices N`` additionally times the full sharded GAN train step (the
+donated, NamedSharding-constrained ``make_gan_step(mesh=...)``) at every
+power-of-two device count up to N, recording a per-device-count table in
+the report.  On a CPU host the flag forces N host-platform devices — this
+only works when the module is the process entry point, because the XLA flag
+must be set before jax initializes.
 """
 from __future__ import annotations
 
@@ -28,6 +37,30 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
+
+
+def _force_host_device_count(argv: list[str]) -> None:
+    """--devices N on CPU needs xla_force_host_platform_device_count set
+    before first jax init; a no-op on TPU hosts (the flag only affects the
+    host platform) and when jax is already imported (library use)."""
+    n = 0
+    for i, a in enumerate(argv):
+        try:
+            if a == "--devices":
+                n = int(argv[i + 1])
+            elif a.startswith("--devices="):
+                n = int(a.split("=", 1)[1])
+        except (ValueError, IndexError):
+            return
+    if n > 1 and "jax" not in sys.modules:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
+
+
+if __name__ == "__main__":
+    _force_host_device_count(sys.argv)
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +118,59 @@ def bench_layer(
     return rows
 
 
+def bench_sharded(
+    requested: int, *, interpret: bool, smoke: bool, repeats: int = 3
+) -> dict:
+    """Per-device-count wall times of the full sharded GAN train step.
+
+    One process, one forced host-device pool: meshes over 1, 2, 4, ...
+    devices are sub-pools of the same ``jax.devices()``, so the scaling
+    numbers are comparable run to run.
+    """
+    import dataclasses
+
+    from repro import data as D
+    from repro.configs.gan_zoo import DCGAN, tiny_dcgan
+    from repro.launch.mesh import make_mesh
+    from repro.models import gan as G
+    from repro.optim import adamw_init
+    from repro.train.trainer import make_gan_step
+
+    avail = len(jax.devices())
+    if avail < requested:
+        print(f"train_step,sharded,WARNING,only {avail} of {requested} "
+              "devices available (XLA flag not set before jax init?)")
+    counts, d = [], 1
+    while d <= min(requested, avail):
+        counts.append(d)
+        d *= 2
+    impl = "prepacked_ref" if interpret else "pallas_fused_pre_prepacked"
+    # smoke: the tiny trunk the parity tests measure; keeps CPU runs in seconds
+    cfg = dataclasses.replace(tiny_dcgan(impl) if smoke else DCGAN, deconv_impl=impl)
+    B = max(8, counts[-1] if counts else 1)
+    out = {
+        "requested_devices": requested,
+        "available_devices": avail,
+        "arch": cfg.arch_id,
+        "impl": impl,
+        "batch": B,
+        "step_ms": {},
+    }
+    for d in counts:
+        mesh = make_mesh((d,), ("data",))
+        # donate=False: time_one re-feeds the same buffers every repeat
+        step = make_gan_step(cfg, mesh=mesh, batch=B, donate=False)
+        kg, kd = jax.random.split(jax.random.PRNGKey(0))
+        gp, dp = G.generator_init(kg, cfg), G.discriminator_init(kd, cfg)
+        go, do = adamw_init(gp), adamw_init(dp)
+        z = D.latent_batch(0, 0, B, cfg.z_dim)
+        real = D.gan_batch(0, 0, B, cfg.img_hw)
+        ms = time_one(step, (gp, dp, go, do, z, real), repeats) * 1e3
+        out["step_ms"][str(d)] = ms
+        print(f"train_step,sharded,{cfg.arch_id},devices={d},step={ms:.2f}")
+    return out
+
+
 def main(argv: list[str] | None = None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, help="one gan_zoo arch (default: all)")
@@ -92,10 +178,22 @@ def main(argv: list[str] | None = None) -> dict:
                     help="tiny shapes + first layer per arch (CI-sized)")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--out", default="BENCH_train_step.json")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="also time the sharded GAN step on meshes of "
+                         "1..N devices (forces N host devices on CPU when "
+                         "run as the entry point)")
+    ap.add_argument("--devices-only", action="store_true",
+                    help="skip the per-layer sweep and emit only the "
+                         "sharded per-device-count table (the multi-device "
+                         "CI job: the tests job already gates the layers)")
     args = ap.parse_args(argv)
+    if args.devices_only and not args.devices:
+        ap.error("--devices-only requires --devices N")
 
     interpret = jax.default_backend() != "tpu"
-    archs = [args.arch] if args.arch else sorted(GAN_LAYERS)
+    archs = [] if args.devices_only else (
+        [args.arch] if args.arch else sorted(GAN_LAYERS)
+    )
     report = {
         "backend": jax.default_backend(),
         "interpret": interpret,
@@ -149,6 +247,11 @@ def main(argv: list[str] | None = None) -> dict:
         print(
             "train_step,summary,prepacked_fused_step_speedup_geomean="
             f"{report['prepacked_step_speedup_geomean']:.3f}"
+        )
+    if args.devices:
+        report["sharded"] = bench_sharded(
+            args.devices, interpret=interpret, smoke=args.smoke,
+            repeats=args.repeats,
         )
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)

@@ -1,5 +1,7 @@
 """The paper's GAN workloads (Table I), with layer dims from the source
 models: DCGAN [4], ArtGAN [5], DiscoGAN [6], GP-GAN [7]."""
+import dataclasses
+
 from repro.core.tdc import DeconvDims
 
 from .base import ConvSpec, DeconvSpec, GANConfig
@@ -79,3 +81,18 @@ GPGAN = GANConfig(
 )
 
 GANS = {c.arch_id: c for c in (DCGAN, ARTGAN, DISCOGAN, GPGAN)}
+
+
+def tiny_dcgan(deconv_impl: str = "ref") -> GANConfig:
+    """DCGAN shrunk to test/smoke scale (16ch stem, 8ch trunk): the one
+    config the prepacked/sharded parity tests and the sharded train-step
+    benchmark all measure, so they can't drift apart."""
+    return dataclasses.replace(
+        DCGAN,
+        stem_ch=16,
+        deconvs=tuple(
+            dataclasses.replace(d, c_in=16 if i == 0 else 8, c_out=8 if i < 3 else 3)
+            for i, d in enumerate(DCGAN.deconvs)
+        ),
+        deconv_impl=deconv_impl,
+    )

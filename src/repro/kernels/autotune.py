@@ -151,7 +151,36 @@ def time_one(fn, args, repeats: int) -> float:
     return best
 
 
-def make_timed_fn(cfg: Optional[EngineConfig], dims: DeconvDims, mode: str, interpret: bool):
+def _mesh_shardings(mesh, cfg, mode, input_shape, c_out):
+    """In-shardings for a timed fn under a mesh: batch-sharded x, FSDP on the
+    weight's N dim + TP on M where they divide (mirroring gan_param_specs'
+    rules for the packed layout), AdamW moments following the weight leaf."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import (
+        MeshAxes, SpecBuilder, _tp_or_none, named, opt_specs,
+    )
+
+    axes = MeshAxes.for_mesh(mesh)
+    b = SpecBuilder(mesh, axes)
+    tp = _tp_or_none(mesh, axes)
+    B, H, W, N = input_shape
+    xspec = P(b.dim("x.B", B, axes.batch), None, None, None)
+    n_ax, m_ax = b.dim("w.N", N, axes.fsdp), b.dim("w.M", c_out, tp)
+    leaf = P(None, n_ax, m_ax) if (cfg is not None and cfg.prepack) else \
+        P(None, None, n_ax, m_ax)
+    wspec = ops.PackedDeconv(leaf, P(None, None)) if (cfg is not None and cfg.prepack) \
+        else leaf
+    if mode == "step":
+        tree = (xspec, wspec, opt_specs(leaf))
+    else:
+        tree = (xspec, wspec)
+    return named(mesh, tree), b.fallbacks
+
+
+def make_timed_fn(cfg: Optional[EngineConfig], dims: DeconvDims, mode: str, interpret: bool,
+                  mesh=None, input_shape=None, c_out: Optional[int] = None,
+                  _shardings=None):
     """Build the callable the sweep times, per mode x variant.
 
     ``cfg=None`` times the pure-JAX reference path (no Pallas, no packing);
@@ -159,6 +188,12 @@ def make_timed_fn(cfg: Optional[EngineConfig], dims: DeconvDims, mode: str, inte
     Returns (fn, make_args) where make_args(x, w) produces fn's argument
     tuple.  The three variants differ only in the forward callable and which
     leaf of the params the optimizer updates.
+
+    With ``mesh`` (requires ``input_shape`` + ``c_out`` for divisibility),
+    the jit is NamedSharding-constrained — batch-sharded input, FSDP/TP
+    weight leaf, sharded moments — so the timings (and therefore the block
+    choices ``mode='step'`` picks) reflect the sharded layout the multi-
+    device GAN train step runs under, not the single-device one.
     """
     if cfg is None:
         from repro.core.winograd_deconv import winograd_deconv2d
@@ -183,17 +218,25 @@ def make_timed_fn(cfg: Optional[EngineConfig], dims: DeconvDims, mode: str, inte
     def loss(x, p):
         return jnp.sum(fwd(x, p).astype(jnp.float32) ** 2)
 
+    jit_kw: dict = {}
+    if mesh is not None:
+        if _shardings is None:
+            if input_shape is None or c_out is None:
+                raise ValueError("mesh timing needs input_shape and c_out")
+            _shardings, _ = _mesh_shardings(mesh, cfg, mode, input_shape, c_out)
+        jit_kw["in_shardings"] = _shardings
+
     if mode == "fwd":
-        fn = jax.jit(fwd)
+        fn = jax.jit(fwd, **jit_kw)
     elif mode == "grad":
-        fn = jax.jit(jax.value_and_grad(loss, argnums=1))
+        fn = jax.jit(jax.value_and_grad(loss, argnums=1), **jit_kw)
     elif mode == "step":
         def step(x, p, opt):
             _, g = jax.value_and_grad(loss, argnums=1)(x, p)
             leaf2, opt2, _ = adamw_update(get_leaf(p), get_leaf(g), opt, lr=1e-3)
             return set_leaf(p, leaf2), opt2
 
-        fn = jax.jit(step)
+        fn = jax.jit(step, **jit_kw)
     else:
         raise ValueError(mode)
 
@@ -217,6 +260,7 @@ def autotune_deconv(
     repeats: int = 3,
     seed: int = 0,
     mode: str = "fwd",
+    mesh=None,
 ) -> list[dict]:
     """Time every candidate engine config for one deconv layer.
 
@@ -225,6 +269,12 @@ def autotune_deconv(
     a list of rows {config, ms, ok, error} sorted fastest-first; configs
     that fail to compile/run are kept (ok=False) so sweeps surface
     infeasible corners instead of hiding them.
+
+    ``mesh`` times each candidate under that mesh's sharded layout
+    (batch-sharded input, FSDP/TP weights, sharded moments): arXiv
+    1903.01811's point that the tile/parallelism design space must be
+    re-explored per configuration applies to the mesh layout too, so block
+    choices for the sharded train step should come from a sharded sweep.
     """
     if mode not in ("fwd", "grad", "step"):  # fail fast: a bad mode is a
         raise ValueError(mode)  # caller error, not a per-config infeasibility
@@ -240,14 +290,24 @@ def autotune_deconv(
     )
     rows: list[dict] = []
     for cfg in candidates:
+        row: dict = {"config": cfg}
+        shardings = None
+        if mesh is not None:
+            # surface dims that silently fell back to replication — a sweep
+            # that claims to measure the sharded layout must say when it
+            # actually timed a replicated one
+            shardings, fb = _mesh_shardings(mesh, cfg, mode, input_shape, c_out)
+            row["sharding_fallbacks"] = fb
         try:
-            fn, make_args = make_timed_fn(cfg, dims, mode, interpret)
+            fn, make_args = make_timed_fn(cfg, dims, mode, interpret,
+                                          mesh=mesh, input_shape=input_shape,
+                                          c_out=c_out, _shardings=shardings)
             args = make_args(x, w)
             dt = time_one(fn, args, repeats)
-            rows.append({"config": cfg, "ms": dt * 1e3, "ok": True, "error": ""})
+            rows.append({**row, "ms": dt * 1e3, "ok": True, "error": ""})
         except Exception as e:  # infeasible block shape, OOM, ...
             rows.append(
-                {"config": cfg, "ms": float("inf"), "ok": False,
+                {**row, "ms": float("inf"), "ok": False,
                  "error": f"{type(e).__name__}: {e}"[:200]}
             )
     rows.sort(key=lambda r: r["ms"])

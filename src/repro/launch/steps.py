@@ -160,48 +160,28 @@ def build_lm_step(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh):
 GAN_TRAIN_BATCH = 256
 
 
-def gan_input_specs(cfg: GANConfig, mesh: Mesh):
+def gan_input_specs(cfg: GANConfig, mesh: Mesh, batch: int = GAN_TRAIN_BATCH):
+    """Structs + PartitionSpecs for the GAN train step (divisibility-aware,
+    shared with train.trainer's sharded path via parallel.sharding)."""
     from repro.models import gan as G
-
-    axes = SH.MeshAxes.for_mesh(mesh)
-    tp = axes.tp
-
-    def spec_of(path_leaf):
-        return P()
 
     gp = jax.eval_shape(lambda k: G.generator_init(k, cfg, PARAM_DTYPE),
                         jax.ShapeDtypeStruct((2,), jnp.uint32))
     dp = jax.eval_shape(lambda k: G.discriminator_init(k, cfg, PARAM_DTYPE),
                         jax.ShapeDtypeStruct((2,), jnp.uint32))
-
-    def gspec(kp, leaf):
-        name = jax.tree_util.keystr(kp)
-        if leaf.ndim == 4 and "deconv" in name:  # (K,K,N,M): TP on M
-            m_ok = leaf.shape[3] % mesh.shape[tp] == 0
-            return P(None, None, None, tp if m_ok else None)
-        if leaf.ndim == 4:  # conv (K,K,Cin,Cout)
-            m_ok = leaf.shape[3] % mesh.shape[tp] == 0
-            return P(None, None, None, tp if m_ok else None)
-        if leaf.ndim == 2:  # dense
-            ok = leaf.shape[1] % mesh.shape[tp] == 0
-            return P(None, tp if ok else None)
-        return P()
-
-    gspecs = jax.tree_util.tree_map_with_path(gspec, gp)
-    dspecs = jax.tree_util.tree_map_with_path(gspec, dp)
-    batch_ax = axes.batch
-    z = jax.ShapeDtypeStruct((GAN_TRAIN_BATCH, cfg.z_dim), PARAM_DTYPE) if cfg.z_dim else \
-        jax.ShapeDtypeStruct((GAN_TRAIN_BATCH, cfg.img_hw, cfg.img_hw, 3), PARAM_DTYPE)
-    real = jax.ShapeDtypeStruct((GAN_TRAIN_BATCH, cfg.img_hw, cfg.img_hw, 3), PARAM_DTYPE)
-    zspec = P(batch_ax, None) if cfg.z_dim else P(batch_ax, None, None, None)
-    return (gp, dp, z, real), (gspecs, dspecs, zspec, P(batch_ax, None, None, None))
+    gspecs, dspecs, fallbacks = SH.gan_param_specs(cfg, mesh)
+    zspec, rspec, bfb = SH.gan_batch_specs(cfg, batch, mesh)
+    z = jax.ShapeDtypeStruct((batch, cfg.z_dim), PARAM_DTYPE) if cfg.z_dim else \
+        jax.ShapeDtypeStruct((batch, cfg.img_hw, cfg.img_hw, 3), PARAM_DTYPE)
+    real = jax.ShapeDtypeStruct((batch, cfg.img_hw, cfg.img_hw, 3), PARAM_DTYPE)
+    meta = {"fallbacks": fallbacks + bfb}
+    return (gp, dp, z, real), (gspecs, dspecs, zspec, rspec), meta
 
 
 def build_gan_step(cfg: GANConfig, mesh: Mesh):
-    from repro.models import gan as G
     from repro.train.trainer import gan_losses
 
-    (gp, dp, z, real), (gspecs, dspecs, zspec, rspec) = gan_input_specs(cfg, mesh)
+    (gp, dp, z, real), (gspecs, dspecs, zspec, rspec), meta = gan_input_specs(cfg, mesh)
     gopt = jax.eval_shape(adamw_init, gp)
     dopt = jax.eval_shape(adamw_init, dp)
     gosp = SH.opt_specs(gspecs)
@@ -232,7 +212,7 @@ def build_gan_step(cfg: GANConfig, mesh: Mesh):
         out_shardings=named((gspecs, dspecs, gosp, dosp, P(), P())),
         donate_argnums=(0, 1, 2, 3),
     )
-    return fn, (gp, dp, gopt, dopt, z, real), {}
+    return fn, (gp, dp, gopt, dopt, z, real), meta
 
 
 def build_step(arch: str, shape_name: str, mesh: Mesh):

@@ -15,8 +15,9 @@ anywhere in the training step.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -102,14 +103,32 @@ def _deconv_apply(impl: str, x, wd: Params, dims: DeconvDims):
     raise ValueError(impl)
 
 
-def prepack_generator(params: Params, cfg: GANConfig) -> Params:
+def prepack_generator(params: Params, cfg: GANConfig, mesh=None) -> Params:
     """One-time conversion of raw-weight generator params to the packed
-    Winograd-domain layout (for use with a ``*_prepacked`` deconv_impl)."""
+    Winograd-domain layout (for use with a ``*_prepacked`` deconv_impl).
+
+    Already-packed ``{"ww": ...}`` leaves pass through untouched, so sharded
+    packed params from a mesh training run can be fed directly.  With
+    ``mesh``, the converted tree is placed per ``parallel.sharding``'s
+    ``gan_param_specs`` — the packed (C, N, M) weights come out already
+    FSDP/TP-sharded, ready for the sharded train step or serve engine.
+    """
     out = dict(params)
     for i, d in enumerate(cfg.deconvs):
         wd = params[f"deconv{i}"]
         if "w" in wd:
             out[f"deconv{i}"] = {"ww": kops.prepack(wd["w"], d.dims).ww}
+    if mesh is not None:
+        from repro.parallel import sharding as SH
+
+        # spec layout only depends on packed-vs-raw leaves, so any prepacked
+        # impl names the right tree
+        impl = PREPACKED_EQUIV.get(cfg.deconv_impl, "prepacked_ref")
+        cfg_p = cfg if uses_prepacked(cfg.deconv_impl) else dataclasses.replace(
+            cfg, deconv_impl=impl
+        )
+        gsp, _, _ = SH.gan_param_specs(cfg_p, mesh)
+        out = jax.device_put(out, SH.named(mesh, gsp))
     return out
 
 
@@ -171,8 +190,13 @@ def generator_apply(
 
 
 # ------------------------------------------------------------ discriminator
+# Trunk widths; parallel.sharding.gan_param_specs mirrors this layout, so
+# the two must change together.
+DISC_CHANNELS: tuple[int, ...] = (64, 128, 256, 512)
+
+
 def discriminator_init(key: jax.Array, cfg: GANConfig, dtype=jnp.float32) -> Params:
-    chans = [cfg.img_ch, 64, 128, 256, 512]
+    chans = [cfg.img_ch, *DISC_CHANNELS]
     keys = jax.random.split(key, len(chans))
     p: Params = {}
     for i in range(len(chans) - 1):
@@ -180,7 +204,7 @@ def discriminator_init(key: jax.Array, cfg: GANConfig, dtype=jnp.float32) -> Par
         if i > 0:
             p[f"conv{i}_bn"] = L.batchnorm_init(chans[i + 1], dtype)
     final_hw = cfg.img_hw // 2 ** (len(chans) - 1)
-    p["head"] = L.linear_init(keys[-1], final_hw**2 * 512, 1, dtype)
+    p["head"] = L.linear_init(keys[-1], final_hw**2 * chans[-1], 1, dtype)
     return p
 
 

@@ -1,1 +1,9 @@
-from .sharding import MeshAxes, lm_param_specs, lm_batch_specs, cache_specs, opt_specs
+from .sharding import (
+    MeshAxes,
+    cache_specs,
+    gan_batch_specs,
+    gan_param_specs,
+    lm_batch_specs,
+    lm_param_specs,
+    opt_specs,
+)

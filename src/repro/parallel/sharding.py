@@ -20,7 +20,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.configs.base import LMConfig, ShapeConfig
+from repro.configs.base import GANConfig, LMConfig, ShapeConfig
 from repro.models import lm as LM
 
 
@@ -179,6 +179,94 @@ def lm_batch_specs(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh, axes: Optional
     if cfg.mrope_sections is not None:
         sp["positions"] = P(batch_ax, None, None)
     return sp
+
+
+def _tp_or_none(mesh: Mesh, axes: MeshAxes) -> Optional[str]:
+    """The TP axis name, or None when the mesh has no such axis (e.g. the
+    pure-data meshes the multi-device GAN benchmark builds)."""
+    return axes.tp if axes.tp in mesh.axis_names else None
+
+
+def gan_param_specs(cfg: GANConfig, mesh: Mesh, axes: Optional[MeshAxes] = None):
+    """PartitionSpec pytrees matching gan.generator_init / discriminator_init.
+
+    Returns (gen_specs, disc_specs, fallback_log).
+
+    The multi-device analogue of the paper's reorganized filter layout: the
+    packed (C, N, M) ``ww`` leaves of a ``*_prepacked`` impl are FSDP-sharded
+    over N on the batch axes and TP-sharded over M on "model" where it
+    divides (C is grid-parallel inside the engine already); raw (K, K, N, M)
+    deconv weights and the discriminator convs shard the same way on their
+    trailing channel dims.  Non-divisible dims degrade to replication and are
+    recorded in the fallback log (e.g. every generator's last layer has
+    M = img_ch = 3, which no TP degree divides).
+    """
+    from repro.models import gan as G  # lazy: keep parallel importable without kernels
+
+    axes = axes or MeshAxes.for_mesh(mesh)
+    b = SpecBuilder(mesh, axes)
+    fsdp = axes.fsdp
+    tp = _tp_or_none(mesh, axes)
+    prepacked = G.uses_prepacked(cfg.deconv_impl)
+
+    def bn_spec():
+        # (c,) scale/bias + running stats: tiny, replicated
+        return {"scale": P(None), "bias": P(None), "mean": P(None), "var": P(None)}
+
+    def conv_spec(prefix, c_in, c_out):
+        return {
+            "w": P(None, None, b.dim(f"{prefix}.in", c_in, fsdp),
+                   b.dim(f"{prefix}.out", c_out, tp)),
+            "b": P(b.dim(f"{prefix}.b", c_out, tp)),
+        }
+
+    gen: dict[str, Any] = {}
+    if cfg.z_dim:
+        d_out = cfg.seed_hw**2 * cfg.stem_ch
+        gen["stem"] = {
+            "w": P(b.dim("stem.in", cfg.z_dim, fsdp), b.dim("stem.out", d_out, tp)),
+            "b": P(b.dim("stem.b", d_out, tp)),
+        }
+        gen["stem_bn"] = bn_spec()
+    for i, e in enumerate(cfg.encoder):
+        gen[f"enc{i}"] = conv_spec(f"enc{i}", e.c_in, e.c_out)
+        if e.norm == "batch":
+            gen[f"enc{i}_bn"] = bn_spec()
+    for i, d in enumerate(cfg.deconvs):
+        n_ax = b.dim(f"deconv{i}.N", d.c_in, fsdp)
+        m_ax = b.dim(f"deconv{i}.M", d.c_out, tp)
+        if prepacked:
+            gen[f"deconv{i}"] = {"ww": P(None, n_ax, m_ax)}
+        else:
+            gen[f"deconv{i}"] = {"w": P(None, None, n_ax, m_ax)}
+        if d.norm == "batch":
+            gen[f"deconv{i}_bn"] = bn_spec()
+
+    disc: dict[str, Any] = {}
+    chans = (cfg.img_ch,) + G.DISC_CHANNELS
+    for i in range(len(chans) - 1):
+        disc[f"conv{i}"] = conv_spec(f"disc.conv{i}", chans[i], chans[i + 1])
+        if i > 0:
+            disc[f"conv{i}_bn"] = bn_spec()
+    final_hw = cfg.img_hw // 2 ** (len(chans) - 1)
+    disc["head"] = {
+        "w": P(b.dim("disc.head.in", final_hw**2 * chans[-1], fsdp), None),
+        "b": P(None),  # out dim is 1: never shardable, not worth a log line
+    }
+    return gen, disc, b.fallbacks
+
+
+def gan_batch_specs(cfg: GANConfig, batch: int, mesh: Mesh,
+                    axes: Optional[MeshAxes] = None):
+    """Specs for the GAN train batch: (z_or_image_spec, real_spec, fallbacks).
+
+    The batch dim shards over the ("pod","data") axes when ``batch`` divides;
+    otherwise both inputs replicate (recorded in the log)."""
+    axes = axes or MeshAxes.for_mesh(mesh)
+    b = SpecBuilder(mesh, axes)
+    bax = b.dim("gan.batch", batch, axes.batch)
+    z = P(bax, None) if cfg.z_dim else P(bax, None, None, None)
+    return z, P(bax, None, None, None), b.fallbacks
 
 
 def cache_specs(cfg: LMConfig, shape: ShapeConfig, mesh: Mesh, axes: Optional[MeshAxes] = None,

@@ -11,8 +11,8 @@ construction (kernels.ops.prepack), so a serving call runs only the fused
 engine: no G-transform or weight pack ever executes on the request path.
 
 Fixed shapes keep everything jit-cacheable: one prefill_one signature, one
-decode signature, one generate signature — reused forever, no recompilation
-as traffic varies.
+decode signature, one generate signature per serving bucket — reused
+forever, no recompilation as traffic varies.
 """
 from __future__ import annotations
 
@@ -142,21 +142,42 @@ class GanServeEngine:
     Construction pays the G-transform + zero-skipping pack exactly once
     (``models.gan.prepack_generator``); every ``generate`` call after that
     feeds the packed (C, N, M) weights straight to the engine.  Requests are
-    padded to a fixed ``batch`` so a single jitted signature serves all
-    traffic sizes.
+    padded up to the smallest of a fixed set of ``buckets`` (default the
+    powers of two up to ``batch``), so a size-1 request runs the batch-1
+    executable instead of paying the full batch-``batch`` generate, while
+    the signature count stays bounded (one jit cache entry per bucket).
+
+    Params may arrive raw, already packed, or packed-and-sharded (straight
+    out of a mesh training run — already-``ww`` leaves pass through
+    ``prepack_generator`` untouched); ``mesh`` re-places them per
+    ``parallel.sharding.gan_param_specs`` at construction.
     """
 
-    def __init__(self, gen_params, cfg: GANConfig, *, batch: int = 8):
+    def __init__(self, gen_params, cfg: GANConfig, *, batch: int = 8,
+                 buckets: Optional[tuple[int, ...]] = None, mesh=None):
         from repro.models import gan as G
 
         impl = G.PREPACKED_EQUIV.get(cfg.deconv_impl, cfg.deconv_impl)
         self.cfg = dataclasses.replace(cfg, deconv_impl=impl)
-        self.batch = batch
-        self.params = (
-            G.prepack_generator(gen_params, cfg)
-            if G.uses_prepacked(impl)
-            else gen_params
-        )
+        if buckets is None:
+            buckets, b = [], 1
+            while b < batch:
+                buckets.append(b)
+                b *= 2
+        # batch is always a bucket: explicit bucket lists refine the padding
+        # ladder but never shrink the maximum serveable request
+        self.buckets = tuple(sorted({int(b) for b in buckets} | {int(batch)}))
+        self.batch = self.buckets[-1]
+        self.bucket_counts: dict[int, int] = {}
+        if G.uses_prepacked(impl):
+            self.params = G.prepack_generator(gen_params, cfg, mesh=mesh)
+        elif mesh is not None:
+            from repro.parallel import sharding as SH
+
+            gsp, _, _ = SH.gan_param_specs(self.cfg, mesh)
+            self.params = jax.device_put(gen_params, SH.named(mesh, gsp))
+        else:
+            self.params = gen_params
         cfg_packed = self.cfg
 
         @jax.jit
@@ -167,13 +188,20 @@ class GanServeEngine:
         self._generate = _generate
         self.served = 0
 
+    def bucket_for(self, b: int) -> int:
+        """Smallest serving bucket that fits a size-``b`` request."""
+        for k in self.buckets:
+            if k >= b:
+                return k
+        raise ValueError(f"request batch {b} > engine max bucket {self.buckets[-1]}")
+
     def generate(self, z: jax.Array) -> jax.Array:
         """z: (b, z_dim) latents (or (b, H, W, 3) images for image-to-image
-        models), b <= batch.  Returns the b generated images."""
+        models), b <= max bucket.  Returns the b generated images."""
         b = z.shape[0]
-        if b > self.batch:
-            raise ValueError(f"request batch {b} > engine batch {self.batch}")
-        z_pad = jnp.pad(z, ((0, self.batch - b),) + ((0, 0),) * (z.ndim - 1))
+        k = self.bucket_for(b)
+        self.bucket_counts[k] = self.bucket_counts.get(k, 0) + 1
+        z_pad = jnp.pad(z, ((0, k - b),) + ((0, 0),) * (z.ndim - 1))
         imgs = self._generate(self.params, z_pad)
         self.served += b
         return imgs[:b]

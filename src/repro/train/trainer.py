@@ -18,6 +18,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro import data as D
 from repro.configs.base import GANConfig
@@ -48,8 +49,19 @@ def gan_losses(gp, dp, cfg: GANConfig, z, real, *, training=True):
     return g_loss, d_loss, (g_stats, d_stats, fake)
 
 
-def make_gan_step(cfg: GANConfig, lr=2e-4, b1=0.5):
-    """Returns jit'd alternating G/D update."""
+def make_gan_step(cfg: GANConfig, lr=2e-4, b1=0.5, *, mesh=None,
+                  batch: Optional[int] = None, donate: bool = True):
+    """Returns jit'd alternating G/D update.
+
+    With ``mesh``, the step is NamedSharding-constrained end-to-end: params
+    and AdamW moments follow ``parallel.sharding.gan_param_specs`` /
+    ``opt_specs`` (FSDP over the packed N dim + TP over M where it divides,
+    ZeRO-sharded moments), the (z, real) batch shards over the ("pod","data")
+    axes, and the param/opt buffers are donated.  ``batch`` (the global batch
+    size) is required then, for the divisibility check; ``donate=False``
+    opts out of donation for callers that re-time the step on one argument
+    set (benchmarks).
+    """
 
     def step(gp, dp, g_opt, d_opt, z, real):
         def g_obj(gp_):
@@ -75,7 +87,24 @@ def make_gan_step(cfg: GANConfig, lr=2e-4, b1=0.5):
         }
         return gp2, dp2, g_opt2, d_opt2, metrics
 
-    return jax.jit(step)
+    if mesh is None:
+        return jax.jit(step)
+    if batch is None:
+        raise ValueError("batch (global batch size) is required with mesh")
+    from repro.parallel import sharding as SH
+
+    gsp, dsp, _ = SH.gan_param_specs(cfg, mesh)
+    zspec, rspec, _ = SH.gan_batch_specs(cfg, batch, mesh)
+    mspec = {k: P() for k in ("g_loss", "d_loss", "g_grad_norm", "d_grad_norm")}
+    named = lambda t: SH.named(mesh, t)
+    return jax.jit(
+        step,
+        in_shardings=named(
+            (gsp, dsp, SH.opt_specs(gsp), SH.opt_specs(dsp), zspec, rspec)
+        ),
+        out_shardings=named((gsp, dsp, SH.opt_specs(gsp), SH.opt_specs(dsp), mspec)),
+        donate_argnums=(0, 1, 2, 3) if donate else (),
+    )
 
 
 def train_gan(
@@ -90,6 +119,7 @@ def train_gan(
     hooks: TrainHooks = TrainHooks(),
     dtype=jnp.float32,
     deconv_impl: Optional[str] = None,
+    mesh=None,
 ) -> dict:
     """End-to-end GAN training on synthetic data; restartable.
 
@@ -98,6 +128,13 @@ def train_gan(
     packed transformed weights (G-transform runs once at init), the forward
     consumes them directly, and the backward is the Pallas engines, so no
     step ever re-runs the weight transform or pack.
+
+    ``mesh`` runs the same loop multi-device: params/opt state are placed
+    per ``parallel.sharding.gan_param_specs`` (FSDP + TP with ZeRO-sharded
+    moments) and every step is the donated, NamedSharding-constrained jit
+    from ``make_gan_step(mesh=...)``.  ``batch`` must divide the mesh's
+    ("pod","data") extent for the inputs to shard (otherwise they replicate,
+    recorded in the spec fallback log).
     """
     if deconv_impl is not None:
         cfg = dataclasses.replace(cfg, deconv_impl=deconv_impl)
@@ -116,7 +153,17 @@ def train_gan(
             gp, dp, g_opt, d_opt = tree["gp"], tree["dp"], tree["g_opt"], tree["d_opt"]
             start = last
 
-    step_fn = make_gan_step(cfg)
+    if mesh is not None:
+        from repro.parallel import sharding as SH
+
+        gsp, dsp, _ = SH.gan_param_specs(cfg, mesh)
+        gp = jax.device_put(gp, SH.named(mesh, gsp))
+        dp = jax.device_put(dp, SH.named(mesh, dsp))
+        g_opt = jax.device_put(g_opt, SH.named(mesh, SH.opt_specs(gsp)))
+        d_opt = jax.device_put(d_opt, SH.named(mesh, SH.opt_specs(dsp)))
+        step_fn = make_gan_step(cfg, mesh=mesh, batch=batch)
+    else:
+        step_fn = make_gan_step(cfg)
     metrics_hist = []
     faulted = False
     s = start

@@ -1,9 +1,11 @@
 """Distribution tests on 8 virtual devices (subprocess-isolated so the
 512-device dry-run flag and the 1-device default never leak between tests).
 
-Covers: sharded train step == single-device step, seq-sharded flash decode,
-elastic checkpoint restore across meshes, gradient compression, and a
-miniature dry-run through the real dryrun machinery.
+Covers: sharded train step == single-device step (LM and GAN, the latter in
+the Winograd domain on packed weights), GAN sharding-spec fallbacks and the
+mesh-aware autotuner, seq-sharded flash decode, elastic checkpoint restore
+across meshes, gradient compression, and a miniature dry-run through the
+real dryrun machinery.
 """
 import json
 import os
@@ -54,6 +56,106 @@ def test_sharded_train_step_matches_single_device():
             p1, o1, loss_sharded = fn(params, opt, batch)
         print("SHARDED", float(loss_sharded), "REF", float(loss_ref))
         assert abs(float(loss_sharded) - float(loss_ref)) < 5e-3, (loss_sharded, loss_ref)
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+def test_sharded_gan_step_matches_single_device():
+    """Three Winograd-domain (prepacked) GAN train steps on a 4x2 mesh must
+    match the single-device steps: per-step losses and the final params —
+    including the packed (C, N, M) ww leaves the optimizer updates — allclose."""
+    out = run_py(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import data as D
+        from repro.configs.gan_zoo import tiny_dcgan
+        from repro.launch.mesh import make_mesh
+        from repro.models import gan as G
+        from repro.optim import adamw_init
+        from repro.parallel import sharding as SH
+        from repro.train.trainer import make_gan_step
+
+        cfg = tiny_dcgan("prepacked_ref")
+        B = 8
+        kg, kd = jax.random.split(jax.random.PRNGKey(0))
+        gp, dp = G.generator_init(kg, cfg), G.discriminator_init(kd, cfg)
+        go, do = adamw_init(gp), adamw_init(dp)
+        cp = lambda t: jax.tree.map(jnp.copy, t)
+        g1, d1, go1, do1 = cp(gp), cp(dp), cp(go), cp(do)
+
+        step_1 = make_gan_step(cfg)
+        losses_1 = []
+        for s in range(3):
+            z = D.latent_batch(0, s, B, cfg.z_dim)
+            real = D.gan_batch(0, s, B, cfg.img_hw)
+            g1, d1, go1, do1, m = step_1(g1, d1, go1, do1, z, real)
+            losses_1.append((float(m["g_loss"]), float(m["d_loss"])))
+
+        mesh = make_mesh((4, 2), ("data", "model"))
+        gsp, dsp, fb = SH.gan_param_specs(cfg, mesh)
+        gp = jax.device_put(gp, SH.named(mesh, gsp))
+        dp = jax.device_put(dp, SH.named(mesh, dsp))
+        go = jax.device_put(go, SH.named(mesh, SH.opt_specs(gsp)))
+        do = jax.device_put(do, SH.named(mesh, SH.opt_specs(dsp)))
+        step_s = make_gan_step(cfg, mesh=mesh, batch=B)
+        for s in range(3):
+            z = D.latent_batch(0, s, B, cfg.z_dim)
+            real = D.gan_batch(0, s, B, cfg.img_hw)
+            gp, dp, go, do, m = step_s(gp, dp, go, do, z, real)
+            gl, dl = losses_1[s]
+            assert abs(float(m["g_loss"]) - gl) < 1e-3, (s, float(m["g_loss"]), gl)
+            assert abs(float(m["d_loss"]) - dl) < 1e-3, (s, float(m["d_loss"]), dl)
+
+        # the trainable packed leaf really is sharded (FSDP on N, TP on M)
+        from jax.sharding import PartitionSpec as P
+        assert gp["deconv0"]["ww"].sharding.spec == P(None, ("data",), "model")
+        check = lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=2e-3, rtol=2e-3)
+        jax.tree.map(check, gp, g1)
+        jax.tree.map(check, dp, d1)
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+def test_gan_specs_fallbacks_and_mesh_autotune():
+    """gan_param_specs on a 4x2 mesh: non-divisible dims (every generator's
+    last layer has M=3) degrade to replication and land in the fallback log;
+    opt_specs mirrors the param specs leaf-for-leaf; and the autotuner can
+    time mode='step' under the mesh."""
+    out = run_py(
+        """
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.configs.gan_zoo import tiny_dcgan
+        from repro.core.tdc import DeconvDims
+        from repro.kernels.autotune import EngineConfig, autotune_deconv
+        from repro.launch.mesh import make_mesh
+        from repro.parallel import sharding as SH
+
+        cfg = tiny_dcgan("prepacked_ref")
+        mesh = make_mesh((4, 2), ("data", "model"))
+        gsp, dsp, fb = SH.gan_param_specs(cfg, mesh)
+        # divisible dims shard: packed ww is (C, N, M) -> (None, FSDP, TP)
+        assert gsp["deconv1"]["ww"] == P(None, ("data",), "model"), gsp["deconv1"]
+        # the last deconv's M=3 divides no TP degree -> replicated + logged
+        assert gsp["deconv3"]["ww"] == P(None, ("data",), None), gsp["deconv3"]
+        assert any("deconv3.M" in f and "replicated" in f for f in fb), fb
+        # ZeRO: AdamW moments mirror the param specs exactly
+        osp = SH.opt_specs(gsp)
+        assert osp.m is gsp and osp.v is gsp
+
+        rows = autotune_deconv(
+            DeconvDims(4, 2, 1, 0), (8, 4, 4, 16), 16,
+            candidates=[EngineConfig(False, block_t=16, block_n=8, block_m=8,
+                                     prepack=True)],
+            mode="step", repeats=1, mesh=mesh)
+        assert rows[0]["ok"], rows[0]["error"]
+        # rows carry the sharding fallback log (empty here: all dims divide)
+        assert rows[0]["sharding_fallbacks"] == [], rows[0]
         print("OK")
         """
     )

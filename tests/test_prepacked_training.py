@@ -7,23 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.gan_zoo import DCGAN
+from repro.configs.gan_zoo import tiny_dcgan as tiny_cfg
 from repro.models import gan as G
 from repro.serve.engine import GanServeEngine
 from repro.train.trainer import train_gan
-
-
-def tiny_cfg(impl="ref"):
-    """DCGAN shrunk to test scale (stem 16ch, 8ch trunk)."""
-    return dataclasses.replace(
-        DCGAN,
-        stem_ch=16,
-        deconvs=tuple(
-            dataclasses.replace(d, c_in=16 if i == 0 else 8, c_out=8 if i < 3 else 3)
-            for i, d in enumerate(DCGAN.deconvs)
-        ),
-        deconv_impl=impl,
-    )
 
 
 def test_prepacked_generator_matches_raw():
@@ -74,3 +61,65 @@ def test_gan_serve_engine_prepacks_and_serves():
     assert eng.served == 5
     want, _ = G.generator_apply(p_raw, cfg, z2, training=False)
     np.testing.assert_array_equal(np.asarray(imgs[0]), np.asarray(want))
+
+
+def test_gan_serve_engine_bucket_selection():
+    """Requests pad to the smallest serving bucket, not the max batch: a
+    size-1 request runs the batch-1 executable, and each bucket keeps its
+    own jit signature while outputs stay exact."""
+    cfg = tiny_cfg("ref")
+    p_raw = G.generator_init(jax.random.PRNGKey(0), cfg)
+    eng = GanServeEngine(p_raw, cfg, batch=8)
+    assert eng.buckets == (1, 2, 4, 8)
+    assert eng.bucket_for(1) == 1
+    assert eng.bucket_for(3) == 4
+    assert eng.bucket_for(8) == 8
+
+    z1 = jax.random.normal(jax.random.PRNGKey(1), (1, cfg.z_dim))
+    z3 = jax.random.normal(jax.random.PRNGKey(2), (3, cfg.z_dim))
+    img1 = eng.generate(z1)
+    img3 = eng.generate(z3)
+    assert eng.bucket_counts == {1: 1, 4: 1}
+    assert img1.shape[0] == 1 and img3.shape[0] == 3
+    want, _ = G.generator_apply(p_raw, cfg, z1, training=False)
+    np.testing.assert_array_equal(np.asarray(img1), np.asarray(want))
+
+    with np.testing.assert_raises(ValueError):
+        eng.generate(jax.random.normal(jax.random.PRNGKey(3), (9, cfg.z_dim)))
+    # explicit bucket lists are honored as given
+    eng2 = GanServeEngine(p_raw, cfg, buckets=(1, 4, 8))
+    assert eng2.buckets == (1, 4, 8)
+    assert eng2.bucket_for(2) == 4
+
+
+def test_gan_param_specs_match_param_trees():
+    """The spec trees line up leaf-for-leaf with the real init trees for
+    both raw and packed layouts (tree_map raises on any structure drift),
+    and every leaf is a PartitionSpec."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh
+    from repro.parallel import sharding as SH
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    for impl in ("ref", "prepacked_ref"):
+        cfg = tiny_cfg(impl)
+        gsp, dsp, _ = SH.gan_param_specs(cfg, mesh)
+        gp = jax.eval_shape(
+            lambda k, cfg=cfg: G.generator_init(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        dp = jax.eval_shape(
+            lambda k, cfg=cfg: G.discriminator_init(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        jax.tree.map(
+            lambda s, leaf: None, gsp, gp, is_leaf=lambda x: isinstance(x, P)
+        )
+        jax.tree.map(
+            lambda s, leaf: None, dsp, dp, is_leaf=lambda x: isinstance(x, P)
+        )
+        assert all(
+            isinstance(s, P)
+            for s in jax.tree.leaves(gsp, is_leaf=lambda x: isinstance(x, P))
+        )
