@@ -244,9 +244,6 @@ def main(argv: list[str] | None = None) -> dict:
         report["prepacked_step_speedup_geomean"] = float(
             np.exp(np.mean(np.log(speedups)))
         )
-        # synthetic regression: pretend the prepacking win collapsed, to
-        # prove the CI compare gate goes red (reverted in the next commit)
-        report["prepacked_step_speedup_geomean"] *= 0.1
         print(
             "train_step,summary,prepacked_fused_step_speedup_geomean="
             f"{report['prepacked_step_speedup_geomean']:.3f}"
