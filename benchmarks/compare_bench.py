@@ -12,6 +12,11 @@ trajectory.  Three checks:
   * every (arch, layer, variant, mode) wall time present in the baseline
     must still run (a fresh ``None``/error where the baseline had a number
     is always a failure) and must not exceed baseline * (1 + ``--rel-tol``);
+  * the end-to-end ``generator`` section gates the same way: per-arch
+    chained/per-layer serve-path times under ``--rel-tol``, and the chained
+    speedup geomean (chained pipeline vs per-layer engine) under
+    ``--geomean-tol`` — a PR that erodes the cell-to-cell chaining win
+    goes red;
   * the sharded per-device-count step times gate under the same
     ``--rel-tol``; ``--sharded-only`` restricts the gate to that table (the
     multi-device CI job) and then treats missing device counts as failures.
@@ -51,6 +56,18 @@ def _times(report: dict) -> dict[tuple, float]:
     return out
 
 
+def _generator_times(report: dict) -> dict[tuple, float]:
+    """Flatten the end-to-end generator section to
+    {(arch, "per_layer"|"chained"): ms}."""
+    out: dict[tuple, float] = {}
+    for row in report.get("generator", {}).get("rows", []):
+        for variant in ("per_layer", "chained"):
+            ms = row.get(f"{variant}_ms")
+            if ms is not None:
+                out[(row["arch"], variant)] = float(ms)
+    return out
+
+
 def compare(
     baseline: dict,
     fresh: dict,
@@ -87,6 +104,37 @@ def compare(
         for key, b_ms in sorted(base_t.items()):
             f_ms = fresh_t.get(key)
             name = "/".join(str(k) for k in key)
+            if f_ms is None:
+                failures.append(
+                    f"{name}: baseline ran in {b_ms:.2f}ms, fresh failed or is missing"
+                )
+            elif f_ms > b_ms * (1 + rel_tol):
+                failures.append(
+                    f"{name}: {f_ms:.2f}ms > {b_ms:.2f}ms * (1 + {rel_tol}) = "
+                    f"{b_ms * (1 + rel_tol):.2f}ms"
+                )
+
+        # end-to-end generator section (chained vs per-layer serve path):
+        # every baseline timing must still run within tolerance, and the
+        # chained speedup geomean — a same-machine ratio — gates tightly
+        bgen = baseline.get("generator", {}).get("chained_speedup_geomean")
+        fgen = fresh.get("generator", {}).get("chained_speedup_geomean")
+        if bgen is not None:
+            if fgen is None:
+                failures.append(
+                    "generator chained_speedup_geomean missing from fresh "
+                    f"report (baseline {bgen:.3f})"
+                )
+            elif fgen < bgen * (1 - geomean_tol):
+                failures.append(
+                    f"generator chained_speedup_geomean regressed: {fgen:.3f} "
+                    f"< {bgen:.3f} * (1 - {geomean_tol}) = "
+                    f"{bgen * (1 - geomean_tol):.3f}"
+                )
+        base_g, fresh_g = _generator_times(baseline), _generator_times(fresh)
+        for key, b_ms in sorted(base_g.items()):
+            f_ms = fresh_g.get(key)
+            name = "generator/" + "/".join(str(k) for k in key)
             if f_ms is None:
                 failures.append(
                     f"{name}: baseline ran in {b_ms:.2f}ms, fresh failed or is missing"

@@ -17,7 +17,9 @@ from __future__ import annotations
 
 from repro.core.complexity import dse_model
 from repro.core.tdc import DeconvDims
-from repro.kernels.autotune import EngineConfig, autotune_deconv, small_candidates
+from repro.kernels.autotune import (
+    EngineConfig, autotune_deconv, epilogue_candidates, small_candidates,
+)
 
 from .workloads import GAN_LAYERS
 
@@ -81,7 +83,8 @@ def engine_block_sweep(
         status = f"ms={r['ms']:.2f}" if r["ok"] else f"error={r['error']}"
         print(
             f"dse,engine,mode={mode},pre_pe={'fused' if c.fuse_pre else 'unfused'},"
-            f"{blk},block_n={c.block_n},block_m={c.block_m},{status}"
+            f"{blk},block_n={c.block_n},block_m={c.block_m},"
+            f"epilogue={c.epilogue or '-'},emit_cells={int(c.emit_cells)},{status}"
         )
     return rows
 
@@ -111,6 +114,19 @@ def main():
         print(
             f"dse,engine_best_grad,pre_pe={'fused' if c.fuse_pre else 'unfused'},"
             f"block_n={c.block_n},block_m={c.block_m},ms={won_g['ms']:.2f}"
+        )
+    # Epilogue/chain DSE: scratch-out vs epilogue-fused NHWC vs cells-out,
+    # so the chained-pipeline configs stay comparable with the classic ones.
+    rows_e = engine_block_sweep(
+        candidates=epilogue_candidates(block_ty=(2, 4))
+    )
+    won_e = next((r for r in rows_e if r["ok"]), None)
+    if won_e is not None:
+        c = won_e["config"]
+        print(
+            f"dse,engine_best_epilogue,epilogue={c.epilogue or '-'},"
+            f"emit_cells={int(c.emit_cells)},block_ty={c.block_ty},"
+            f"ms={won_e['ms']:.2f}"
         )
 
 

@@ -82,9 +82,13 @@ def main():
     rec["overrides"] = over
 
     if args.autotune_deconv:
-        from repro.kernels.autotune import autotune_deconv, small_candidates
+        from repro.kernels.autotune import (
+            autotune_deconv, epilogue_candidates, small_candidates,
+        )
 
-        candidates = small_candidates()
+        # classic fused/unfused block sweep + the epilogue/chain axes, so
+        # DSE artifacts stay comparable with the chained-pipeline configs
+        candidates = small_candidates() + epilogue_candidates(block_ty=(4, 8))
         tuned = []
         h = cfg.seed_hw
         for li, d in enumerate(cfg.deconvs):
@@ -100,7 +104,9 @@ def main():
                     f"mode={args.autotune_deconv_mode},"
                     f"pre_pe={'fused' if c.fuse_pre else 'unfused'},"
                     f"block={c.block_ty if c.fuse_pre else c.block_t},"
-                    f"block_n={c.block_n},block_m={c.block_m},ms={won['ms']:.2f}"
+                    f"block_n={c.block_n},block_m={c.block_m},"
+                    f"epilogue={c.epilogue or '-'},emit_cells={int(c.emit_cells)},"
+                    f"ms={won['ms']:.2f}"
                 )
                 tuned.append(
                     {"layer": li, "ok": True, "fuse_pre": c.fuse_pre,

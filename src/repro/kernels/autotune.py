@@ -43,6 +43,7 @@ from . import ops
 
 __all__ = [
     "EngineConfig", "candidate_configs", "small_candidates",
+    "epilogue_candidates",
     "autotune_deconv", "best_config", "make_timed_fn", "time_one",
 ]
 
@@ -53,7 +54,10 @@ class EngineConfig:
 
     ``bwd_block_*`` tile the backward engines (None mirrors the forward
     choice); ``prepack`` times the prepacked-weights path (G-transform +
-    pack hoisted out of the step entirely).
+    pack hoisted out of the step entirely).  ``epilogue`` (an activation
+    name) times the epilogue-fused finalize (bias/act + depth-to-space in
+    VMEM) and ``emit_cells`` the cell-layout output mode that chains into
+    the next layer — the fused-pre epilogue axes of the design space.
     """
 
     fuse_pre: bool
@@ -66,6 +70,8 @@ class EngineConfig:
     bwd_block_n: Optional[int] = None
     bwd_block_m: Optional[int] = None
     prepack: bool = False
+    epilogue: Optional[str] = None  # None | "none" | "relu" | "leaky_relu" | "tanh"
+    emit_cells: bool = False
 
     def kwargs(self) -> dict:
         return dict(
@@ -78,6 +84,8 @@ class EngineConfig:
             bwd_block_ty=self.bwd_block_ty,
             bwd_block_n=self.bwd_block_n,
             bwd_block_m=self.bwd_block_m,
+            epilogue=self.epilogue,
+            emit_cells=self.emit_cells,
         )
 
 
@@ -94,12 +102,17 @@ def candidate_configs(
     include_fused: bool = True,
     include_unfused: bool = True,
     prepack: bool = False,
+    epilogue: Sequence[Optional[str]] = (None,),
+    emit_cells: Sequence[bool] = (False,),
 ) -> list[EngineConfig]:
     """The default sweep grid over block sizes and the pre-PE fusion choice.
 
     The backward axes default to a single None (mirror-forward) point so
     forward-only sweeps stay the same size; pass explicit lists (e.g.
     ``bwd_block_n=(64, 128, 256)``) to sweep the backward engines too.
+    ``epilogue``/``emit_cells`` sweep the fused finalize's epilogue and
+    cell-chaining output modes (fused-pre configs only — the unfused engine
+    has no in-kernel depth-to-space).
     """
     out: list[EngineConfig] = []
     for bn in block_n:
@@ -122,10 +135,30 @@ def candidate_configs(
                                 True, block_ty=bty, block_n=bn, block_m=bm,
                                 bwd_block_ty=bbty, bwd_block_n=bbn,
                                 bwd_block_m=bbm, prepack=prepack,
+                                epilogue=epi, emit_cells=ec,
                             )
                             for bty in block_ty
                             for bbty in bwd_block_ty
+                            for epi in epilogue
+                            for ec in emit_cells
                         )
+    return out
+
+
+def epilogue_candidates(block_ty: Sequence[int] = (4, 8)) -> list[EngineConfig]:
+    """Compact fused-pre sweep over the epilogue/chain axes: scratch-out vs
+    epilogue-fused NHWC vs cell-layout chaining, per tile-row block."""
+    out: list[EngineConfig] = []
+    for bty in block_ty:
+        out.append(EngineConfig(True, block_ty=bty, block_n=128, block_m=128))
+        out.append(
+            EngineConfig(True, block_ty=bty, block_n=128, block_m=128,
+                         epilogue="leaky_relu")
+        )
+        out.append(
+            EngineConfig(True, block_ty=bty, block_n=128, block_m=128,
+                         epilogue="leaky_relu", emit_cells=True)
+        )
     return out
 
 

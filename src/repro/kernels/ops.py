@@ -31,6 +31,7 @@ from repro.core.winograd_deconv import transform_input_tiles, transform_weights
 
 from . import ref as _ref
 from .winograd_deconv import (
+    EPILOGUE_ACTIVATIONS,
     winograd_domain_engine,
     winograd_domain_engine_bwd_w,
     winograd_domain_engine_bwd_x,
@@ -43,10 +44,15 @@ __all__ = [
     "pack_weights",
     "winograd_deconv2d_fused",
     "winograd_deconv2d_packed",
+    "winograd_deconv2d_cells",
     "packed_layout",
     "cells_layout",
+    "cells_from_image",
+    "cells_to_next",
+    "chain_aligned",
     "PackedDeconv",
     "prepack",
+    "EPILOGUE_ACTIVATIONS",
     "INTERPRET_BLOCKS",
     "INTERPRET_BLOCKS_FUSED",
 ]
@@ -210,6 +216,88 @@ def cells_layout(x_pad: jax.Array, ty: int, tx: int, m: int, n: int) -> jax.Arra
     ).reshape(B, gy, gx, m * m, N)
 
 
+def cells_from_image(x: jax.Array, dims: DeconvDims, m: int = 2, r: int = 3) -> jax.Array:
+    """NHWC input -> the fused engine's padded cell layout for ``dims``:
+    the deconv left-pad (kc-1) plus the tile-coverage right-pad, then
+    ``cells_layout`` — the standard prologue of the fuse_pre path."""
+    tf = get_transform(m, r)
+    B, H, W, N = x.shape
+    hj, wj = dims.j_extent(H), dims.j_extent(W)
+    ty, tx = -(-hj // m), -(-wj // m)
+    kc = dims.kc
+    x_pad = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (kc - 1, max(0, m * (ty - 1) + tf.n - (H + kc - 1))),
+            (kc - 1, max(0, m * (tx - 1) + tf.n - (W + kc - 1))),
+            (0, 0),
+        ),
+    )
+    return cells_layout(x_pad, ty, tx, m, tf.n).astype(x.dtype)
+
+
+def chain_aligned(dims: DeconvDims, next_dims: DeconvDims, m: int = 2) -> bool:
+    """True when layer ``dims``'s emitted cell layout lines up with layer
+    ``next_dims``'s input cell layout on whole-cell boundaries.
+
+    The next layer's padded input row i equals this layer's padded-interleave
+    row i + d with d = P - (kc' - 1); when d is a multiple of the cell stride
+    m the conversion is a pure cell-row slice (``cells_to_next``), i.e. zero
+    relayout.  All stride-2 paper geometries (K5S2 -> K5S2, K4S2 -> K4S2)
+    have d = 0; ArtGAN's trailing K4S2 -> K3S1 hop has d = -1 and falls back
+    to the XLA relayout.
+    """
+    return (dims.padding - (next_dims.kc - 1)) % m == 0
+
+
+def cells_to_next(
+    emitted: jax.Array,  # (B, >=ty*S, tx*S, m*m, >=M) from emit_cells
+    dims: DeconvDims,
+    next_dims: DeconvDims,
+    out_hw: tuple[int, int],  # this layer's (H_O, W_O) = next layer's input
+    m: int = 2,
+    r: int = 3,
+) -> jax.Array:
+    """Turn an ``emit_cells`` output into the next layer's input cell layout
+    — whole cell rows/cols only, so XLA sees at most a slice, never a
+    relayout.  Requires ``chain_aligned``.
+
+    The pallas emit_cells output arrives *raw* (block-padded rows/channels,
+    all zero past the crop window); when the shift d is 0 and it already
+    covers the next layer's extent it passes through untouched — the next
+    engine call pads/crops to its own block geometry, so an aligned chain
+    hop costs zero XLA copies."""
+    if not chain_aligned(dims, next_dims, m):
+        raise ValueError(
+            f"cell layouts misaligned: P={dims.padding} vs kc'={next_dims.kc} "
+            f"shift not divisible by m={m}"
+        )
+    tf = get_transform(m, r)
+    HO, WO = out_hw
+    hj2, wj2 = next_dims.j_extent(HO), next_dims.j_extent(WO)
+    ty2, tx2 = -(-hj2 // m), -(-wj2 // m)
+    q = -(-tf.n // m)
+    gy2, gx2 = ty2 + q - 1, tx2 + q - 1
+    d = (dims.padding - (next_dims.kc - 1)) // m
+    GyE, GxE = emitted.shape[1], emitted.shape[2]
+    if d == 0 and GyE >= gy2 and GxE >= gx2:
+        return emitted  # extra rows/cols/channels are zero: engine absorbs
+    pad_before = max(0, -d)
+    arr = jnp.pad(
+        emitted,
+        (
+            (0, 0),
+            (pad_before, max(0, d + gy2 - GyE)),
+            (pad_before, max(0, d + gx2 - GxE)),
+            (0, 0),
+            (0, 0),
+        ),
+    )
+    start = d + pad_before
+    return arr[:, start : start + gy2, start : start + gx2]
+
+
 @functools.partial(
     jax.custom_vjp,
     nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17),
@@ -261,10 +349,215 @@ def _fused_pre_bwd(
 _fused_pre_vjp.defvjp(_fused_pre_fwd, _fused_pre_bwd)
 
 
+# ------------------------------------------------- epilogue-fused engine VJP
+# Forward: the epilogue-fused Pallas engine (post-PE + affine + activation +
+# depth-to-space in VMEM, NHWC pixels or next-layer cells out).  Backward:
+# an *activation-cotangent prologue* in XLA (act'/affine from the saved
+# post-activation output, inverse interleave back to the scratch layout),
+# then the existing fused Pallas backward engines — no new backward kernels.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=tuple(range(5, 21)))
+def _fused_epi_vjp(
+    cells, ww, inv, scale, bias, bt_mat, pos_idx, sub_slices, m, n, ty, tx,
+    m2, out_mode, activation, stride, padding, out_h, out_w, interpret, blocks,
+):
+    bty, bn, bm = blocks[:3]
+    return winograd_fused_pre_engine(
+        cells, ww, inv, bt_mat,
+        pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, tx=tx, m2=m2,
+        block_ty=bty, block_n=bn, block_m=bm, interpret=interpret,
+        out_mode=out_mode, activation=activation, scale=scale, bias=bias,
+        stride=stride, padding=padding, out_h=out_h, out_w=out_w,
+    )
+
+
+def _fused_epi_fwd(
+    cells, ww, inv, scale, bias, bt_mat, pos_idx, sub_slices, m, n, ty, tx,
+    m2, out_mode, activation, stride, padding, out_h, out_w, interpret, blocks,
+):
+    y = _fused_epi_vjp(
+        cells, ww, inv, scale, bias, bt_mat, pos_idx, sub_slices, m, n, ty,
+        tx, m2, out_mode, activation, stride, padding, out_h, out_w,
+        interpret, blocks,
+    )
+    # the post-activation output doubles as the activation residual: every
+    # supported activation's derivative (and, for the scale cotangent, its
+    # pre-activation value wherever the derivative is nonzero) is recoverable
+    # from it, so no second engine output is needed
+    return y, (cells, ww, inv, scale, bias, y)
+
+
+def _fused_epi_bwd(
+    bt_mat, pos_idx, sub_slices, m, n, ty, tx, m2, out_mode, activation,
+    stride, padding, out_h, out_w, interpret, blocks, res, g,
+):
+    from .winograd_deconv import LEAKY_SLOPE
+
+    cells, ww, inv, scale, bias, y_out = res
+    _, _, _, bwd_bty, bwd_bn, bwd_bm = blocks
+    S, ms = stride, m * stride
+    B, M = cells.shape[0], ww.shape[2]
+    f32 = jnp.float32
+
+    if out_mode == "cells":
+        def uncell(c):  # raw cells out -> padded-interleave coords
+            # the forward's raw output is block-padded past ty*S rows and M
+            # channels; everything there is identically zero regardless of
+            # the inputs, so cotangents for it are dropped
+            c = c[:, : ty * S, :, :, :M]
+            return jnp.transpose(
+                c.reshape(B, ty * S, tx * S, m, m, M), (0, 1, 3, 2, 4, 5)
+            ).reshape(B, ty * ms, tx * ms, M)
+
+        g_img = uncell(g.astype(f32))
+        y_img = uncell(y_out.astype(f32))
+        # the forward zeroed everything outside the crop window, so the
+        # cotangent there must not flow back
+        g_img = jnp.pad(
+            g_img[:, padding : padding + out_h, padding : padding + out_w, :],
+            (
+                (0, 0),
+                (padding, ty * ms - padding - out_h),
+                (padding, tx * ms - padding - out_w),
+                (0, 0),
+            ),
+        )
+    else:
+        g_img = g.astype(f32)  # (B, ty*m*S, tx*m*S, M)
+        y_img = y_out.astype(f32)
+
+    # --- activation-cotangent prologue (from the post-activation value)
+    if activation == "relu":
+        dact, pre = (y_img > 0).astype(f32), y_img
+    elif activation == "leaky_relu":
+        dact = jnp.where(y_img >= 0, 1.0, LEAKY_SLOPE)
+        pre = jnp.where(y_img >= 0, y_img, y_img / LEAKY_SLOPE)
+    elif activation == "tanh":
+        dact = 1.0 - y_img * y_img
+        pre = jnp.arctanh(jnp.clip(y_img, -1.0 + 1e-6, 1.0 - 1e-6))
+    else:
+        dact, pre = jnp.ones_like(y_img), y_img
+    dpre = g_img * dact
+    sc = jnp.ones((M,), f32) if scale is None else scale.astype(f32)
+    bi = jnp.zeros((M,), f32) if bias is None else bias.astype(f32)
+    dbias = jnp.sum(dpre, axis=(0, 1, 2))
+    # raw engine output v = (pre - bias) / scale; where act' = 0 the value of
+    # v is irrelevant (dpre = 0), so the relu information loss is harmless.
+    # An exactly-zero scale channel destroys v entirely — its true dscale is
+    # unrecoverable from the saved activation, so it gets 0 instead of a NaN
+    # that would poison the whole leaf through the optimizer's global norm
+    # (zero-scale channels carry no deconv signal; the unfused XLA-epilogue
+    # path remains exact for that degenerate case).
+    sc_safe = jnp.where(sc == 0, 1.0, sc)
+    v = jnp.where(sc == 0, 0.0, (pre - bi) / sc_safe)
+    dscale = jnp.sum(dpre * v, axis=(0, 1, 2))
+    g_aff = dpre * sc
+
+    # --- inverse interleave: back to the (B, ty, tx, S2*m2, M) scratch layout
+    g_scr = jnp.transpose(
+        g_aff.reshape(B, ty, m, S, tx, m, S, M), (0, 1, 4, 3, 6, 2, 5, 7)
+    ).reshape(B, ty, tx, S * S * m * m, M).astype(g.dtype)
+
+    gy, gx = cells.shape[1], cells.shape[2]
+    dcells = winograd_fused_pre_engine_bwd_x(
+        g_scr, ww, inv, bt_mat,
+        pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, tx=tx,
+        gy=gy, gx=gx, m2=m2, interpret=interpret,
+        block_ty=bwd_bty, block_n=bwd_bn, block_m=bwd_bm,
+    )
+    dww = winograd_fused_pre_engine_bwd_w(
+        cells, g_scr, inv, bt_mat,
+        pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, tx=tx, m2=m2,
+        interpret=interpret, block_ty=bwd_bty, block_n=bwd_bn, block_m=bwd_bm,
+    )
+    ds = None if scale is None else dscale.astype(scale.dtype)
+    db = None if bias is None else dbias.astype(bias.dtype)
+    return (
+        dcells.astype(cells.dtype), dww.astype(ww.dtype), jnp.zeros_like(inv),
+        ds, db,
+    )
+
+
+_fused_epi_vjp.defvjp(_fused_epi_fwd, _fused_epi_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "dims", "in_hw", "m", "r", "backend", "interpret", "epilogue",
+        "emit_cells", "block_ty", "block_n", "block_m",
+        "bwd_block_ty", "bwd_block_n", "bwd_block_m",
+    ),
+)
+def winograd_deconv2d_cells(
+    cells: jax.Array,  # (B, Gy, Gx, m*m, N) this layer's input cell layout
+    packed: PackedDeconv,
+    dims: DeconvDims,
+    in_hw: tuple[int, int],  # the (H, W) the cells were built from
+    *,
+    m: int = 2,
+    r: int = 3,
+    backend: str = "pallas",
+    interpret: bool = False,
+    epilogue: str = "none",
+    scale: jax.Array | None = None,  # (M,) per-channel epilogue scale
+    bias: jax.Array | None = None,  # (M,) per-channel epilogue bias
+    emit_cells: bool = False,
+    block_ty: int = 8,
+    block_n: int = 128,
+    block_m: int = 128,
+    bwd_block_ty: int | None = None,
+    bwd_block_n: int | None = None,
+    bwd_block_m: int | None = None,
+) -> jax.Array:
+    """Cell-to-cell chained deconv: consume the fused engine's cell layout
+    directly (e.g. the previous layer's ``emit_cells`` output via
+    ``cells_to_next``), run the epilogue-fused engine, and return either the
+    final NHWC image (B, H_O, W_O, M) or — with ``emit_cells`` — the next
+    layer's cell layout, never leaving the engine domain.
+    """
+    tf = get_transform(m, r)
+    H, W = in_hw
+    HO, WO = dims.out_size(H), dims.out_size(W)
+    hj, wj = dims.j_extent(H), dims.j_extent(W)
+    ty, tx = -(-hj // m), -(-wj // m)
+    m2 = m * m
+    pos_idx, sub_slices, _, _ = packed_layout(dims, m, r)
+    bt_mat = tuple(tuple(float(v) for v in row) for row in tf.BT)
+    out_mode = "cells" if emit_cells else "nhwc"
+    if backend == "pallas":
+        blocks = (
+            block_ty, block_n, block_m,
+            block_ty if bwd_block_ty is None else bwd_block_ty,
+            block_n if bwd_block_n is None else bwd_block_n,
+            block_m if bwd_block_m is None else bwd_block_m,
+        )
+        y = _fused_epi_vjp(
+            cells, packed.ww, packed.inv, scale, bias, bt_mat, pos_idx,
+            sub_slices, m, tf.n, ty, tx, m2, out_mode, epilogue, dims.stride,
+            dims.padding, HO, WO, interpret, blocks,
+        )
+    elif backend == "ref":
+        y = _ref.fused_epilogue_engine_ref(
+            cells, packed.ww, packed.inv, bt_mat, scale, bias,
+            pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=tf.n, ty=ty, tx=tx,
+            m2=m2, out_mode=out_mode, activation=epilogue, stride=dims.stride,
+            padding=dims.padding, out_h=HO, out_w=WO,
+        )
+    else:
+        raise ValueError(backend)
+    if emit_cells:
+        return y
+    P = dims.padding
+    return y[:, P : P + HO, P : P + WO, :]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
         "dims", "m", "r", "backend", "interpret", "fuse_pre",
+        "epilogue", "emit_cells",
         "block_t", "block_n", "block_m", "block_ty",
         "bwd_block_t", "bwd_block_n", "bwd_block_m", "bwd_block_ty",
     ),
@@ -279,6 +572,10 @@ def winograd_deconv2d_packed(
     backend: str = "pallas",
     interpret: bool = False,
     fuse_pre: bool = False,
+    epilogue: str | None = None,
+    scale: jax.Array | None = None,
+    bias: jax.Array | None = None,
+    emit_cells: bool = False,
     block_t: int = 128,
     block_n: int = 128,
     block_m: int = 128,
@@ -295,6 +592,14 @@ def winograd_deconv2d_packed(
     w.r.t. ``packed.ww`` comes straight out of the Pallas backward engine
     (training in the Winograd domain).  ``bwd_block_*`` tile the backward
     kernels; ``None`` mirrors the forward choice.
+
+    ``epilogue`` (an activation name) with optional per-channel ``scale`` /
+    ``bias`` computes act(scale * deconv(x) + bias); with ``fuse_pre`` on the
+    pallas/ref backends it runs inside the engine finalize (bias, activation
+    and the depth-to-space interleave never touch HBM separately), elsewhere
+    it falls back to an XLA epilogue.  ``emit_cells`` (fuse_pre only)
+    returns the next layer's cell layout instead of the NHWC image — see
+    ``winograd_deconv2d_cells`` / ``cells_to_next`` for chaining.
     """
     tf = get_transform(m, r)
     B, H, W, N = x.shape
@@ -304,6 +609,22 @@ def winograd_deconv2d_packed(
     hj, wj = dims.j_extent(H), dims.j_extent(W)
     ty, tx = -(-hj // m), -(-wj // m)
     kc = dims.kc
+
+    wants_epi = (
+        emit_cells or epilogue is not None or scale is not None
+        or bias is not None
+    )
+    if wants_epi and fuse_pre and backend in ("pallas", "ref"):
+        return winograd_deconv2d_cells(
+            cells_from_image(x, dims, m, r), packed, dims, (H, W),
+            m=m, r=r, backend=backend, interpret=interpret,
+            epilogue=epilogue or "none", scale=scale, bias=bias,
+            emit_cells=emit_cells, block_ty=block_ty, block_n=block_n,
+            block_m=block_m, bwd_block_ty=bwd_block_ty,
+            bwd_block_n=bwd_block_n, bwd_block_m=bwd_block_m,
+        )
+    if emit_cells:
+        raise ValueError("emit_cells requires fuse_pre with a pallas/ref backend")
 
     pos_idx, sub_slices, _, _ = packed_layout(dims, m, r)
     x_pad = jnp.pad(
@@ -358,13 +679,17 @@ def winograd_deconv2d_packed(
     y = y.reshape(B, ty, tx, S, S, m, m, M)
     y = jnp.transpose(y, (3, 4, 0, 1, 5, 2, 6, 7)).reshape(S, S, B, ty * m, tx * m, M)
     y = y[:, :, :, :hj, :wj, :].astype(x.dtype)
-    return interleave_crop(y, dims, (HO, WO))
+    out = interleave_crop(y, dims, (HO, WO))
+    if wants_epi:  # unfused / other backends: XLA epilogue, same semantics
+        out = _ref.epilogue_apply_ref(out, scale, bias, epilogue or "none")
+    return out.astype(x.dtype)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "dims", "m", "r", "backend", "interpret", "fuse_pre",
+        "epilogue", "emit_cells",
         "block_t", "block_n", "block_m", "block_ty",
         "bwd_block_t", "bwd_block_n", "bwd_block_m", "bwd_block_ty",
     ),
@@ -379,6 +704,10 @@ def winograd_deconv2d_fused(
     backend: str = "pallas",
     interpret: bool = False,
     fuse_pre: bool = False,
+    epilogue: str | None = None,
+    scale: jax.Array | None = None,
+    bias: jax.Array | None = None,
+    emit_cells: bool = False,
     block_t: int = 128,
     block_n: int = 128,
     block_m: int = 128,
@@ -397,12 +726,17 @@ def winograd_deconv2d_fused(
     variant's tile-row block (its T block is block_ty * tx tiles);
     ``block_t`` blocks the unfused variant's flat tile axis.
 
+    ``epilogue`` / ``scale`` / ``bias`` / ``emit_cells`` fuse the per-channel
+    affine, activation and depth-to-space (or the next layer's cell layout)
+    into the engine finalize — see ``winograd_deconv2d_packed``.
+
     This convenience wrapper re-packs ``w`` on every call; hot paths should
     ``prepack`` once and call ``winograd_deconv2d_packed``.
     """
     return winograd_deconv2d_packed(
         x, prepack(w, dims, m, r), dims,
         m=m, r=r, backend=backend, interpret=interpret, fuse_pre=fuse_pre,
+        epilogue=epilogue, scale=scale, bias=bias, emit_cells=emit_cells,
         block_t=block_t, block_n=block_n, block_m=block_m, block_ty=block_ty,
         bwd_block_t=bwd_block_t, bwd_block_n=bwd_block_n,
         bwd_block_m=bwd_block_m, bwd_block_ty=bwd_block_ty,

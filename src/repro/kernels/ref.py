@@ -14,6 +14,9 @@ from repro.core.winograd_deconv import winograd_deconv2d as winograd_deconv2d_re
 __all__ = [
     "engine_ref",
     "fused_pre_engine_ref",
+    "fused_epilogue_engine_ref",
+    "epilogue_apply_ref",
+    "interleave_tiles_ref",
     "winograd_deconv2d_ref",
     "engine_bwd_x_ref",
     "engine_bwd_w_ref",
@@ -88,6 +91,87 @@ def fused_pre_engine_ref(
         pos_idx=pos_idx, sub_slices=sub_slices, m2=m2,
     )
     return y.reshape(B, ty, tx, -1, M)
+
+
+def epilogue_apply_ref(y, scale, bias, activation: str):
+    """Pure-jnp mirror of the kernel epilogue: per-channel affine (over the
+    trailing axis) + activation, in fp32.  The slope comes from the kernel
+    module so the oracle can never drift from what the engine computes."""
+    from .winograd_deconv import LEAKY_SLOPE
+
+    y = y.astype(jnp.float32)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "leaky_relu":
+        y = jnp.where(y >= 0, y, LEAKY_SLOPE * y)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation != "none":
+        raise ValueError(activation)
+    return y
+
+
+def interleave_tiles_ref(y, ty: int, tx: int, m: int, stride: int):
+    """Scratch-layout engine output (B, ty, tx, S2*m2, M) -> the padded
+    depth-to-space interleave (B, ty*m*S, tx*m*S, M): sub-pixel (ry, rx, p, q)
+    of tile (j, t) lands at row m*S*j + S*p + ry, col m*S*t + S*q + rx."""
+    B, _, _, _, M = y.shape
+    S = stride
+    y = y.reshape(B, ty, tx, S, S, m, m, M)
+    return jnp.transpose(y, (0, 1, 5, 3, 2, 6, 4, 7)).reshape(
+        B, ty * m * S, tx * m * S, M
+    )
+
+
+def fused_epilogue_engine_ref(
+    cells: jax.Array,  # (B, Gy, Gx, m*m, N)
+    ww_packed: jax.Array,  # (C, N, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    bt_mat,  # (n, n) B^T
+    scale,  # (M,) or None
+    bias,  # (M,) or None
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m: int,
+    n: int,
+    ty: int,
+    tx: int,
+    m2: int,
+    out_mode: str,  # "nhwc" | "cells"
+    activation: str,
+    stride: int,
+    padding: int,
+    out_h: int,
+    out_w: int,
+) -> jax.Array:
+    """Oracle for the epilogue-fused engine: same cell layout in, same
+    padded-interleave pixels ("nhwc") or next-layer cell layout ("cells")
+    out, with the affine + activation + crop-window zeroing done in jnp."""
+    y = fused_pre_engine_ref(
+        cells, ww_packed, inv_packed, bt_mat,
+        pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, tx=tx, m2=m2,
+    )
+    img = interleave_tiles_ref(y, ty, tx, m, stride)  # (B, ty*m*S, tx*m*S, M)
+    img = epilogue_apply_ref(img, scale, bias, activation)
+    if out_mode == "nhwc":
+        return img.astype(cells.dtype)
+    if out_mode != "cells":
+        raise ValueError(out_mode)
+    B, R, Cc, M = img.shape
+    rows = jnp.arange(R)
+    cols = jnp.arange(Cc)
+    rmask = (rows >= padding) & (rows < padding + out_h)
+    cmask = (cols >= padding) & (cols < padding + out_w)
+    img = jnp.where(rmask[None, :, None, None] & cmask[None, None, :, None], img, 0.0)
+    out = jnp.transpose(
+        img.reshape(B, ty * stride, m, tx * stride, m, M), (0, 1, 3, 2, 4, 5)
+    ).reshape(B, ty * stride, tx * stride, m * m, M)
+    return out.astype(cells.dtype)
 
 
 # ------------------------------------------------------------- backward

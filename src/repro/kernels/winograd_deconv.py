@@ -53,6 +53,64 @@ __all__ = [
 ]
 
 
+LEAKY_SLOPE = 0.2  # must match models.layers.leaky_relu
+
+EPILOGUE_ACTIVATIONS = ("none", "relu", "leaky_relu", "tanh")
+
+
+def _apply_epilogue(y, scale, bias, activation: str):
+    """Per-output-channel affine + activation in fp32 (the paper's bias/act
+    stage, fused into the post-PE finalize so it runs on VMEM-resident data).
+    ``scale``/``bias`` broadcast over the trailing M axis; None skips."""
+    if scale is not None:
+        y = y * scale
+    if bias is not None:
+        y = y + bias
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "leaky_relu":
+        y = jnp.where(y >= 0, y, LEAKY_SLOPE * y)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation != "none":
+        raise ValueError(f"unsupported epilogue activation {activation!r}")
+    return y
+
+
+def _com_pe(xw, ww_ref, acc_ref, *, pos_idx):
+    """com-PE: one MXU matmul per packed (structurally nonzero) position."""
+    for p, pos in enumerate(pos_idx):
+        x_p = xw[:, pos, :]  # (T_t, N_t) static row select
+        w_p = ww_ref[p, :, :]  # (N_t, M_t)
+        acc_ref[p, :, :] += jax.lax.dot(
+            x_p, w_p, precision=jax.lax.Precision.DEFAULT,
+            preferred_element_type=jnp.float32,
+        )
+
+
+def _post_pe_sub_outputs(acc_ref, inv_ref, sub_slices):
+    """post-PE sparse inverse transform: per sub-filter the (m2, T_t, M_t)
+    fp32 sub-pixel outputs, or None for structurally empty sub-filters
+    (the K_D < S corner — those output pixels receive no weight taps)."""
+    outs = []
+    for lo, hi in sub_slices:
+        if hi == lo:
+            outs.append(None)
+            continue
+        acc = acc_ref[lo:hi, :, :]  # (c_s, T_t, M_t)
+        inv = inv_ref[lo:hi, :]  # (c_s, m2)
+        # y[a, t, m] = sum_p inv[p, a] * acc[p, t, m]
+        outs.append(
+            jax.lax.dot_general(
+                inv.astype(jnp.float32),
+                acc,
+                (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        )
+    return outs
+
+
 def _com_post_pe(
     xw,  # (T_t, n2, N_t) transformed input tiles (VMEM value)
     ww_ref,  # (C, N_t, M_t) packed nonzero transformed weights
@@ -65,43 +123,133 @@ def _com_post_pe(
     m2: int,
     n_steps: int,
 ):
-    """Shared com-PE + post-PE stage of both engine variants."""
+    """Shared com-PE + post-PE stage of both engine variants (scratch-layout
+    output: per-tile sub-pixel rows, sub-filter-major)."""
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # --- com-PE: one MXU matmul per packed (structurally nonzero) position
-    for p, pos in enumerate(pos_idx):
-        x_p = xw[:, pos, :]  # (T_t, N_t) static row select
-        w_p = ww_ref[p, :, :]  # (N_t, M_t)
-        acc_ref[p, :, :] += jax.lax.dot(
-            x_p, w_p, precision=jax.lax.Precision.DEFAULT,
-            preferred_element_type=jnp.float32,
-        )
+    _com_pe(xw, ww_ref, acc_ref, pos_idx=pos_idx)
 
     # --- post-PE: sparse inverse transform, only on the final N step
     @pl.when(k == n_steps - 1)
     def _finalize():
-        for s, (lo, hi) in enumerate(sub_slices):
-            if hi == lo:  # structurally empty sub-filter (K_D < S corner)
+        ys = _post_pe_sub_outputs(acc_ref, inv_ref, sub_slices)
+        for s, y in enumerate(ys):
+            if y is None:  # structurally empty sub-filter (K_D < S corner)
                 out_ref[:, s * m2 : (s + 1) * m2, :] = jnp.zeros(
                     (out_ref.shape[0], m2, out_ref.shape[2]), out_ref.dtype
                 )
                 continue
-            acc = acc_ref[lo:hi, :, :]  # (c_s, T_t, M_t)
-            inv = inv_ref[lo:hi, :]  # (c_s, m2)
-            # out[t, a, m] = sum_p inv[p, a] * acc[p, t, m]
-            y = jax.lax.dot_general(
-                inv.astype(jnp.float32),
-                acc,
-                (((0,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )  # (m2, T_t, M_t)
             out_ref[:, s * m2 : (s + 1) * m2, :] = jnp.transpose(
                 y, (1, 0, 2)
             ).astype(out_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Epilogue-fused finalizes.  Instead of the (T_t, S2*m2, M_t) scratch layout
+# (whose depth-to-space interleave, bias and activation then run as separate
+# XLA passes over HBM), the last N step applies the per-channel affine +
+# activation in VMEM and writes either
+#   * final NHWC pixels of the *padded interleave* (rows/cols [0, S*m*t)),
+#     which the host crops to [P, P+H_O) — "nhwc"; or
+#   * the next layer's padded m x m cell layout (the inverse of
+#     ops.cells_layout) with everything outside the [P, P+H_O) x [P, P+W_O)
+#     crop window zeroed in-kernel — "cells", so the following
+#     winograd_fused_pre_engine consumes it with zero XLA relayout.
+# ---------------------------------------------------------------------------
+
+
+def _stack_sub_outputs(ys, m2: int):
+    """(S2, m2, T_t, M_t) fp32: the post-PE outputs with structurally empty
+    sub-filters filled by zeros (one stack — the assembly below is then a
+    single transpose, not a web of small concatenates)."""
+    t_t = next(y for y in ys if y is not None).shape[1]
+    m_t = next(y for y in ys if y is not None).shape[2]
+    zero = jnp.zeros((m2, t_t, m_t), jnp.float32)
+    return jnp.stack([zero if y is None else y for y in ys], axis=0)
+
+
+def _finalize_nhwc(
+    ys,  # per sub-filter (m2, T_t, M_t) fp32 or None
+    out_ref,  # (1, bty*m*S, tx*m*S, M_t)
+    *,
+    m: int,
+    stride: int,
+    tx: int,
+    scale,  # (M_t,) fp32 or None
+    bias,
+    activation: str,
+):
+    """Depth-to-space in VMEM: tile (j, t) sub-pixel (s=(ry,rx), a=(p,q))
+    lands at padded-interleave row m*S*j + S*p + ry, col m*S*t + S*q + rx —
+    a pure transpose of the stacked post-PE outputs."""
+    S = stride
+    ms = m * S
+    bty = out_ref.shape[1] // ms
+    bm = out_ref.shape[3]
+    full = _stack_sub_outputs(ys, m * m).reshape(S, S, m, m, bty, tx, bm)
+    # (ry, rx, p, q, bty, tx, bm) -> (bty, p, ry, tx, q, rx, bm)
+    y = jnp.transpose(full, (4, 2, 0, 5, 3, 1, 6)).reshape(bty * ms, tx * ms, bm)
+    y = _apply_epilogue(y, scale, bias, activation)
+    out_ref[...] = y[None].astype(out_ref.dtype)
+
+
+def _finalize_cells(
+    ys,  # per sub-filter (m2, T_t, M_t) fp32 or None
+    out_ref,  # (1, bty*S, tx*S, m*m, M_t)
+    mask,  # (bty*S, tx*S, m*m, 1) fp32 crop-window mask (precomputed host-side)
+    *,
+    m: int,
+    stride: int,
+    tx: int,
+    scale,
+    bias,
+    activation: str,
+):
+    """Emit the m x m cell layout of the epilogue'd padded interleave, with
+    pixels outside the [P, P+H_O) x [P, P+W_O) crop window zeroed — exactly
+    what ops.cells_layout of the *next* layer's padded input holds (up to a
+    whole-cell-row shift handled host-side), so layer i+1's fused pre-PE
+    consumes this output directly.  The crop-window mask is static per grid
+    row, so it arrives as a precomputed operand (XLA constant-folds it) and
+    costs one VPU multiply here instead of an iota/compare chain."""
+    S = stride
+    bty = out_ref.shape[1] // S
+    bm = out_ref.shape[4]
+    m2c = m * m
+    if S == m or S == 1:
+        # interleave row S*p + ry regrouped by cells (m*gy + pp) is a pure
+        # axis relabel here: S==m -> (gy, pp) = (p, ry); S==1 -> gy trivial,
+        # pp = p.  One stack + one transpose covers every paper geometry.
+        full = _stack_sub_outputs(ys, m2c).reshape(S, S, m, m, bty, tx, bm)
+        perm = (4, 2, 5, 3, 0, 1, 6) if S == m else (4, 0, 5, 1, 2, 3, 6)
+        out = jnp.transpose(full, perm).reshape(bty * S, tx * S, m2c, bm)
+    else:  # general (e.g. K_D < S geometries): per-position gather
+        zero = jnp.zeros((bty, tx, bm), jnp.float32)
+        cellpos = []
+        for pp in range(m):
+            for qq in range(m):
+                grid_rows = []
+                for gy in range(S):
+                    rl = gy * m + pp  # interleave row within the tile row
+                    p, ry = rl // S, rl % S
+                    grid_cols = []
+                    for gx in range(S):
+                        cl = gx * m + qq
+                        q, rx = cl // S, cl % S
+                        y_s = ys[ry * S + rx]
+                        grid_cols.append(
+                            zero if y_s is None else y_s[p * m + q].reshape(bty, tx, bm)
+                        )
+                    grid_rows.append(jnp.stack(grid_cols, axis=2))  # (bty, tx, S, bm)
+                g = jnp.stack(grid_rows, axis=1)  # (bty, S, tx, S, bm)
+                cellpos.append(g.reshape(bty * S, tx * S, bm))
+        out = jnp.stack(cellpos, axis=2)  # (bty*S, tx*S, m*m, bm)
+    out = _apply_epilogue(out, scale, bias, activation)
+    out_ref[...] = (out * mask)[None].astype(out_ref.dtype)
 
 
 def _engine_kernel(
@@ -272,11 +420,68 @@ def _fused_pre_kernel(
     )
 
 
+def _fused_pre_epi_kernel(
+    c0_ref,  # (1, bty, Gxp, m2c, N_t) cell rows
+    c1_ref,  # (1, h, Gxp, m2c, N_t) halo cell rows
+    ww_ref,  # (C, N_t, M_t)
+    inv_ref,  # (C, m2)
+    scale_ref,  # (1, M_t) fp32 per-channel scale
+    bias_ref,  # (1, M_t) fp32 per-channel bias
+    mask_ref,  # cells mode: (bty*S, tx*S, m*m, 1) fp32 crop-window mask
+    out_ref,  # nhwc: (1, bty*m*S, tx*m*S, M_t) | cells: (1, bty*S, tx*S, m*m, M_t)
+    acc_ref,  # scratch (C, bty*tx, M_t) fp32
+    *,
+    bt_const: tuple[tuple[float, ...], ...],
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m: int,
+    n: int,
+    tx: int,
+    n_steps: int,
+    in_dtype,
+    out_mode: str,  # "nhwc" | "cells"
+    activation: str,
+    stride: int,
+    has_scale: bool,
+    has_bias: bool,
+):
+    """Fused pre-PE + com-PE + epilogue-fused post-PE: the finalize applies
+    scale/bias/activation and the stride-S depth-to-space in VMEM, writing
+    final pixels (or the next layer's cell layout) instead of scratch rows."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xw = _cells_to_xw(c0_ref, c1_ref, bt_const=bt_const, m=m, n=n, tx=tx, in_dtype=in_dtype)
+    _com_pe(xw, ww_ref, acc_ref, pos_idx=pos_idx)
+
+    @pl.when(k == n_steps - 1)
+    def _finalize():
+        ys = _post_pe_sub_outputs(acc_ref, inv_ref, sub_slices)
+        scale = scale_ref[0].astype(jnp.float32) if has_scale else None
+        bias = bias_ref[0].astype(jnp.float32) if has_bias else None
+        if out_mode == "nhwc":
+            _finalize_nhwc(
+                ys, out_ref, m=m, stride=stride, tx=tx,
+                scale=scale, bias=bias, activation=activation,
+            )
+        elif out_mode == "cells":
+            _finalize_cells(
+                ys, out_ref, mask_ref[...], m=m, stride=stride, tx=tx,
+                scale=scale, bias=bias, activation=activation,
+            )
+        else:
+            raise ValueError(out_mode)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
         "bt_mat", "pos_idx", "sub_slices", "m", "n", "ty", "tx", "m2",
         "block_ty", "block_n", "block_m", "interpret",
+        "out_mode", "activation", "stride", "padding", "out_h", "out_w",
     ),
 )
 def winograd_fused_pre_engine(
@@ -296,12 +501,31 @@ def winograd_fused_pre_engine(
     block_n: int = 128,
     block_m: int = 128,
     interpret: bool = False,
+    out_mode: str = "scratch",  # "scratch" | "nhwc" | "cells"
+    activation: str = "none",
+    scale: jax.Array | None = None,  # (M,) per-channel epilogue scale
+    bias: jax.Array | None = None,  # (M,) per-channel epilogue bias
+    stride: int = 0,  # S; required for the epilogue out modes
+    padding: int = 0,  # P (crop offset of the padded interleave)
+    out_h: int = 0,  # H_O (crop window height)
+    out_w: int = 0,  # W_O
 ) -> jax.Array:
     """Fused pre-PE + com-PE + post-PE engine.
 
-    Consumes the cell layout directly and returns (B, ty, tx, S2*m2, M) —
-    the same per-tile sub-pixel outputs as ``winograd_domain_engine`` on the
-    reorganized (T, n2, N) matrix, without materializing it in HBM.
+    ``out_mode="scratch"`` (default) consumes the cell layout directly and
+    returns (B, ty, tx, S2*m2, M) — the same per-tile sub-pixel outputs as
+    ``winograd_domain_engine`` on the reorganized (T, n2, N) matrix, without
+    materializing it in HBM.
+
+    The epilogue out modes fuse the per-channel affine + ``activation`` and
+    the stride-S depth-to-space into the finalize (everything the scratch
+    layout leaves to XLA):
+      * ``"nhwc"`` returns the epilogue'd *padded interleave*
+        (B, ty*m*S, tx*m*S, M); crop rows/cols [P, P+H_O) for the NHWC image.
+      * ``"cells"`` returns the next layer's padded m x m cell layout
+        (B, ty*S, tx*S, m*m, M) with pixels outside the crop window zeroed —
+        the inverse of ``ops.cells_layout``, so the next
+        ``winograd_fused_pre_engine`` call chains on it with no XLA relayout.
 
     Grid: (B * ty_blocks, M_blocks, N_blocks); each step stages a
     (block_ty + halo) strip of cell rows in VMEM, B-transforms it, and feeds
@@ -326,57 +550,155 @@ def winograd_fused_pre_engine(
     # Pad y a full extra block so the last halo read is in-bounds and both
     # specs' block shapes divide the array; x needs tx + q - 1 cell columns
     # in-block.  (Padding is HBM capacity only — DMA per step is bty + h.)
+    # A chained input (another layer's raw cells-out, see below) may carry
+    # extra all-zero rows past the tile extent — crop, don't pad negative.
     Gyp = (n_ty_blocks + 1) * bty
     Gxp = max(Gx, tx + q - 1)
+    if Gy > Gyp:
+        cells = cells[:, :Gyp]
+        Gy = Gyp
     cells_p = jnp.pad(
         cells, ((0, 0), (0, Gyp - Gy), (0, Gxp - Gx), (0, 0), (0, Np - N))
     )
-    ww_p = jnp.pad(ww_packed, ((0, 0), (0, Np - N), (0, Mp - M)))
+    # a chained input may also carry trailing all-zero channels (the previous
+    # layer's block-padded M axis): pad ww up to the cells' channel extent
+    ww_p = jnp.pad(ww_packed, ((0, 0), (0, Np - ww_packed.shape[1]), (0, Mp - M)))
     grid = (B * n_ty_blocks, Mp // bm, Np // bn)
 
     cell_block = (1, bty, Gxp, m2c, bn)
+    in_specs = [
+        pl.BlockSpec(
+            cell_block,
+            lambda i, j, k: (i // n_ty_blocks, i % n_ty_blocks, 0, 0, k),
+        ),
+        pl.BlockSpec(
+            (1, h, Gxp, m2c, bn),
+            lambda i, j, k: (
+                i // n_ty_blocks,
+                (i % n_ty_blocks + 1) * (bty // h),
+                0, 0, k,
+            ),
+        ),
+        pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, k, j)),
+        pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+    ]
+    common = dict(
+        grid=grid,
+        scratch_shapes=[pltpu.VMEM((C, bty * tx, bm), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )
+
+    if out_mode == "scratch":
+        out = pl.pallas_call(
+            functools.partial(
+                _fused_pre_kernel,
+                bt_const=bt_mat,
+                pos_idx=pos_idx,
+                sub_slices=sub_slices,
+                m=m,
+                n=n,
+                tx=tx,
+                m2=m2,
+                n_steps=grid[2],
+                in_dtype=cells.dtype,
+            ),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bty * tx, S2 * m2, bm), lambda i, j, k: (i, 0, j)),
+            out_shape=jax.ShapeDtypeStruct(
+                (B * n_ty_blocks * bty * tx, S2 * m2, Mp), cells.dtype
+            ),
+            **common,
+        )(cells_p, cells_p, ww_p, inv_packed)
+        out = out.reshape(B, n_ty_blocks * bty, tx, S2 * m2, Mp)
+        return out[:, :ty, :, :, :M]
+
+    # --- epilogue out modes: scale/bias ride along as (1, Mp) fp32 operands
+    if out_mode not in ("nhwc", "cells"):
+        raise ValueError(out_mode)
+    if stride <= 0 or out_h <= 0 or out_w <= 0:
+        raise ValueError("epilogue out modes need stride/out_h/out_w")
+    ones = jnp.ones((M,), jnp.float32) if scale is None else scale
+    zeros = jnp.zeros((M,), jnp.float32) if bias is None else bias
+    scale_p = jnp.pad(ones.reshape(1, M).astype(jnp.float32), ((0, 0), (0, Mp - M)))
+    bias_p = jnp.pad(zeros.reshape(1, M).astype(jnp.float32), ((0, 0), (0, Mp - M)))
+    ms = m * stride
+    if out_mode == "cells":
+        # crop-window mask, precomputed once per call (static shapes, so XLA
+        # constant-folds it): emitted cell (rr, cc) intra (pp, qq) holds
+        # interleave pixel (m*rr + pp, m*cc + qq), valid in [P, P+H_O) x
+        # [P, P+W_O).  One (rows, tx*S, m2, 1) operand; the kernel applies
+        # it as a single multiply.
+        rows = n_ty_blocks * bty * stride
+        r_io = jnp.arange(rows, dtype=jnp.int32)[:, None, None, None]
+        c_io = jnp.arange(tx * stride, dtype=jnp.int32)[None, :, None, None]
+        a_io = jnp.arange(m * m, dtype=jnp.int32)[None, None, :, None]
+        row_px = m * r_io + a_io // m
+        col_px = m * c_io + a_io % m
+        mask = (
+            (row_px >= padding) & (row_px < padding + out_h)
+            & (col_px >= padding) & (col_px < padding + out_w)
+        ).astype(jnp.float32)
+        mask_spec = pl.BlockSpec(
+            (bty * stride, tx * stride, m * m, 1),
+            lambda i, j, k: (i % n_ty_blocks, 0, 0, 0),
+        )
+    else:
+        mask = jnp.ones((1, 1, 1, 1), jnp.float32)
+        mask_spec = pl.BlockSpec((1, 1, 1, 1), lambda i, j, k: (0, 0, 0, 0))
+    in_specs = in_specs + [
+        pl.BlockSpec((1, bm), lambda i, j, k: (0, j)),
+        pl.BlockSpec((1, bm), lambda i, j, k: (0, j)),
+        mask_spec,
+    ]
+    if out_mode == "nhwc":
+        out_specs = pl.BlockSpec(
+            (1, bty * ms, tx * ms, bm), lambda i, j, k: (i // n_ty_blocks, i % n_ty_blocks, 0, j)
+        )
+        out_shape = jax.ShapeDtypeStruct(
+            (B, n_ty_blocks * bty * ms, tx * ms, Mp), cells.dtype
+        )
+    else:
+        out_specs = pl.BlockSpec(
+            (1, bty * stride, tx * stride, m * m, bm),
+            lambda i, j, k: (i // n_ty_blocks, i % n_ty_blocks, 0, 0, j),
+        )
+        out_shape = jax.ShapeDtypeStruct(
+            (B, n_ty_blocks * bty * stride, tx * stride, m * m, Mp), cells.dtype
+        )
     out = pl.pallas_call(
         functools.partial(
-            _fused_pre_kernel,
+            _fused_pre_epi_kernel,
             bt_const=bt_mat,
             pos_idx=pos_idx,
             sub_slices=sub_slices,
             m=m,
             n=n,
             tx=tx,
-            m2=m2,
             n_steps=grid[2],
             in_dtype=cells.dtype,
+            out_mode=out_mode,
+            activation=activation,
+            stride=stride,
+            has_scale=scale is not None,
+            has_bias=bias is not None,
         ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec(
-                cell_block,
-                lambda i, j, k: (i // n_ty_blocks, i % n_ty_blocks, 0, 0, k),
-            ),
-            pl.BlockSpec(
-                (1, h, Gxp, m2c, bn),
-                lambda i, j, k: (
-                    i // n_ty_blocks,
-                    (i % n_ty_blocks + 1) * (bty // h),
-                    0, 0, k,
-                ),
-            ),
-            pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, k, j)),
-            pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((bty * tx, S2 * m2, bm), lambda i, j, k: (i, 0, j)),
-        out_shape=jax.ShapeDtypeStruct(
-            (B * n_ty_blocks * bty * tx, S2 * m2, Mp), cells.dtype
-        ),
-        scratch_shapes=[pltpu.VMEM((C, bty * tx, bm), jnp.float32)],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        ),
-        interpret=interpret,
-    )(cells_p, cells_p, ww_p, inv_packed)
-    out = out.reshape(B, n_ty_blocks * bty, tx, S2 * m2, Mp)
-    return out[:, :ty, :, :, :M]
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        **common,
+    )(cells_p, cells_p, ww_p, inv_packed, scale_p, bias_p, mask)
+    if out_mode == "nhwc":
+        return out[:, : ty * ms, :, :M]
+    # cells mode: return the raw padded array — the in-kernel crop-window
+    # mask already zeroed every row past ty*S and the zero-padded scale/bias
+    # zeroed every channel past M, so the next engine call (which pads or
+    # crops its input to its own block geometry anyway) consumes this with
+    # NO intermediate XLA copy.  ``ops.cells_to_next`` trims only when the
+    # chain shift or a short row count actually requires it.
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,10 @@ Params = dict[str, Any]
 
 # deconv_impl -> winograd_deconv2d_packed kwargs for the prepacked variants
 # (params hold packed Winograd-domain weights instead of raw K_D x K_D ones).
+# The *chained* impls share the per-layer kwargs of the fused-pre engine
+# (used for training-mode steps, where batch-stat BN can't fold into the
+# epilogue) and additionally run the whole eval-mode generator forward as
+# one cell-to-cell pipeline (see generator_apply / _chained_deconv_trunk).
 _PREPACKED_KW: dict[str, dict] = {
     "prepacked_ref": dict(backend="ref"),
     "pallas_prepacked": dict(backend="pallas"),
@@ -44,6 +48,24 @@ _PREPACKED_KW: dict[str, dict] = {
         backend="pallas", fuse_pre=True, interpret=True,
         **kops.INTERPRET_BLOCKS_FUSED,
     ),
+    "pallas_chained": dict(backend="pallas", fuse_pre=True),
+    "pallas_chained_interpret": dict(
+        backend="pallas", fuse_pre=True, interpret=True,
+        **kops.INTERPRET_BLOCKS_FUSED,
+    ),
+    "chained_ref": dict(backend="ref", fuse_pre=True),
+}
+
+# chained impls -> winograd_deconv2d_cells kwargs for the pipeline calls
+_CHAINED_KW: dict[str, dict] = {
+    "pallas_chained": dict(backend="pallas"),
+    "pallas_chained_interpret": dict(
+        backend="pallas", interpret=True,
+        block_ty=kops.INTERPRET_BLOCKS_FUSED["block_ty"],
+        block_n=kops.INTERPRET_BLOCKS_FUSED["block_n"],
+        block_m=kops.INTERPRET_BLOCKS_FUSED["block_m"],
+    ),
+    "chained_ref": dict(backend="ref"),
 }
 
 # raw-weight impl -> its prepacked equivalent (used by serving to drop the
@@ -56,10 +78,102 @@ PREPACKED_EQUIV: dict[str, str] = {
     "pallas_fused_pre_interpret": "pallas_fused_pre_prepacked_interpret",
 }
 
+# prepacked pallas impl -> the chained pipeline that serves it (the ref
+# impls stay per-layer: serving keeps their bit-exact reference numerics).
+CHAINED_EQUIV: dict[str, str] = {
+    "pallas_prepacked": "pallas_chained",
+    "pallas_fused_pre_prepacked": "pallas_chained",
+    "pallas_prepacked_interpret": "pallas_chained_interpret",
+    "pallas_fused_pre_prepacked_interpret": "pallas_chained_interpret",
+}
+
 
 def uses_prepacked(impl: str) -> bool:
     """True if ``impl`` stores packed Winograd-domain weights in params."""
     return impl in _PREPACKED_KW
+
+
+def uses_chained(impl: str) -> bool:
+    """True if ``impl`` runs the eval-mode generator as one cell-to-cell
+    chained engine pipeline (prepacked param layout, fused epilogues)."""
+    return impl in _CHAINED_KW
+
+
+# ---------------------------------------------------------- block overrides
+# Per-layer engine block choices, keyed by (impl, dims, N, M): the
+# autotuner's winning forward AND backward blocks (``bwd_block_*``) land
+# here and are merged into that impl's applies, instead of the backward
+# engines silently mirroring the forward blocks.  Keying by impl keeps
+# TPU-tuned tiles away from interpret-mode impls and fused-engine winners
+# away from the unfused variant.  Populated by ``install_tuned_blocks``
+# (or manually via ``set_deconv_blocks``).
+DECONV_BLOCKS: dict[tuple, dict] = {}
+
+_BLOCK_KEYS = (
+    "block_t", "block_ty", "block_n", "block_m",
+    "bwd_block_t", "bwd_block_ty", "bwd_block_n", "bwd_block_m",
+)
+
+
+def set_deconv_blocks(impl: str, dims: DeconvDims, n_in: int, m_out: int,
+                      **blocks) -> None:
+    """Register engine block overrides for ``impl`` on every deconv layer
+    with this (geometry, N, M) signature; None values are dropped
+    (mirror-forward)."""
+    bad = set(blocks) - set(_BLOCK_KEYS)
+    if bad:
+        raise ValueError(f"unknown block keys {sorted(bad)}")
+    DECONV_BLOCKS[(impl, dims, n_in, m_out)] = {
+        k: v for k, v in blocks.items() if v is not None
+    }
+
+
+def clear_deconv_blocks() -> None:
+    DECONV_BLOCKS.clear()
+
+
+def install_tuned_blocks(cfg: GANConfig, *, mode: str = "grad", batch: int = 1,
+                         candidates=None, **autotune_kw) -> list[dict]:
+    """Run ``kernels.autotune.autotune_deconv`` per generator layer and wire
+    each layer's winning config — including its *backward* blocks — into the
+    impl table (the ROADMAP item: stop mirroring forward blocks in the
+    backward engines).  Returns the per-layer winner rows for logging.
+
+    The default candidate grid is restricted to the engine variant
+    ``cfg.deconv_impl`` actually runs (fused-pre vs unfused, prepacked), and
+    winners from a different variant are skipped — numbers measured on a
+    code path the model never executes must not land in the table."""
+    from repro.kernels.autotune import autotune_deconv, candidate_configs
+
+    impl = cfg.deconv_impl
+    fused = _PREPACKED_KW.get(impl, {}).get("fuse_pre", False)
+    if candidates is None:
+        candidates = candidate_configs(
+            include_fused=fused, include_unfused=not fused,
+            prepack=uses_prepacked(impl),
+        )
+    installed = []
+    h = cfg.seed_hw
+    for li, d in enumerate(cfg.deconvs):
+        rows = autotune_deconv(
+            d.dims, (batch, h, h, d.c_in), d.c_out, mode=mode,
+            candidates=candidates, **autotune_kw,
+        )
+        won = next(
+            (r for r in rows if r["ok"] and r["config"].fuse_pre == fused),
+            None,
+        )
+        if won is not None:
+            c = won["config"]
+            set_deconv_blocks(
+                impl, d.dims, d.c_in, d.c_out,
+                **{k: getattr(c, k) for k in _BLOCK_KEYS},
+            )
+            installed.append({"layer": li, "ms": won["ms"], "config": c})
+        else:
+            installed.append({"layer": li, "error": rows[0]["error"]})
+        h = d.dims.out_size(h)
+    return installed
 
 
 def _packed_of(wd: Params, dims: DeconvDims) -> kops.PackedDeconv:
@@ -74,8 +188,12 @@ def _deconv_apply(impl: str, x, wd: Params, dims: DeconvDims):
     """Apply one deconv layer; ``wd`` is the layer's param dict ({"w": raw}
     or {"ww": packed} for the prepacked impls)."""
     if impl in _PREPACKED_KW:
+        kw = dict(_PREPACKED_KW[impl])
+        if kw.get("backend") == "pallas":
+            ww = wd["ww"]
+            kw.update(DECONV_BLOCKS.get((impl, dims, ww.shape[1], ww.shape[2]), {}))
         return kops.winograd_deconv2d_packed(
-            x, _packed_of(wd, dims), dims, **_PREPACKED_KW[impl]
+            x, _packed_of(wd, dims), dims, **kw
         )
     w = wd["w"]
     if impl == "ref":
@@ -160,11 +278,61 @@ def generator_init(key: jax.Array, cfg: GANConfig, dtype=jnp.float32) -> Params:
     return p
 
 
+def _bn_eval_affine(bn: Params, eps: float = 1e-5):
+    """Fold eval-mode batchnorm (running stats) into a per-channel affine
+    (a, b) with y = a*x + b — the epilogue the chained engine fuses."""
+    a = bn["scale"].astype(jnp.float32) * jax.lax.rsqrt(bn["var"] + eps)
+    b = bn["bias"].astype(jnp.float32) - bn["mean"] * a
+    return a, b
+
+
+def _chained_deconv_trunk(p: Params, cfg: GANConfig, h: jax.Array) -> jax.Array:
+    """Eval-mode deconv trunk as ONE engine-domain pipeline: every layer runs
+    the epilogue-fused engine (BN folded to scale/bias + activation applied
+    in VMEM) and — where the cell layouts line up (``ops.chain_aligned``) —
+    emits the next layer's cell layout directly, so consecutive layers chain
+    with zero XLA relayout between them.  Misaligned hops (ArtGAN's trailing
+    K4S2 -> K3S1) fall back to NHWC out + a cells re-layout, still with the
+    fused epilogue."""
+    kw = _CHAINED_KW[cfg.deconv_impl]
+    hw = (h.shape[1], h.shape[2])
+    cells = kops.cells_from_image(h, cfg.deconvs[0].dims)
+    img = None
+    for i, d in enumerate(cfg.deconvs):
+        scale, bias = (
+            _bn_eval_affine(p[f"deconv{i}_bn"]) if d.norm == "batch"
+            else (None, None)
+        )
+        nxt = cfg.deconvs[i + 1].dims if i + 1 < len(cfg.deconvs) else None
+        out_hw = (d.dims.out_size(hw[0]), d.dims.out_size(hw[1]))
+        if nxt is not None and kops.chain_aligned(d.dims, nxt):
+            emitted = kops.winograd_deconv2d_cells(
+                cells, _packed_of(p[f"deconv{i}"], d.dims), d.dims, hw,
+                epilogue=d.act, scale=scale, bias=bias, emit_cells=True, **kw,
+            )
+            cells = kops.cells_to_next(emitted, d.dims, nxt, out_hw)
+        else:
+            img = kops.winograd_deconv2d_cells(
+                cells, _packed_of(p[f"deconv{i}"], d.dims), d.dims, hw,
+                epilogue=d.act, scale=scale, bias=bias, **kw,
+            )
+            if nxt is not None:
+                cells = kops.cells_from_image(img, nxt)
+        hw = out_hw
+    return img
+
+
 def generator_apply(
     p: Params, cfg: GANConfig, inp: jax.Array, *, training: bool = True
 ) -> tuple[jax.Array, Params]:
     """inp: (B, z_dim) latent or (B, H, W, 3) image (image-to-image).
-    Returns (image, new_bn_stats)."""
+    Returns (image, new_bn_stats).
+
+    A chained ``deconv_impl`` runs the whole eval-mode deconv trunk inside
+    the engine domain (``_chained_deconv_trunk``).  In training mode the BN
+    batch statistics need the materialized layer outputs, so chained impls
+    step layer-by-layer through the same fused-pre engine instead (identical
+    numerics, grads via the Pallas backward engines)."""
     new_stats: Params = {}
     if cfg.z_dim:
         h = L.linear(p["stem"], inp)
@@ -180,6 +348,8 @@ def generator_apply(
                 h, s = L.batchnorm(p[f"enc{i}_bn"], h, training=training)
                 new_stats[f"enc{i}_bn"] = s
             h = L.ACTIVATIONS[e.act](h)
+    if uses_chained(cfg.deconv_impl) and not training:
+        return _chained_deconv_trunk(p, cfg, h), new_stats
     for i, d in enumerate(cfg.deconvs):
         h = _deconv_apply(cfg.deconv_impl, h, p[f"deconv{i}"], d.dims)
         if d.norm == "batch":

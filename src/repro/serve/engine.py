@@ -136,16 +136,43 @@ class ServeEngine:
 
 
 # ------------------------------------------------------------------- GAN
+@dataclasses.dataclass
+class GanRequest:
+    """One image-generation request: a batch of latents (or images for
+    image-to-image models) that must be served together."""
+
+    rid: int
+    z: jax.Array
+    out: Optional[jax.Array] = None
+    done: bool = False
+
+    @property
+    def size(self) -> int:
+        return int(self.z.shape[0])
+
+
 class GanServeEngine:
     """Image-generation service over prepacked Winograd-domain weights.
 
     Construction pays the G-transform + zero-skipping pack exactly once
     (``models.gan.prepack_generator``); every ``generate`` call after that
-    feeds the packed (C, N, M) weights straight to the engine.  Requests are
+    feeds the packed (C, N, M) weights straight to the engine — and, for the
+    pallas impls, runs the generator as ONE cell-to-cell chained pipeline
+    (``models.gan`` chained impls: fused epilogues, no HBM relayout between
+    deconv layers; ``chained=False`` opts back into per-layer).  Requests are
     padded up to the smallest of a fixed set of ``buckets`` (default the
     powers of two up to ``batch``), so a size-1 request runs the batch-1
     executable instead of paying the full batch-``batch`` generate, while
     the signature count stays bounded (one jit cache entry per bucket).
+
+    Queued serving (modeled on the LM engine's slot scheduler): requests
+    admit FIFO into a pool of ``batch`` slot rows (``try_admit``), a
+    ``step`` serves every admitted request in one bucketed generate and
+    frees the rows, so bursts of small requests share an executable instead
+    of each paying its own padded dispatch.  Admission is strict FIFO: a
+    request that doesn't fit the remaining rows closes the batch (requests
+    behind it wait for the next step rather than jumping the queue), which
+    trades a little packing efficiency for order fairness.
 
     Params may arrive raw, already packed, or packed-and-sharded (straight
     out of a mesh training run — already-``ww`` leaves pass through
@@ -154,10 +181,13 @@ class GanServeEngine:
     """
 
     def __init__(self, gen_params, cfg: GANConfig, *, batch: int = 8,
-                 buckets: Optional[tuple[int, ...]] = None, mesh=None):
+                 buckets: Optional[tuple[int, ...]] = None, mesh=None,
+                 chained: bool = True):
         from repro.models import gan as G
 
         impl = G.PREPACKED_EQUIV.get(cfg.deconv_impl, cfg.deconv_impl)
+        if chained:
+            impl = G.CHAINED_EQUIV.get(impl, impl)
         self.cfg = dataclasses.replace(cfg, deconv_impl=impl)
         if buckets is None:
             buckets, b = [], 1
@@ -187,6 +217,8 @@ class GanServeEngine:
 
         self._generate = _generate
         self.served = 0
+        self.active: list[GanRequest] = []  # admitted, not yet stepped
+        self.rows_used = 0
 
     def bucket_for(self, b: int) -> int:
         """Smallest serving bucket that fits a size-``b`` request."""
@@ -206,6 +238,47 @@ class GanServeEngine:
         self.served += b
         return imgs[:b]
 
+    # ------------------------------------------------------------ admission
+    def try_admit(self, req: GanRequest) -> bool:
+        """FIFO admission: claim ``req.size`` free slot rows for the next
+        step's shared batch; False when the pool can't fit the request (a
+        request larger than the pool is a caller error, as in generate)."""
+        if req.size > self.batch:
+            raise ValueError(
+                f"request batch {req.size} > engine max bucket {self.batch}"
+            )
+        if self.rows_used + req.size > self.batch:
+            return False
+        self.active.append(req)
+        self.rows_used += req.size
+        return True
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> list[GanRequest]:
+        """Serve every admitted request in ONE bucketed generate call, split
+        the rows back per request, and free all slots.  Returns the finished
+        requests (all of them — image generation completes in one step; the
+        slot scheduling mirrors the LM engine's admit/step loop)."""
+        if not self.active:
+            return []
+        z_all = jnp.concatenate([r.z for r in self.active], axis=0)
+        imgs = self.generate(z_all)
+        finished, row = [], 0
+        for req in self.active:
+            req.out = imgs[row : row + req.size]
+            req.done = True
+            row += req.size
+            finished.append(req)
+        self.active, self.rows_used = [], 0
+        return finished
+
     def run(self, requests: list[jax.Array]) -> list[jax.Array]:
-        """Serve a queue of variable-size latent batches."""
-        return [self.generate(z) for z in requests]
+        """Serve a queue of variable-size latent batches through the FIFO
+        admit/step scheduler; outputs come back in request order."""
+        reqs = [GanRequest(rid=i, z=z) for i, z in enumerate(requests)]
+        pending = list(reqs)
+        while pending or self.active:
+            while pending and self.try_admit(pending[0]):
+                pending.pop(0)
+            self.step()
+        return [r.out for r in reqs]

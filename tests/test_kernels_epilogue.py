@@ -1,0 +1,318 @@
+"""Epilogue-fused finalize + cell-to-cell chaining: parity and gradients.
+
+The fused engine's new out modes are validated in interpret mode against the
+scatter-sum deconvolution composed with a jnp epilogue (act(scale*y + bias)):
+  * NHWC mode — final pixels written by the kernel (depth-to-space in VMEM);
+  * cells mode — the emitted cell layout must equal ops.cells_from_image of
+    the next layer's input, bit-for-bit where aligned;
+  * jax.grad flows through the fused epilogue via the activation-cotangent
+    prologue + the existing Pallas backward engines;
+and the chained generator must match the per-layer prepacked path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DeconvDims, standard_deconv2d
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+K5S2 = DeconvDims(5, 2, 2, 1)
+K4S2 = DeconvDims(4, 2, 1, 0)
+K3S1 = DeconvDims(3, 1, 1, 0)
+K2S3 = DeconvDims(2, 3, 0, 0)  # K_D < S: structurally empty sub-filters
+
+GEOMS = [
+    pytest.param(K5S2, id="k5s2"),
+    pytest.param(K4S2, id="k4s2"),
+    pytest.param(K2S3, id="k2s3-empty-subfilters"),
+]
+
+ACTS = ("none", "relu", "leaky_relu", "tanh")
+
+INTERP = dict(interpret=True, block_ty=2, block_n=8, block_m=8)
+
+
+def _data(dims, shape=(1, 4, 5, 3, 4), seed=0, with_affine=True):
+    B, H, W, N, M = shape
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((B, H, W, N)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((dims.kernel, dims.kernel, N, M)), jnp.float32)
+    scale = jnp.asarray(rng.standard_normal(M) * 0.3 + 1.5, jnp.float32)
+    bias = jnp.asarray(rng.standard_normal(M), jnp.float32)
+    if not with_affine:
+        scale = bias = None
+    return x, w, scale, bias
+
+
+@pytest.mark.parametrize("dims", GEOMS)
+@pytest.mark.parametrize("act", ACTS)
+@pytest.mark.parametrize("with_bias", [True, False], ids=["bias", "nobias"])
+def test_fused_epilogue_nhwc_parity(dims, act, with_bias):
+    """act(scale*deconv+bias) from the epilogue-fused kernel == the oracle,
+    for every activation x bias on/off x geometry (incl. the K_D < S corner
+    with structurally empty sub-filters)."""
+    x, w, scale, bias = _data(dims, with_affine=with_bias)
+    want = R.epilogue_apply_ref(standard_deconv2d(x, w, dims), scale, bias, act)
+    got = ops.winograd_deconv2d_fused(
+        x, w, dims, fuse_pre=True, epilogue=act, scale=scale, bias=bias, **INTERP
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5, rtol=1e-4)
+    # the pure-jnp oracle backend agrees too (the VJP correctness contract)
+    got_ref = ops.winograd_deconv2d_fused(
+        x, w, dims, fuse_pre=True, backend="ref", epilogue=act, scale=scale, bias=bias
+    )
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want), atol=5e-5, rtol=1e-4)
+
+
+def test_unfused_epilogue_fallback_parity():
+    """epilogue= on the unfused engine (XLA fallback) has identical
+    semantics to the fused-epilogue kernel."""
+    dims = K5S2
+    x, w, scale, bias = _data(dims)
+    want = R.epilogue_apply_ref(standard_deconv2d(x, w, dims), scale, bias, "leaky_relu")
+    got = ops.winograd_deconv2d_fused(
+        x, w, dims, epilogue="leaky_relu", scale=scale, bias=bias,
+        interpret=True, block_t=8, block_n=8, block_m=8,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5, rtol=1e-4)
+
+
+def test_chain_alignment_predicate():
+    """All stride-2 paper chains align cell layouts; the K3S1 hops don't
+    (shift P - (kc'-1) not divisible by m) and must take the fallback."""
+    assert ops.chain_aligned(K5S2, K5S2)  # 2 - (3-1) = 0
+    assert ops.chain_aligned(K4S2, K4S2)  # 1 - (2-1) = 0
+    assert not ops.chain_aligned(K4S2, K5S2)  # 1 - (3-1) = -1
+    assert not ops.chain_aligned(K4S2, K3S1)  # ArtGAN's trailing hop
+    assert not ops.chain_aligned(K3S1, K3S1)
+
+
+@pytest.mark.parametrize(
+    "dims,nxt",
+    [
+        pytest.param(K5S2, K5S2, id="k5s2-k5s2"),
+        pytest.param(K4S2, K4S2, id="k4s2-k4s2"),
+    ],
+)
+def test_emit_cells_matches_next_layer_layout(dims, nxt):
+    """The cells-out mode + cells_to_next reproduces ops.cells_from_image of
+    the NHWC output exactly: chaining is a pure slice, never a relayout."""
+    x, w, scale, bias = _data(dims, seed=1)
+    img = ops.winograd_deconv2d_fused(
+        x, w, dims, fuse_pre=True, epilogue="leaky_relu", scale=scale,
+        bias=bias, **INTERP,
+    )
+    emitted = ops.winograd_deconv2d_fused(
+        x, w, dims, fuse_pre=True, epilogue="leaky_relu", scale=scale,
+        bias=bias, emit_cells=True, **INTERP,
+    )
+    got = np.asarray(ops.cells_to_next(emitted, dims, nxt, (img.shape[1], img.shape[2])))
+    want = np.asarray(ops.cells_from_image(img, nxt))
+    gy, gx, mc = want.shape[1], want.shape[2], want.shape[4]
+    # the aligned fast path passes the raw block-padded array through; the
+    # next layer's extent must match exactly and everything past it be zero
+    np.testing.assert_allclose(got[:, :gy, :gx, :, :mc], want, atol=1e-5, rtol=1e-5)
+    assert not got[:, gy:].any() and not got[:, :, gx:].any()
+    assert not got[..., mc:].any()
+
+
+def test_two_layer_cell_chain_parity():
+    """Two K5S2 layers chained cell-to-cell == two per-layer NHWC calls."""
+    dims = K5S2
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((1, 4, 4, 3)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((5, 5, 3, 4)), jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((5, 5, 4, 2)), jnp.float32)
+    b1 = jnp.asarray(rng.standard_normal(4), jnp.float32)
+
+    y1 = ops.winograd_deconv2d_fused(
+        x, w1, dims, fuse_pre=True, epilogue="relu", bias=b1, **INTERP
+    )
+    want = ops.winograd_deconv2d_fused(
+        y1, w2, dims, fuse_pre=True, epilogue="tanh", **INTERP
+    )
+
+    emitted = ops.winograd_deconv2d_fused(
+        x, w1, dims, fuse_pre=True, epilogue="relu", bias=b1, emit_cells=True,
+        **INTERP,
+    )
+    cells2 = ops.cells_to_next(emitted, dims, dims, (y1.shape[1], y1.shape[2]))
+    got = ops.winograd_deconv2d_cells(
+        cells2, ops.prepack(w2, dims), dims, (y1.shape[1], y1.shape[2]),
+        epilogue="tanh", **INTERP,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dims", [pytest.param(K4S2, id="k4s2"),
+                                  pytest.param(K2S3, id="k2s3")])
+@pytest.mark.parametrize("act", ACTS)
+def test_fused_epilogue_grad_parity(dims, act):
+    """jax.grad through the fused epilogue (activation-cotangent prologue +
+    Pallas backward engines) matches grads of the XLA oracle, for x, w,
+    scale and bias."""
+    x, w, scale, bias = _data(dims, shape=(1, 4, 4, 3, 2), seed=7)
+
+    def loss(x, w, scale, bias):
+        y = ops.winograd_deconv2d_fused(
+            x, w, dims, fuse_pre=True, epilogue=act, scale=scale, bias=bias,
+            **INTERP,
+        )
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    def loss_ref(x, w, scale, bias):
+        y = R.epilogue_apply_ref(standard_deconv2d(x, w, dims), scale, bias, act)
+        return jnp.sum(y ** 2)
+
+    got = jax.grad(loss, argnums=(0, 1, 2, 3))(x, w, scale, bias)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(x, w, scale, bias)
+    for name, a, b in zip(("dx", "dw", "dscale", "dbias"), got, want):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=2e-3, rtol=2e-3, err_msg=name
+        )
+
+
+def test_fused_epilogue_grad_emit_cells():
+    """Gradients flow through the cells-out mode too (window-masked
+    cotangent), matching the NHWC-mode gradients."""
+    dims = K4S2
+    x, w, scale, bias = _data(dims, shape=(1, 4, 4, 3, 2), seed=9)
+
+    def loss(emit):
+        def f(x, w):
+            y = ops.winograd_deconv2d_fused(
+                x, w, dims, fuse_pre=True, epilogue="leaky_relu", scale=scale,
+                bias=bias, emit_cells=emit, **INTERP,
+            )
+            return jnp.sum(y.astype(jnp.float32) ** 2)
+        return f
+
+    g_cells = jax.grad(loss(True), argnums=(0, 1))(x, w)
+    g_nhwc = jax.grad(loss(False), argnums=(0, 1))(x, w)
+    for a, b in zip(g_cells, g_nhwc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------- chained generator
+def _mini_chain_cfg(impl: str):
+    """3-layer generator covering an aligned K4S2 chain AND the misaligned
+    K4S2 -> K3S1 fallback hop (ArtGAN's trailing geometry)."""
+    from repro.configs.base import DeconvSpec, GANConfig
+
+    return GANConfig(
+        arch_id="mini-chain",
+        z_dim=8,
+        seed_hw=4,
+        stem_ch=8,
+        deconvs=(
+            DeconvSpec(8, 8, K4S2),
+            DeconvSpec(8, 8, K4S2),
+            DeconvSpec(8, 3, K3S1, norm="none", act="tanh"),
+        ),
+        img_hw=16,
+        deconv_impl=impl,
+    )
+
+
+def test_chained_generator_matches_per_layer():
+    """The cell-to-cell chained pipeline == the per-layer fused-pre
+    prepacked path to <= 1e-4, including the misaligned-fallback hop and
+    folded eval-mode batchnorm."""
+    from repro.models import gan as G
+
+    cfg_pl = _mini_chain_cfg("pallas_fused_pre_prepacked_interpret")
+    cfg_ch = dataclasses.replace(cfg_pl, deconv_impl="pallas_chained_interpret")
+    p = G.generator_init(jax.random.PRNGKey(0), cfg_pl)
+    # non-trivial BN running stats so the epilogue fold is actually exercised
+    for i in (0, 1):
+        bn = dict(p[f"deconv{i}_bn"])
+        bn["mean"] = 0.3 + 0.1 * jnp.arange(bn["mean"].shape[0], dtype=jnp.float32)
+        bn["var"] = 1.0 + 0.2 * jnp.arange(bn["var"].shape[0], dtype=jnp.float32)
+        p[f"deconv{i}_bn"] = bn
+    z = jax.random.normal(jax.random.PRNGKey(1), (2, cfg_pl.z_dim))
+    want, _ = G.generator_apply(p, cfg_pl, z, training=False)
+    got, _ = G.generator_apply(p, cfg_ch, z, training=False)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+    # chained_ref backend agrees as well
+    got_ref, _ = G.generator_apply(
+        p, dataclasses.replace(cfg_pl, deconv_impl="chained_ref"), z, training=False
+    )
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_chained_impl_trains_per_layer():
+    """Training mode with a chained impl falls back to the per-layer engine
+    (batch-stat BN needs materialized layer outputs) and grads flow into the
+    packed leaves."""
+    from repro.models import gan as G
+
+    cfg = _mini_chain_cfg("pallas_chained_interpret")
+    p = G.generator_init(jax.random.PRNGKey(0), cfg)
+    assert "ww" in p["deconv0"]
+    z = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.z_dim))
+
+    def loss(p):
+        img, _ = G.generator_apply(p, cfg, z, training=True)
+        return jnp.sum(img.astype(jnp.float32) ** 2)
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["deconv0"]["ww"]).sum()) > 0
+
+
+# --------------------------------------------------- per-layer block table
+def test_deconv_block_overrides_preserve_numerics():
+    """Installing per-layer (incl. backward) block overrides changes tiling
+    only — forward and grads stay identical."""
+    from repro.models import gan as G
+
+    cfg = _mini_chain_cfg("pallas_fused_pre_prepacked_interpret")
+    p = G.generator_init(jax.random.PRNGKey(0), cfg)
+    z = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.z_dim))
+    base, _ = G.generator_apply(p, cfg, z, training=False)
+    try:
+        for d in cfg.deconvs:
+            G.set_deconv_blocks(
+                cfg.deconv_impl, d.dims, d.c_in, d.c_out,
+                block_ty=2, block_n=8, block_m=8,
+                bwd_block_ty=1, bwd_block_n=8, bwd_block_m=8,
+            )
+        tuned, _ = G.generator_apply(p, cfg, z, training=False)
+    finally:
+        G.clear_deconv_blocks()
+    np.testing.assert_allclose(np.asarray(tuned), np.asarray(base), atol=1e-5, rtol=1e-5)
+
+
+def test_install_tuned_blocks_wires_bwd_blocks():
+    """install_tuned_blocks runs the autotuner per generator layer and wires
+    the winning config's *backward* blocks into the impl table (the ROADMAP
+    item: stop mirroring forward blocks)."""
+    from repro.kernels.autotune import EngineConfig
+    from repro.models import gan as G
+
+    cfg = _mini_chain_cfg("pallas_fused_pre_prepacked_interpret")
+    cands = [
+        EngineConfig(True, block_ty=2, block_n=8, block_m=8,
+                     bwd_block_ty=1, bwd_block_n=8, bwd_block_m=8,
+                     prepack=True),
+    ]
+    try:
+        rows = G.install_tuned_blocks(
+            cfg, mode="grad", candidates=cands, repeats=1, interpret=True
+        )
+        assert len(rows) == len(cfg.deconvs)
+        assert all("config" in r for r in rows)
+        for d in cfg.deconvs:
+            entry = G.DECONV_BLOCKS[(cfg.deconv_impl, d.dims, d.c_in, d.c_out)]
+            assert entry["bwd_block_ty"] == 1  # backward blocks, not mirrored
+        # and applying with the installed table still matches
+        p = G.generator_init(jax.random.PRNGKey(0), cfg)
+        z = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.z_dim))
+        img, _ = G.generator_apply(p, cfg, z, training=False)
+        assert np.isfinite(np.asarray(img)).all()
+    finally:
+        G.clear_deconv_blocks()

@@ -1,5 +1,6 @@
 """Continuous-batching engine: slot reuse, per-slot positions, and
-equivalence with straight-line prefill+decode."""
+equivalence with straight-line prefill+decode — plus the GAN engine's FIFO
+request queue (admit into slot rows, one shared bucketed generate per step)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +8,7 @@ import numpy as np
 from repro import data as D
 from repro.configs import smoke_config
 from repro.models import lm
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import GanRequest, GanServeEngine, Request, ServeEngine
 
 
 def make_engine(slots=2):
@@ -47,3 +48,83 @@ def test_engine_matches_straightline_decode():
         pos += 1
     # engine emits argmax-from-prefill as its first token too
     assert got[: len(want)] == want[: len(got)]
+
+
+# -------------------------------------------------------- GAN request queue
+def _gan_engine(batch=4):
+    from repro.configs.gan_zoo import tiny_dcgan
+    from repro.models import gan as G
+
+    cfg = tiny_dcgan("ref")
+    p_raw = G.generator_init(jax.random.PRNGKey(0), cfg)
+    return GanServeEngine(p_raw, cfg, batch=batch), p_raw, cfg
+
+
+def test_gan_queue_coalesces_small_requests():
+    """FIFO admission packs bursty small requests into shared slot rows:
+    sizes [1, 1, 2, 3] on a 4-row pool serve in two steps (1+1+2, then 3)
+    instead of four separate padded generates, and each request's rows are
+    exact vs the direct generator."""
+    from repro.models import gan as G
+
+    eng, p_raw, cfg = _gan_engine(batch=4)
+    zs = [
+        jax.random.normal(jax.random.PRNGKey(i + 1), (b, cfg.z_dim))
+        for i, b in enumerate([1, 1, 2, 3])
+    ]
+    reqs = [GanRequest(rid=i, z=z) for i, z in enumerate(zs)]
+    assert eng.try_admit(reqs[0]) and eng.try_admit(reqs[1]) and eng.try_admit(reqs[2])
+    assert not eng.try_admit(reqs[3])  # pool full: 1+1+2 rows used
+    done = eng.step()
+    assert [r.rid for r in done] == [0, 1, 2]
+    assert eng.rows_used == 0 and eng.active == []
+    assert eng.try_admit(reqs[3])
+    done2 = eng.step()
+    assert [r.rid for r in done2] == [3]
+    # exactly two shared bucket-4 generates ran
+    assert eng.bucket_counts == {4: 2}
+    assert eng.served == 7
+    for r in reqs:
+        want, _ = G.generator_apply(p_raw, cfg, r.z, training=False)
+        np.testing.assert_array_equal(np.asarray(r.out), np.asarray(want))
+
+
+def test_gan_queue_run_preserves_order_and_outputs():
+    from repro.models import gan as G
+
+    eng, p_raw, cfg = _gan_engine(batch=4)
+    zs = [
+        jax.random.normal(jax.random.PRNGKey(i + 10), (b, cfg.z_dim))
+        for i, b in enumerate([3, 1, 2, 4, 1])
+    ]
+    outs = eng.run(zs)
+    assert [o.shape[0] for o in outs] == [3, 1, 2, 4, 1]
+    assert eng.served == 11
+    for z, o in zip(zs, outs):
+        want, _ = G.generator_apply(p_raw, cfg, z, training=False)
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(want))
+
+
+def test_gan_queue_rejects_oversized_request():
+    eng, _, cfg = _gan_engine(batch=4)
+    big = GanRequest(rid=0, z=jnp.zeros((5, cfg.z_dim)))
+    with np.testing.assert_raises(ValueError):
+        eng.try_admit(big)
+
+
+def test_gan_engine_defaults_to_chained_for_pallas_impls():
+    """The serve engine upgrades pallas impls to the chained pipeline by
+    default (and leaves ref impls bit-exact per-layer); chained=False opts
+    out."""
+    from repro.configs.gan_zoo import tiny_dcgan
+    from repro.models import gan as G
+
+    cfg = tiny_dcgan("pallas_fused_pre")
+    p_raw = G.generator_init(jax.random.PRNGKey(0), cfg)
+    eng = GanServeEngine(p_raw, cfg, batch=2)
+    assert eng.cfg.deconv_impl == "pallas_chained"
+    eng_pl = GanServeEngine(p_raw, cfg, batch=2, chained=False)
+    assert eng_pl.cfg.deconv_impl == "pallas_fused_pre_prepacked"
+    cfg_ref = tiny_dcgan("ref")
+    eng_ref = GanServeEngine(p_raw, cfg_ref, batch=2)
+    assert eng_ref.cfg.deconv_impl == "prepacked_ref"
