@@ -17,6 +17,9 @@ trajectory.  Three checks:
     speedup geomean (chained pipeline vs per-layer engine) under
     ``--geomean-tol`` — a PR that erodes the cell-to-cell chaining win
     goes red;
+  * the ``discriminator`` and full-``adversarial``-step sections gate the
+    same way: per-arch lax/ref/engine times under ``--rel-tol`` and the
+    packed+chained engine-family geomeans under ``--geomean-tol``;
   * the sharded per-device-count step times gate under the same
     ``--rel-tol``; ``--sharded-only`` restricts the gate to that table (the
     multi-device CI job) and then treats missing device counts as failures.
@@ -68,6 +71,40 @@ def _generator_times(report: dict) -> dict[tuple, float]:
     return out
 
 
+# the discriminator / full-adversarial-step sections share one row shape
+_DISC_VARIANTS = ("lax", "ref", "pallas_raw", "pallas")
+
+
+def _section_times(report: dict, section: str) -> dict[tuple, float]:
+    """Flatten a per-arch variant section ("discriminator"/"adversarial")
+    to {(arch, variant): ms}."""
+    out: dict[tuple, float] = {}
+    for row in report.get(section, {}).get("rows", []):
+        for variant in _DISC_VARIANTS:
+            ms = row.get(f"{variant}_ms")
+            if ms is not None:
+                out[(row["arch"], variant)] = float(ms)
+    return out
+
+
+def _geomean_gate(baseline: dict, fresh: dict, section: str, key: str,
+                  geomean_tol: float, failures: list[str]) -> None:
+    """Shared headline-geomean regression check for one report section."""
+    bg = baseline.get(section, {}).get(key)
+    fg = fresh.get(section, {}).get(key)
+    if bg is None:
+        return
+    if fg is None:
+        failures.append(
+            f"{section} {key} missing from fresh report (baseline {bg:.3f})"
+        )
+    elif fg < bg * (1 - geomean_tol):
+        failures.append(
+            f"{section} {key} regressed: {fg:.3f} < {bg:.3f} * "
+            f"(1 - {geomean_tol}) = {bg * (1 - geomean_tol):.3f}"
+        )
+
+
 def compare(
     baseline: dict,
     fresh: dict,
@@ -117,20 +154,8 @@ def compare(
         # end-to-end generator section (chained vs per-layer serve path):
         # every baseline timing must still run within tolerance, and the
         # chained speedup geomean — a same-machine ratio — gates tightly
-        bgen = baseline.get("generator", {}).get("chained_speedup_geomean")
-        fgen = fresh.get("generator", {}).get("chained_speedup_geomean")
-        if bgen is not None:
-            if fgen is None:
-                failures.append(
-                    "generator chained_speedup_geomean missing from fresh "
-                    f"report (baseline {bgen:.3f})"
-                )
-            elif fgen < bgen * (1 - geomean_tol):
-                failures.append(
-                    f"generator chained_speedup_geomean regressed: {fgen:.3f} "
-                    f"< {bgen:.3f} * (1 - {geomean_tol}) = "
-                    f"{bgen * (1 - geomean_tol):.3f}"
-                )
+        _geomean_gate(baseline, fresh, "generator", "chained_speedup_geomean",
+                      geomean_tol, failures)
         base_g, fresh_g = _generator_times(baseline), _generator_times(fresh)
         for key, b_ms in sorted(base_g.items()):
             f_ms = fresh_g.get(key)
@@ -144,6 +169,30 @@ def compare(
                     f"{name}: {f_ms:.2f}ms > {b_ms:.2f}ms * (1 + {rel_tol}) = "
                     f"{b_ms * (1 + rel_tol):.2f}ms"
                 )
+
+        # discriminator + full adversarial step: every baseline variant must
+        # still run within tolerance (a vanished engine variant is a
+        # failure), and the packed+chained engine-family geomeans — the
+        # same-machine ratios — gate tightly like the generator's
+        for section, gm_key in (
+            ("discriminator", "packed_chained_speedup_geomean"),
+            ("adversarial", "packed_chained_step_speedup_geomean"),
+        ):
+            _geomean_gate(baseline, fresh, section, gm_key, geomean_tol, failures)
+            base_s, fresh_s = _section_times(baseline, section), _section_times(fresh, section)
+            for key, b_ms in sorted(base_s.items()):
+                f_ms = fresh_s.get(key)
+                name = f"{section}/" + "/".join(str(k) for k in key)
+                if f_ms is None:
+                    failures.append(
+                        f"{name}: baseline ran in {b_ms:.2f}ms, fresh failed "
+                        "or is missing"
+                    )
+                elif f_ms > b_ms * (1 + rel_tol):
+                    failures.append(
+                        f"{name}: {f_ms:.2f}ms > {b_ms:.2f}ms * (1 + {rel_tol}) = "
+                        f"{b_ms * (1 + rel_tol):.2f}ms"
+                    )
 
     b_sh = baseline.get("sharded", {}).get("step_ms", {})
     f_sh = fresh.get("sharded", {}).get("step_ms", {})

@@ -54,6 +54,11 @@ def main():
         help="what the deconv autotune times: inference, value_and_grad "
         "(the Pallas backward engines), or a full AdamW step",
     )
+    ap.add_argument(
+        "--autotune-conv", action="store_true",
+        help="also sweep the Winograd Conv engine (block + epilogue/chain "
+        "axes) over the discriminator layers and record the winners",
+    )
     args = ap.parse_args()
 
     import repro.configs as CFG
@@ -120,6 +125,43 @@ def main():
                               "error": rows[0]["error"]})
             h = d.dims.out_size(h)
         rec["deconv_autotune"] = tuned
+
+    if args.autotune_conv:
+        if not isinstance(cfg, GANConfig):
+            raise SystemExit("--autotune-conv only applies to GAN archs")
+        from repro.kernels.autotune import autotune_conv, conv_candidates
+        from repro.models.gan import disc_channels, disc_conv_dims
+
+        tuned_c = []
+        chans = (cfg.img_ch,) + disc_channels(cfg)
+        h = cfg.img_hw
+        for li, cd in enumerate(disc_conv_dims(cfg)):
+            rows = autotune_conv(
+                cd, (1, h, h, chans[li]), chans[li + 1],
+                candidates=conv_candidates(block_ty=(4, 8)),
+                mode=args.autotune_deconv_mode,
+            )
+            won = next((r for r in rows if r["ok"]), None)
+            if won:
+                c = won["config"]
+                print(
+                    f"AUTOTUNE,{args.arch},conv{li},"
+                    f"mode={args.autotune_deconv_mode},"
+                    f"block={c.block_ty},block_n={c.block_n},block_m={c.block_m},"
+                    f"epilogue={c.epilogue or '-'},emit_cells={int(c.emit_cells)},"
+                    f"ms={won['ms']:.2f}"
+                )
+                tuned_c.append(
+                    {"layer": li, "ok": True, "mode": args.autotune_deconv_mode,
+                     "ms": won["ms"], "config": dataclasses.asdict(c)}
+                )
+            else:
+                print(f"AUTOTUNE,{args.arch},conv{li},error={rows[0]['error']}")
+                tuned_c.append({"layer": li, "ok": False,
+                                "mode": args.autotune_deconv_mode,
+                                "error": rows[0]["error"]})
+            h = cd.out_size(h)
+        rec["conv_autotune"] = tuned_c
     name = f"{args.arch}__{args.shape}__{args.tag}"
     with open(os.path.join(out_dir, name + ".json"), "w") as f:
         json.dump(rec, f, indent=1)

@@ -17,9 +17,18 @@ Usage:
   PYTHONPATH=src python -m benchmarks.train_step --smoke --devices 8
                                                   # + sharded GAN step times
 
+Beyond the per-layer sweep the report carries an end-to-end ``generator``
+section (chained vs per-layer engine pipeline), a ``discriminator`` section
+(lax / pure-JAX Winograd conv reference / per-call-pack engine / packed +
+chained engine forward) and an ``adversarial`` section — the FULL GAN train
+step with the engine generator and the discriminator backend varying, so
+the all-engine step (G + D, both grads in the Pallas domain) is tracked PR
+over PR.
+
 On CPU the Pallas variants run in interpret mode: timings order host-loop
 overheads rather than MXU work (the prepacked-vs-unpacked delta — the
-per-step G-transform + pack — is real on both).  On a TPU backend the same
+per-step G-transform + pack — is real on both, and the gated geomeans are
+engine-family ratios for exactly that reason).  On a TPU backend the same
 driver measures the production numbers.
 
 ``--devices N`` additionally times the full sharded GAN train step (the
@@ -119,9 +128,10 @@ def bench_layer(
 
 
 def _shrunk_gan_cfg(cfg, max_ch: int = 8):
-    """Smoke-scale a gan_zoo config: cap every channel width (spatial dims
-    and layer structure stay, so the chained pipeline still exercises every
-    geometry hop, including ArtGAN's misaligned K4S2 -> K3S1 fallback)."""
+    """Smoke-scale a gan_zoo config: cap every channel width — generator
+    AND discriminator trunk (spatial dims and layer structure stay, so the
+    chained pipelines still exercise every geometry hop, including ArtGAN's
+    misaligned K4S2 -> K3S1 fallback)."""
     import dataclasses
 
     return dataclasses.replace(
@@ -138,7 +148,204 @@ def _shrunk_gan_cfg(cfg, max_ch: int = 8):
             dataclasses.replace(d, c_in=min(d.c_in, max_ch), c_out=min(d.c_out, max_ch))
             for d in cfg.deconvs
         ),
+        disc_channels=tuple(min(c, max_ch) for c in cfg.disc_channels),
     )
+
+
+def _interleaved_times(fns: dict, args_of, *, repeats: int, warm: int = 2):
+    """min-of-rounds wall times with the variants interleaved per round, so
+    shared-runner noise phases hit every variant equally (the ratio is the
+    headline, not the absolutes).  ``args_of(name)`` supplies each
+    variant's argument tuple; failures record an error string instead."""
+    import time as _time
+
+    best: dict = {}
+    errors: dict = {}
+    live = {}
+    for name, fn in fns.items():
+        try:
+            jax.block_until_ready(fn(*args_of(name)))  # compile + warm
+            live[name] = fn
+            best[name] = float("inf")
+        except Exception as e:
+            errors[name] = f"{type(e).__name__}: {e}"[:200]
+    for rnd in range(max(4 * repeats, 12) + warm):
+        for name, fn in live.items():
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn(*args_of(name)))
+            if rnd >= warm:
+                best[name] = min(best[name], _time.perf_counter() - t0)
+    return {n: v * 1e3 for n, v in best.items()}, errors
+
+
+def bench_discriminator(
+    archs: list[str], *, interpret: bool, smoke: bool, repeats: int = 3
+) -> dict:
+    """Discriminator forward (eval mode) per arch: the lax baseline, the
+    pure-JAX Winograd conv reference (chained_ref), the engine with
+    per-call packing, and the packed + chained engine.  The gated headline
+    geomean — packed/chained vs per-call-pack engine, a same-machine
+    same-family ratio — gates in CI via compare_bench; the engine-vs-ref
+    ratio is recorded alongside (on CPU it reports emulation overhead, on a
+    TPU backend the real engine win)."""
+    import dataclasses
+
+    from repro.configs.gan_zoo import GANS
+    from repro.models import gan as G
+
+    suffix = "_interpret" if interpret else ""
+    engine_impl = f"pallas_chained{suffix}"
+    B = 2 if smoke else 8
+    # lax = the pre-engine baseline; ref = the pure-JAX Winograd conv
+    # reference; pallas_raw = the engine with per-call G-transform + pack;
+    # pallas = the packed + chained engine (the production path)
+    variants = {
+        "lax": "lax", "ref": "chained_ref",
+        "pallas_raw": f"pallas{suffix}", "pallas": engine_impl,
+    }
+    rows = []
+    for arch in archs:
+        cfg = GANS[arch]
+        if smoke:
+            cfg = _shrunk_gan_cfg(cfg)
+        dp = G.discriminator_init(jax.random.PRNGKey(0), cfg)
+        dp_packed = G.prepack_discriminator(dp, cfg)
+        img = jax.random.normal(jax.random.PRNGKey(1), (B, cfg.img_hw, cfg.img_hw, 3))
+        fns, params = {}, {}
+        for name, impl in variants.items():
+            c = dataclasses.replace(cfg, conv_impl=impl)
+            params[name] = dp_packed if G.uses_prepacked_conv(impl) else dp
+            fns[name] = jax.jit(
+                lambda p, x, c=c: G.discriminator_apply(p, c, x, training=False)[0]
+            )
+        best, errors = _interleaved_times(
+            fns, lambda name: (params[name], img), repeats=repeats
+        )
+        row = {"arch": arch, "batch": B}
+        for name in variants:
+            if name in best:
+                row[f"{name}_ms"] = best[name]
+            else:
+                row[f"{name}_ms"] = None
+                row[f"{name}_error"] = errors[name]
+        if row.get("pallas_raw_ms") and row.get("pallas_ms"):
+            row["speedup"] = row["pallas_raw_ms"] / row["pallas_ms"]
+        if row.get("ref_ms") and row.get("pallas_ms"):
+            row["vs_ref"] = row["ref_ms"] / row["pallas_ms"]
+        rows.append(row)
+        cells = ",".join(
+            f"{k}={row[k]:.2f}" if isinstance(row.get(k), float) else f"{k}=FAIL"
+            for k in ("lax_ms", "ref_ms", "pallas_raw_ms", "pallas_ms")
+        )
+        sp = f",speedup={row['speedup']:.3f}" if "speedup" in row else ""
+        print(f"train_step,discriminator,{arch},{cells}{sp}")
+    out: dict = {"impl_engine": engine_impl, "rows": rows}
+    sps = [r["speedup"] for r in rows if r.get("speedup")]
+    if sps:
+        # the gated headline: what prepacking + conv-to-conv chaining buys
+        # WITHIN the engine family (the PR 2/PR 4 convention — interpret-mode
+        # absolutes vs compiled XLA are emulation artifacts; the family
+        # ratio is machine- and emulation-independent)
+        out["packed_chained_speedup_geomean"] = float(np.exp(np.mean(np.log(sps))))
+        print(
+            "train_step,summary,discriminator_packed_chained_speedup_geomean="
+            f"{out['packed_chained_speedup_geomean']:.3f}"
+        )
+    vs = [r["vs_ref"] for r in rows if r.get("vs_ref")]
+    if vs:
+        out["engine_vs_ref_geomean"] = float(np.exp(np.mean(np.log(vs))))
+        print(
+            "train_step,summary,discriminator_engine_vs_ref_geomean="
+            f"{out['engine_vs_ref_geomean']:.3f}"
+        )
+    return out
+
+
+def bench_adversarial(
+    archs: list[str], *, interpret: bool, smoke: bool, repeats: int = 3
+) -> dict:
+    """FULL adversarial train step (G update + D update, both grads) per
+    arch, with the engine generator throughout and the discriminator
+    backend varying: 'lax' (XLA conv), 'ref' (pure-JAX Winograd conv
+    reference), 'pallas_raw' (engine D with per-step G-transform + pack)
+    and 'pallas' (packed + chained engine D — the whole step in the engine
+    domain).  Gated headline geomean: the packed + chained engine step vs
+    the per-step-packing engine step (the PR 2 convention); the
+    engine-vs-ref step ratio is recorded alongside."""
+    import dataclasses
+
+    from repro import data as D
+    from repro.configs.gan_zoo import GANS
+    from repro.models import gan as G
+    from repro.optim import adamw_init
+    from repro.train.trainer import make_gan_step
+
+    suffix = "_interpret" if interpret else ""
+    gen_impl = f"pallas_chained{suffix}"
+    engine_impl = f"pallas_chained{suffix}"
+    B = 2 if smoke else 8
+    variants = {
+        "lax": "lax", "ref": "chained_ref",
+        "pallas_raw": f"pallas{suffix}", "pallas": engine_impl,
+    }
+    rows = []
+    for arch in archs:
+        base = GANS[arch]
+        if smoke:
+            base = _shrunk_gan_cfg(base)
+        base = dataclasses.replace(base, deconv_impl=gen_impl)
+        kg, kd = jax.random.split(jax.random.PRNGKey(0))
+        fns, args = {}, {}
+        for name, impl in variants.items():
+            cfg = dataclasses.replace(base, conv_impl=impl)
+            gp = G.generator_init(kg, cfg)
+            dp = G.discriminator_init(kd, cfg)
+            z = (
+                D.latent_batch(0, 0, B, cfg.z_dim) if cfg.z_dim
+                else D.gan_batch(0, 0, B, cfg.img_hw)
+            )
+            real = D.gan_batch(0, 1, B, cfg.img_hw)
+            args[name] = (gp, dp, adamw_init(gp), adamw_init(dp), z, real)
+            fns[name] = make_gan_step(cfg)
+        best, errors = _interleaved_times(
+            fns, lambda name: args[name], repeats=repeats
+        )
+        row = {"arch": arch, "batch": B, "gen_impl": gen_impl}
+        for name in variants:
+            if name in best:
+                row[f"{name}_ms"] = best[name]
+            else:
+                row[f"{name}_ms"] = None
+                row[f"{name}_error"] = errors[name]
+        if row.get("pallas_raw_ms") and row.get("pallas_ms"):
+            row["speedup"] = row["pallas_raw_ms"] / row["pallas_ms"]
+        if row.get("ref_ms") and row.get("pallas_ms"):
+            row["vs_ref"] = row["ref_ms"] / row["pallas_ms"]
+        rows.append(row)
+        cells = ",".join(
+            f"{k}={row[k]:.2f}" if isinstance(row.get(k), float) else f"{k}=FAIL"
+            for k in ("lax_ms", "ref_ms", "pallas_raw_ms", "pallas_ms")
+        )
+        sp = f",speedup={row['speedup']:.3f}" if "speedup" in row else ""
+        print(f"train_step,adversarial,{arch},{cells}{sp}")
+    out: dict = {"impl_gen": gen_impl, "impl_engine": engine_impl, "rows": rows}
+    sps = [r["speedup"] for r in rows if r.get("speedup")]
+    if sps:
+        out["packed_chained_step_speedup_geomean"] = float(
+            np.exp(np.mean(np.log(sps)))
+        )
+        print(
+            "train_step,summary,adversarial_packed_chained_step_speedup_geomean="
+            f"{out['packed_chained_step_speedup_geomean']:.3f}"
+        )
+    vs = [r["vs_ref"] for r in rows if r.get("vs_ref")]
+    if vs:
+        out["engine_vs_ref_geomean"] = float(np.exp(np.mean(np.log(vs))))
+        print(
+            "train_step,summary,adversarial_engine_vs_ref_geomean="
+            f"{out['engine_vs_ref_geomean']:.3f}"
+        )
+    return out
 
 
 def bench_generator(
@@ -357,6 +564,12 @@ def main(argv: list[str] | None = None) -> dict:
         )
     if archs:
         report["generator"] = bench_generator(
+            archs, interpret=interpret, smoke=args.smoke, repeats=args.repeats
+        )
+        report["discriminator"] = bench_discriminator(
+            archs, interpret=interpret, smoke=args.smoke, repeats=args.repeats
+        )
+        report["adversarial"] = bench_adversarial(
             archs, interpret=interpret, smoke=args.smoke, repeats=args.repeats
         )
     if args.devices:

@@ -1,7 +1,10 @@
 """End-to-end driver: train DCGAN (the paper's flagship workload) with the
-Winograd-TDC deconv generator on synthetic data, with checkpointing.
+Winograd engine pipeline on synthetic data, with checkpointing.
 
-Default is a width-reduced DCGAN that trains a few hundred steps in CPU
+Default impls are the current fastest path — chained engine generator AND
+chained Winograd-Conv discriminator, so the quickstart's full adversarial
+train step (both nets, both grads) runs in the engine domain.  Default
+model is a width-reduced DCGAN that trains a few hundred steps in CPU
 minutes; --full uses the exact 1024-512-256-128 generator (~12.7M params).
 
 Run:  PYTHONPATH=src python examples/train_dcgan.py --steps 200
@@ -20,13 +23,30 @@ def main():
     ap.add_argument("--full", action="store_true", help="full-width DCGAN")
     ap.add_argument("--width-div", type=int, default=8)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_dcgan_ckpt")
-    ap.add_argument("--impl", default="ref",
-                    choices=["ref", "pallas_interpret", "tdc", "zero_padded", "lax",
+    ap.add_argument("--impl", default="auto",
+                    choices=["auto",
+                             "ref", "pallas_interpret", "tdc", "zero_padded", "lax",
                              # Winograd-domain training: params are the packed
                              # transformed weights, bwd = Pallas engines
                              "prepacked_ref", "pallas_prepacked_interpret",
-                             "pallas_fused_pre_prepacked_interpret"])
+                             "pallas_fused_pre_prepacked_interpret",
+                             # the current fastest: whole trunk chained in
+                             # the engine domain (two-pass BN in training)
+                             "pallas_chained", "pallas_chained_interpret"])
+    ap.add_argument("--disc-impl", default="auto",
+                    choices=["auto", "lax", "ref", "pallas_interpret",
+                             "prepacked_ref", "pallas_prepacked_interpret",
+                             "chained_ref",
+                             "pallas_chained", "pallas_chained_interpret"])
     args = ap.parse_args()
+
+    # "auto" picks the engine-chained pipeline (generator AND discriminator
+    # fully in the engine domain), in interpret mode off-TPU
+    import jax
+
+    suffix = "" if jax.default_backend() == "tpu" else "_interpret"
+    impl = f"pallas_chained{suffix}" if args.impl == "auto" else args.impl
+    disc_impl = f"pallas_chained{suffix}" if args.disc_impl == "auto" else args.disc_impl
 
     cfg = DCGAN
     if not args.full:
@@ -40,8 +60,9 @@ def main():
                 )
                 for s in DCGAN.deconvs
             ),
+            disc_channels=tuple(max(8, c // d) for c in DCGAN.disc_channels),
         )
-    cfg = dataclasses.replace(cfg, deconv_impl=args.impl)
+    cfg = dataclasses.replace(cfg, deconv_impl=impl, conv_impl=disc_impl)
 
     out = train_gan(
         cfg,

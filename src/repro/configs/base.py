@@ -45,6 +45,14 @@ class GANConfig:
     # which deconv backend the generator uses: ref (pure JAX winograd),
     # pallas (fused kernel), tdc, zero_padded, lax (baselines)
     deconv_impl: str = "ref"
+    # which conv backend the discriminator uses: lax (XLA conv, the
+    # baseline), ref / pallas[_interpret] (phase-decomposed Winograd conv),
+    # *_prepacked (packed Winograd-domain conv weights in params),
+    # pallas_chained[_interpret] / chained_ref (conv-to-conv cell chaining)
+    conv_impl: str = "lax"
+    # discriminator trunk widths (the DCGAN defaults; tests and the smoke
+    # bench shrink these alongside the generator channels)
+    disc_channels: tuple[int, ...] = (64, 128, 256, 512)
 
     @property
     def n_deconv(self) -> int:

@@ -83,7 +83,7 @@ GPGAN = GANConfig(
 GANS = {c.arch_id: c for c in (DCGAN, ARTGAN, DISCOGAN, GPGAN)}
 
 
-def tiny_dcgan(deconv_impl: str = "ref") -> GANConfig:
+def tiny_dcgan(deconv_impl: str = "ref", conv_impl: str = "lax") -> GANConfig:
     """DCGAN shrunk to test/smoke scale (16ch stem, 8ch trunk): the one
     config the prepacked/sharded parity tests and the sharded train-step
     benchmark all measure, so they can't drift apart."""
@@ -95,4 +95,6 @@ def tiny_dcgan(deconv_impl: str = "ref") -> GANConfig:
             for i, d in enumerate(DCGAN.deconvs)
         ),
         deconv_impl=deconv_impl,
+        conv_impl=conv_impl,
+        disc_channels=(8, 8, 8, 8),
     )

@@ -46,6 +46,11 @@ __all__ = [
     "decompose_weights",
     "tdc_deconv2d",
     "interleave_crop",
+    "ConvDims",
+    "ConvSubFilterPlan",
+    "conv_same_dims",
+    "conv_plan",
+    "decompose_conv_weights",
 ]
 
 
@@ -146,6 +151,139 @@ def decompose_weights(w: jax.Array, dims: DeconvDims, r: int = 3) -> jax.Array:
                     # flipped position within the kc x kc window, then padded
                     uy, ux = kc - 1 - ty, kc - 1 - tx
                     out = out.at[ry, rx, uy, ux].set(w[ry + S * ty, rx + S * tx])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Strided Conv, phase-decomposed — the INVERSE of the TDC conversion above.
+#
+# A stride-S convolution
+#
+#     out[o] = sum_k w[k] * x[S*o + k - P],      o in [0, H_O)
+#
+# splits by tap residue rho = k mod S (k = rho + S*t) into
+#
+#     out[o] = sum_rho sum_t w[rho + S*t] * x_phi[o + t + d_rho]
+#
+# with the *input* de-interleaved into phases x_phi[j] = x[S*j + phi],
+# phi(rho) = (rho - P) mod S (a bijection rho <-> phi) and the constant
+# shift d_rho = floor((rho - P) / S).  Each term is a UNIT-STRIDE
+# cross-correlation of one input phase with the sub-kernel
+# g_rho[t] = w[rho + S*t] (ceil((K - rho)/S) taps), and the S (S^2 in 2D)
+# sub-outputs are SUMMED — where the deconv case interleaves sub-outputs,
+# the conv case de-interleaves sub-inputs and accumulates.
+#
+# Padding every phase left by L = ceil(P/S) cells aligns all sub-problems on
+# a common r-tap window:  ghat_rho[u] = g_rho[u - d_rho - L] occupies
+# u in [d_rho + L, d_rho + L + kcr) — the remaining taps are *structural*
+# zeros fixed by (K, S, P) alone, exactly the sparsity the Winograd
+# G-transform then inherits (the conv mirror of Fig. 6's Cases).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvDims:
+    """Static geometry of one strided conv layer (cross-correlation,
+    ``lax.conv_general_dilated`` semantics: no kernel flip)."""
+
+    kernel: int  # K (square)
+    stride: int  # S
+    padding: int  # P_lo (top/left pad)
+    pad_hi: int = 0  # bottom/right pad (only affects the output extent)
+
+    def out_size(self, in_size: int) -> int:
+        return (in_size + self.padding + self.pad_hi - self.kernel) // self.stride + 1
+
+    @property
+    def phase_pad(self) -> int:
+        """L: common left pad (in phase-image cells) aligning all phases."""
+        return -(-self.padding // self.stride)
+
+    def phase_of(self, rho: int) -> int:
+        """Input phase consumed by tap residue rho."""
+        return (rho - self.padding) % self.stride
+
+    def shift_of(self, rho: int) -> int:
+        """d_rho: constant sub-conv shift of tap residue rho."""
+        return (rho - self.padding - self.phase_of(rho)) // self.stride
+
+
+def conv_same_dims(kernel: int, stride: int, in_size: int) -> ConvDims:
+    """ConvDims matching ``lax`` SAME padding for this input extent (the
+    discriminator convention): H_O = ceil(H/S), pad split low-first."""
+    out = -(-in_size // stride)
+    total = max((out - 1) * stride + kernel - in_size, 0)
+    return ConvDims(kernel, stride, total // 2, total - total // 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSubFilterPlan:
+    """Structural description of the S^2 phase sub-filters for (K, S, P, r)."""
+
+    dims: ConvDims
+    r: int
+    taps_1d: tuple[tuple[int, ...], ...]  # per-rho tap-presence (len r)
+    nnz_winograd: np.ndarray  # (S, S) nonzero count per transformed sub-filter
+    masks_winograd: np.ndarray  # (S, S, n, n) bool structural nonzero masks
+
+    @property
+    def c_total(self) -> int:
+        """Total multiplies per m x m output tile across the S^2 phase
+        sub-filters (36 for K4S2, 16 for K3S1 — vs n^2 * S^2 dense)."""
+        return int(self.nnz_winograd.sum())
+
+
+def _conv_tap_presence_1d(dims: ConvDims, rho: int, r: int) -> np.ndarray:
+    """Tap-existence vector (length r) of residue rho's aligned sub-kernel."""
+    kcr = math.ceil((dims.kernel - rho) / dims.stride)
+    lo = dims.shift_of(rho) + dims.phase_pad
+    if lo + kcr > r:
+        raise ValueError(
+            f"conv sub-kernel [{lo}, {lo + kcr}) exceeds r={r}: kernel "
+            f"{dims.kernel} stride {dims.stride} pad {dims.padding} not "
+            f"expressible in F(m,{r}); use a larger r."
+        )
+    out = np.zeros(r)
+    out[lo : lo + kcr] = 1.0
+    return out
+
+
+def conv_plan(dims: ConvDims, m: int = 2, r: int = 3) -> ConvSubFilterPlan:
+    """Structural sparsity plan for a stride-S conv under F(m, r) — the same
+    |G|-mask machinery as the deconv ``plan``, applied to the phase
+    decomposition's tap-presence vectors."""
+    tf = get_transform(m, r)
+    S = dims.stride
+    pres = [_conv_tap_presence_1d(dims, rho, r) for rho in range(S)]
+    m1d = [tf.filter_mask1d(p) for p in pres]
+    masks = np.zeros((S, S, tf.n, tf.n), bool)
+    nnz = np.zeros((S, S), int)
+    for ry in range(S):
+        for rx in range(S):
+            mask2d = np.outer(m1d[ry], m1d[rx])
+            masks[ry, rx] = mask2d
+            nnz[ry, rx] = int(mask2d.sum())
+    taps = tuple(tuple(int(v) for v in p) for p in pres)
+    return ConvSubFilterPlan(dims, r, taps, nnz, masks)
+
+
+def decompose_conv_weights(w: jax.Array, dims: ConvDims, r: int = 3) -> jax.Array:
+    """Split conv weights (K, K, N, M) into the S^2 aligned unit-stride
+    sub-kernels, zero-padded to (S, S, r, r, N, M).  No flip: the sub-convs
+    are cross-correlations, Winograd-ready as-is."""
+    K, S, L = dims.kernel, dims.stride, dims.phase_pad
+    if w.shape[0] != K or w.shape[1] != K:
+        raise ValueError(f"weight spatial dims {w.shape[:2]} != K={K}")
+    out = jnp.zeros((S, S, r, r, w.shape[2], w.shape[3]), dtype=w.dtype)
+    for ry in range(S):
+        uy0 = dims.shift_of(ry) + L
+        for rx in range(S):
+            ux0 = dims.shift_of(rx) + L
+            for ty in range(math.ceil((K - ry) / S)):
+                for tx in range(math.ceil((K - rx) / S)):
+                    out = out.at[ry, rx, uy0 + ty, ux0 + tx].set(
+                        w[ry + S * ty, rx + S * tx]
+                    )
     return out
 
 

@@ -29,11 +29,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .tdc import DeconvDims, SubFilterPlan, decompose_weights, interleave_crop, plan
+from .tdc import (
+    ConvDims,
+    DeconvDims,
+    SubFilterPlan,
+    decompose_conv_weights,
+    decompose_weights,
+    interleave_crop,
+    plan,
+)
 from .winograd import get_transform
 
 __all__ = [
     "transform_weights",
+    "transform_conv_weights",
     "transform_input_tiles",
     "winograd_deconv2d",
     "winograd_domain_matmuls",
@@ -46,6 +55,17 @@ def transform_weights(w: jax.Array, dims: DeconvDims, m: int = 2, r: int = 3) ->
     subw = decompose_weights(w, dims, r)  # (S,S,r,r,N,M)
     G = jnp.asarray(tf.G, dtype=jnp.promote_types(w.dtype, jnp.float32))
     # W_w = G @ f @ G^T over the two spatial dims
+    return jnp.einsum("ua,yxabnm,vb->yxuvnm", G, subw, G,
+                      precision=jax.lax.Precision.HIGHEST)
+
+
+def transform_conv_weights(w: jax.Array, dims: ConvDims, m: int = 2, r: int = 3) -> jax.Array:
+    """Conv mirror of ``transform_weights``: phase-decompose a stride-S conv
+    kernel into the S^2 aligned unit-stride sub-kernels and G-transform each.
+    Returns (S, S, n, n, N, M)."""
+    tf = get_transform(m, r)
+    subw = decompose_conv_weights(w, dims, r)  # (S,S,r,r,N,M)
+    G = jnp.asarray(tf.G, dtype=jnp.promote_types(w.dtype, jnp.float32))
     return jnp.einsum("ua,yxabnm,vb->yxuvnm", G, subw, G,
                       precision=jax.lax.Precision.HIGHEST)
 

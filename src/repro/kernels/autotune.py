@@ -43,8 +43,9 @@ from . import ops
 
 __all__ = [
     "EngineConfig", "candidate_configs", "small_candidates",
-    "epilogue_candidates",
-    "autotune_deconv", "best_config", "make_timed_fn", "time_one",
+    "epilogue_candidates", "conv_candidates",
+    "autotune_deconv", "autotune_conv", "best_config",
+    "make_timed_fn", "make_timed_conv_fn", "time_one",
 ]
 
 
@@ -159,6 +160,31 @@ def epilogue_candidates(block_ty: Sequence[int] = (4, 8)) -> list[EngineConfig]:
             EngineConfig(True, block_ty=bty, block_n=128, block_m=128,
                          epilogue="leaky_relu", emit_cells=True)
         )
+    return out
+
+
+def conv_candidates(
+    block_ty: Sequence[int] = (4, 8, 16),
+    *,
+    epilogue: Sequence[Optional[str]] = (None, "leaky_relu"),
+    emit_cells: Sequence[bool] = (False, True),
+    prepack: bool = True,
+) -> list[EngineConfig]:
+    """Sweep grid for the Winograd Conv engine (always fused: the conv
+    engine consumes the phase-major cell layout), including the epilogue /
+    cell-chaining output axes — the conv mirror of epilogue_candidates."""
+    out: list[EngineConfig] = []
+    for bty in block_ty:
+        for epi in epilogue:
+            for ec in emit_cells:
+                if ec and epi is None:
+                    continue  # chained emit always rides an epilogue config
+                out.append(
+                    EngineConfig(
+                        True, block_ty=bty, block_n=128, block_m=128,
+                        prepack=prepack, epilogue=epi, emit_cells=ec,
+                    )
+                )
     return out
 
 
@@ -280,6 +306,111 @@ def make_timed_fn(cfg: Optional[EngineConfig], dims: DeconvDims, mode: str, inte
         return (x, p)
 
     return fn, make_args
+
+
+def make_timed_conv_fn(cfg: Optional[EngineConfig], cdims, mode: str, interpret: bool):
+    """Conv counterpart of ``make_timed_fn``: builds the timed callable for
+    one discriminator conv layer.  ``cfg=None`` times ``lax.conv`` (the
+    pre-engine baseline); otherwise the fused Winograd Conv engine, with
+    ``cfg.prepack`` hoisting the G-transform + pack out of the timed region
+    and ``cfg.epilogue``/``cfg.emit_cells`` selecting the fused finalize's
+    output mode (timed through an emit-cells-aware loss so grads flow)."""
+    if cfg is None:
+        def fwd(x, p):
+            return jax.lax.conv_general_dilated(
+                x, p, (cdims.stride, cdims.stride),
+                [(cdims.padding, cdims.pad_hi), (cdims.padding, cdims.pad_hi)],
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+
+        make_params = lambda w: w
+        get_leaf = lambda p: p
+        set_leaf = lambda p, leaf: leaf
+    else:
+        kw = dict(
+            interpret=interpret, block_ty=cfg.block_ty, block_n=cfg.block_n,
+            block_m=cfg.block_m, bwd_block_ty=cfg.bwd_block_ty,
+            bwd_block_n=cfg.bwd_block_n, bwd_block_m=cfg.bwd_block_m,
+            epilogue=cfg.epilogue, emit_cells=cfg.emit_cells,
+        )
+        if cfg.prepack:
+            fwd = lambda x, p: ops.winograd_conv2d_packed(x, p, cdims, **kw)
+            make_params = lambda w: ops.prepack_conv(w, cdims)
+            get_leaf = lambda p: p.ww
+            set_leaf = lambda p, leaf: ops.PackedConv(leaf, p.inv)
+        else:
+            fwd = lambda x, p: ops.winograd_conv2d(x, p, cdims, **kw)
+            make_params = lambda w: w
+            get_leaf = lambda p: p
+            set_leaf = lambda p, leaf: leaf
+
+    def loss(x, p):
+        return jnp.sum(fwd(x, p).astype(jnp.float32) ** 2)
+
+    if mode == "fwd":
+        fn = jax.jit(fwd)
+    elif mode == "grad":
+        fn = jax.jit(jax.value_and_grad(loss, argnums=1))
+    elif mode == "step":
+        def step(x, p, opt):
+            _, g = jax.value_and_grad(loss, argnums=1)(x, p)
+            leaf2, opt2, _ = adamw_update(get_leaf(p), get_leaf(g), opt, lr=1e-3)
+            return set_leaf(p, leaf2), opt2
+
+        fn = jax.jit(step)
+    else:
+        raise ValueError(mode)
+
+    def make_args(x, w):
+        p = make_params(w)
+        if mode == "step":
+            return (x, p, adamw_init(get_leaf(p)))
+        return (x, p)
+
+    return fn, make_args
+
+
+def autotune_conv(
+    cdims,
+    input_shape: tuple[int, int, int, int],  # (B, H, W, N)
+    c_out: int,
+    *,
+    dtype=jnp.float32,
+    candidates: Iterable[EngineConfig] | None = None,
+    interpret: bool | None = None,
+    repeats: int = 3,
+    seed: int = 0,
+    mode: str = "fwd",
+) -> list[dict]:
+    """Time every candidate conv engine config for one discriminator layer
+    (``mode`` as in ``autotune_deconv``: fwd / grad / full AdamW step).
+    Returns rows sorted fastest-first; infeasible configs kept with
+    ok=False."""
+    if mode not in ("fwd", "grad", "step"):
+        raise ValueError(mode)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if candidates is None:
+        candidates = conv_candidates()
+    B, H, W, N = input_shape
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((B, H, W, N)), dtype)
+    w = jnp.asarray(
+        rng.standard_normal((cdims.kernel, cdims.kernel, N, c_out)), dtype
+    )
+    rows: list[dict] = []
+    for cfg in candidates:
+        try:
+            fn, make_args = make_timed_conv_fn(cfg, cdims, mode, interpret)
+            dt = time_one(fn, make_args(x, w), repeats)
+            rows.append({"config": cfg, "ms": dt * 1e3, "ok": True, "error": ""})
+        except Exception as e:
+            rows.append(
+                {"config": cfg, "ms": float("inf"), "ok": False,
+                 "error": f"{type(e).__name__}: {e}"[:200]}
+            )
+    rows.sort(key=lambda r: r["ms"])
+    return rows
 
 
 def autotune_deconv(

@@ -25,13 +25,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tdc import DeconvDims, interleave_crop, plan
+from repro.core.tdc import ConvDims, DeconvDims, conv_plan, interleave_crop, plan
 from repro.core.winograd import get_transform
-from repro.core.winograd_deconv import transform_input_tiles, transform_weights
+from repro.core.winograd_deconv import (
+    transform_conv_weights,
+    transform_input_tiles,
+    transform_weights,
+)
 
 from . import ref as _ref
 from .winograd_deconv import (
     EPILOGUE_ACTIVATIONS,
+    winograd_conv_fused_bwd_w,
+    winograd_conv_fused_bwd_x,
+    winograd_conv_fused_engine,
     winograd_domain_engine,
     winograd_domain_engine_bwd_w,
     winograd_domain_engine_bwd_x,
@@ -42,6 +49,7 @@ from .winograd_deconv import (
 
 __all__ = [
     "pack_weights",
+    "unpack_weights",
     "winograd_deconv2d_fused",
     "winograd_deconv2d_packed",
     "winograd_deconv2d_cells",
@@ -52,6 +60,17 @@ __all__ = [
     "chain_aligned",
     "PackedDeconv",
     "prepack",
+    "pack_conv_weights",
+    "conv_packed_layout",
+    "PackedConv",
+    "prepack_conv",
+    "winograd_conv2d",
+    "winograd_conv2d_packed",
+    "winograd_conv2d_cells",
+    "conv_cells_from_image",
+    "conv_cells_to_next",
+    "conv_chain_aligned",
+    "cells_window_mask",
     "EPILOGUE_ACTIVATIONS",
     "INTERPRET_BLOCKS",
     "INTERPRET_BLOCKS_FUSED",
@@ -61,6 +80,10 @@ __all__ = [
 # and the CPU benchmark profiles share these — keep them in one place).
 INTERPRET_BLOCKS = dict(block_t=16, block_n=8, block_m=8)
 INTERPRET_BLOCKS_FUSED = dict(block_ty=4, block_n=8, block_m=8)
+# conv engine (the discriminator): emulated wall time scales with grid-step
+# count, and the trunk's tile-row extents (32 down to 1) fit one block, so
+# a taller tile-row block is strictly fewer interpret steps
+INTERPRET_BLOCKS_CONV = dict(block_ty=16, block_n=8, block_m=8)
 
 
 @functools.lru_cache(maxsize=None)
@@ -388,12 +411,45 @@ def _fused_epi_fwd(
     return y, (cells, ww, inv, scale, bias, y)
 
 
+def _epilogue_cotangent(g_img, y_img, scale, bias, activation, M):
+    """Activation-cotangent prologue shared by the deconv and conv epilogue
+    VJPs: from the output cotangent and the SAVED post-activation output
+    (both fp32 images), recover the pre-affine cotangent plus the scale and
+    bias cotangents.  Returns (g_aff, dscale, dbias)."""
+    from .winograd_deconv import LEAKY_SLOPE
+
+    f32 = jnp.float32
+    if activation == "relu":
+        dact, pre = (y_img > 0).astype(f32), y_img
+    elif activation == "leaky_relu":
+        dact = jnp.where(y_img >= 0, 1.0, LEAKY_SLOPE)
+        pre = jnp.where(y_img >= 0, y_img, y_img / LEAKY_SLOPE)
+    elif activation == "tanh":
+        dact = 1.0 - y_img * y_img
+        pre = jnp.arctanh(jnp.clip(y_img, -1.0 + 1e-6, 1.0 - 1e-6))
+    else:
+        dact, pre = jnp.ones_like(y_img), y_img
+    dpre = g_img * dact
+    sc = jnp.ones((M,), f32) if scale is None else scale.astype(f32)
+    bi = jnp.zeros((M,), f32) if bias is None else bias.astype(f32)
+    dbias = jnp.sum(dpre, axis=(0, 1, 2))
+    # raw engine output v = (pre - bias) / scale; where act' = 0 the value of
+    # v is irrelevant (dpre = 0), so the relu information loss is harmless.
+    # An exactly-zero scale channel destroys v entirely — its true dscale is
+    # unrecoverable from the saved activation, so it gets 0 instead of a NaN
+    # that would poison the whole leaf through the optimizer's global norm
+    # (zero-scale channels carry no signal; the unfused XLA-epilogue path
+    # remains exact for that degenerate case).
+    sc_safe = jnp.where(sc == 0, 1.0, sc)
+    v = jnp.where(sc == 0, 0.0, (pre - bi) / sc_safe)
+    dscale = jnp.sum(dpre * v, axis=(0, 1, 2))
+    return dpre * sc, dscale, dbias
+
+
 def _fused_epi_bwd(
     bt_mat, pos_idx, sub_slices, m, n, ty, tx, m2, out_mode, activation,
     stride, padding, out_h, out_w, interpret, blocks, res, g,
 ):
-    from .winograd_deconv import LEAKY_SLOPE
-
     cells, ww, inv, scale, bias, y_out = res
     _, _, _, bwd_bty, bwd_bn, bwd_bm = blocks
     S, ms = stride, m * stride
@@ -428,31 +484,9 @@ def _fused_epi_bwd(
         y_img = y_out.astype(f32)
 
     # --- activation-cotangent prologue (from the post-activation value)
-    if activation == "relu":
-        dact, pre = (y_img > 0).astype(f32), y_img
-    elif activation == "leaky_relu":
-        dact = jnp.where(y_img >= 0, 1.0, LEAKY_SLOPE)
-        pre = jnp.where(y_img >= 0, y_img, y_img / LEAKY_SLOPE)
-    elif activation == "tanh":
-        dact = 1.0 - y_img * y_img
-        pre = jnp.arctanh(jnp.clip(y_img, -1.0 + 1e-6, 1.0 - 1e-6))
-    else:
-        dact, pre = jnp.ones_like(y_img), y_img
-    dpre = g_img * dact
-    sc = jnp.ones((M,), f32) if scale is None else scale.astype(f32)
-    bi = jnp.zeros((M,), f32) if bias is None else bias.astype(f32)
-    dbias = jnp.sum(dpre, axis=(0, 1, 2))
-    # raw engine output v = (pre - bias) / scale; where act' = 0 the value of
-    # v is irrelevant (dpre = 0), so the relu information loss is harmless.
-    # An exactly-zero scale channel destroys v entirely — its true dscale is
-    # unrecoverable from the saved activation, so it gets 0 instead of a NaN
-    # that would poison the whole leaf through the optimizer's global norm
-    # (zero-scale channels carry no deconv signal; the unfused XLA-epilogue
-    # path remains exact for that degenerate case).
-    sc_safe = jnp.where(sc == 0, 1.0, sc)
-    v = jnp.where(sc == 0, 0.0, (pre - bi) / sc_safe)
-    dscale = jnp.sum(dpre * v, axis=(0, 1, 2))
-    g_aff = dpre * sc
+    g_aff, dscale, dbias = _epilogue_cotangent(
+        g_img, y_img, scale, bias, activation, M
+    )
 
     # --- inverse interleave: back to the (B, ty, tx, S2*m2, M) scratch layout
     g_scr = jnp.transpose(
@@ -466,11 +500,18 @@ def _fused_epi_bwd(
         gy=gy, gx=gx, m2=m2, interpret=interpret,
         block_ty=bwd_bty, block_n=bwd_bn, block_m=bwd_bm,
     )
+    if dcells.shape[-1] < cells.shape[-1]:
+        # a chained input carries block-padded trailing channels the engine
+        # contracts against zero weight rows — their cotangent is zero
+        dcells = jnp.pad(
+            dcells,
+            ((0, 0),) * 4 + ((0, cells.shape[-1] - dcells.shape[-1]),),
+        )
     dww = winograd_fused_pre_engine_bwd_w(
         cells, g_scr, inv, bt_mat,
         pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, tx=tx, m2=m2,
         interpret=interpret, block_ty=bwd_bty, block_n=bwd_bn, block_m=bwd_bm,
-    )
+    )[:, : ww.shape[1], :]  # chained inputs may be channel-padded past N
     ds = None if scale is None else dscale.astype(scale.dtype)
     db = None if bias is None else dbias.astype(bias.dtype)
     return (
@@ -741,3 +782,435 @@ def winograd_deconv2d_fused(
         bwd_block_t=bwd_block_t, bwd_block_n=bwd_block_n,
         bwd_block_m=bwd_block_m, bwd_block_ty=bwd_block_ty,
     )
+
+
+# ---------------------------------------------------------------------------
+# Winograd Conv (the discriminator path).  A stride-S conv phase-decomposes
+# into S^2 unit-stride sub-correlations over de-interleaved input phases
+# that SUM into one output (core/tdc.py::conv_plan — the inverse of the TDC
+# deconv-to-conv conversion), which maps onto the existing engine machinery
+# with the phase pair playing the sub-filter role: packed (C, N, M) weights
+# whose positions index the s2*n^2 space, one shared inverse transform, one
+# m x m output tile.  Same prepack-then-apply API as the deconv side.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def conv_packed_layout(cdims: ConvDims, m: int = 2, r: int = 3):
+    """Static packed layout for a strided conv: position indices into the
+    s2*n^2 phase-major Winograd position space (doubling as the pack gather
+    index) and the packed inverse-transform rows.
+
+    Returns (pos_idx, inv_packed_np, plan).
+    """
+    sp = conv_plan(cdims, m, r)
+    tf = get_transform(m, r)
+    n = tf.n
+    AT = np.asarray(tf.AT)
+    S = cdims.stride
+    pos_idx: list[int] = []
+    inv_rows: list[np.ndarray] = []
+    for ry in range(S):
+        for rx in range(S):
+            s = ry * S + rx
+            mask = sp.masks_winograd[ry, rx]
+            for u in range(n):
+                for v in range(n):
+                    if mask[u, v]:
+                        pos_idx.append(s * n * n + u * n + v)
+                        inv_rows.append(
+                            np.outer(AT[:, u], AT[:, v]).reshape(m * m)
+                        )
+    inv_packed = np.stack(inv_rows).astype(np.float32)
+    return tuple(pos_idx), inv_packed, sp
+
+
+def pack_conv_weights(w: jax.Array, cdims: ConvDims, m: int = 2, r: int = 3) -> jax.Array:
+    """Conv weights (K, K, N, M) -> packed Winograd-domain (C, N, M): only
+    the structurally nonzero positions of the G-transformed phase
+    sub-filters are stored (C = 36 for K4S2 vs 64 dense, 16 for K3S1)."""
+    pos_idx, _, _ = conv_packed_layout(cdims, m, r)
+    ww = transform_conv_weights(w, cdims, m, r)  # (S,S,n,n,N,M)
+    flat = ww.reshape(-1, *ww.shape[4:])  # (S*S*n*n, N, M)
+    return jnp.take(flat, jnp.asarray(pos_idx, jnp.int32), axis=0).astype(w.dtype)
+
+
+class PackedConv(NamedTuple):
+    """Pre-packed Winograd-domain conv weights (a pytree) — the conv mirror
+    of :class:`PackedDeconv`: ``ww`` is the trainable leaf, ``inv`` the
+    static packed inverse transform."""
+
+    ww: jax.Array  # (C, N, M)
+    inv: jax.Array  # (C, m2) fp32
+
+
+def prepack_conv(w: jax.Array, cdims: ConvDims, m: int = 2, r: int = 3) -> PackedConv:
+    """One-time G-transform + zero-skipping pack of raw conv weights."""
+    _, inv_np, _ = conv_packed_layout(cdims, m, r)
+    return PackedConv(pack_conv_weights(w, cdims, m, r), jnp.asarray(inv_np))
+
+
+@functools.lru_cache(maxsize=None)
+def _unpack_matrix(dims, m: int, r: int) -> np.ndarray:
+    """(K^2, C) least-squares inverse of the linear pack map w -> ww_packed
+    (spatial taps only: the map acts independently per (N, M) pair).  The
+    pack is injective (G has full column rank and every tap reaches some
+    kept position), so pinv recovers raw weights exactly from consistently
+    packed ones and least-squares-projects arbitrary trained ones."""
+    K = dims.kernel
+    pack = pack_conv_weights if isinstance(dims, ConvDims) else pack_weights
+    cols = []
+    for k in range(K * K):
+        basis = np.zeros((K, K, 1, 1), np.float32)
+        basis[k // K, k % K, 0, 0] = 1.0
+        cols.append(np.asarray(pack(jnp.asarray(basis), dims, m, r)).reshape(-1))
+    return np.linalg.pinv(np.stack(cols, axis=1))
+
+
+def unpack_weights(ww_packed: jax.Array, dims, m: int = 2, r: int = 3) -> jax.Array:
+    """Packed Winograd-domain (C, N, M) -> raw (K, K, N, M) weights via
+    least squares through the G-transform + pack (checkpoint-export inverse
+    of ``pack_weights`` / ``pack_conv_weights``; ``dims`` picks the family).
+    """
+    K = dims.kernel
+    pinv = jnp.asarray(_unpack_matrix(dims, m, r), ww_packed.dtype)
+    w = jnp.einsum("kc,cnm->knm", pinv, ww_packed.astype(pinv.dtype))
+    return w.reshape(K, K, *ww_packed.shape[1:]).astype(ww_packed.dtype)
+
+
+def cells_window_mask(rows: int, cols: int, m: int, padding: int,
+                      out_h: int, out_w: int) -> jax.Array:
+    """(rows, cols, m*m, 1) fp32 crop-window mask of an emitted cell layout:
+    cell (rr, cc) intra (pp, qq) holds pixel (m*rr + pp, m*cc + qq), valid in
+    [padding, padding + out_h) x [padding, padding + out_w) — the host-side
+    mirror of the in-kernel masks (used by the two-pass chained BN, which
+    must re-zero out-of-window cells after its XLA affine+activation)."""
+    r_io = jnp.arange(rows, dtype=jnp.int32)[:, None, None, None]
+    c_io = jnp.arange(cols, dtype=jnp.int32)[None, :, None, None]
+    a_io = jnp.arange(m * m, dtype=jnp.int32)[None, None, :, None]
+    row_px = m * r_io + a_io // m
+    col_px = m * c_io + a_io % m
+    return (
+        (row_px >= padding) & (row_px < padding + out_h)
+        & (col_px >= padding) & (col_px < padding + out_w)
+    ).astype(jnp.float32)
+
+
+def conv_cells_from_image(x: jax.Array, cdims: ConvDims, m: int = 2, r: int = 3) -> jax.Array:
+    """NHWC input -> the conv engine's phase-major cell layout
+    (B, Gy, Gx, S^2*m*m, N): de-interleave the S^2 input phases, permute
+    them into tap-residue pair order, left-pad every phase by L cells and
+    space-to-depth each by the tile stride m.  Pure pad/reshape/transpose —
+    XLA fuses it into the producing op."""
+    tf = get_transform(m, r)
+    B, H, W, N = x.shape
+    S, L = cdims.stride, cdims.phase_pad
+    HO, WO = cdims.out_size(H), cdims.out_size(W)
+    ty, tx = -(-HO // m), -(-WO // m)
+    q = -(-tf.n // m)
+    gy, gx = ty + q - 1, tx + q - 1
+    hp = max(-(-H // S), gy * m - L)
+    wp = max(-(-W // S), gx * m - L)
+    xp = jnp.pad(x, ((0, 0), (0, S * hp - H), (0, S * wp - W), (0, 0)))
+    phases = jnp.transpose(
+        xp.reshape(B, hp, S, wp, S, N), (0, 2, 4, 1, 3, 5)
+    )  # (B, phi_y, phi_x, hp, wp, N)
+    perm = jnp.asarray([cdims.phase_of(rho) for rho in range(S)], jnp.int32)
+    pairs = jnp.take(jnp.take(phases, perm, axis=1), perm, axis=2)
+    pairs = jnp.pad(pairs, ((0, 0), (0, 0), (0, 0), (L, 0), (L, 0), (0, 0)))
+    pairs = pairs[:, :, :, : gy * m, : gx * m, :]
+    cells = pairs.reshape(B, S, S, gy, m, gx, m, N)
+    return jnp.transpose(cells, (0, 3, 5, 1, 2, 4, 6, 7)).reshape(
+        B, gy, gx, S * S * m * m, N
+    ).astype(x.dtype)
+
+
+def conv_chain_aligned(cdims: ConvDims, next_cdims: ConvDims, m: int = 2) -> bool:
+    """True when this conv layer's emitted output-image cell layout converts
+    to the next conv layer's phase-cell layout by a pure (static) cell-level
+    gather — i.e. with no pixel-level re-split.  Holds whenever the next
+    stride equals the cell stride m (the discriminator's stride-2 trunk
+    under F(2,3): output cells ARE the next layer's phase pairs), or for a
+    unit-stride hop whose pad is cell-aligned."""
+    if next_cdims.stride == m:
+        return True
+    if next_cdims.stride == 1:
+        return next_cdims.padding % m == 0
+    return False
+
+
+def conv_cells_to_next(
+    emitted: jax.Array,  # (B, >=ty, >=tx, m*m, >=M) from emit_cells
+    cdims: ConvDims,
+    next_cdims: ConvDims,
+    out_hw: tuple[int, int],  # this layer's (H_O, W_O) = next layer's input
+    m: int = 2,
+    r: int = 3,
+) -> jax.Array:
+    """Turn a conv ``emit_cells`` output into the next conv layer's
+    phase-major cell layout.  Requires ``conv_chain_aligned``: with
+    S' == m each emitted cell row IS one phase row of the next layer
+    (de-interleave = intra-cell axis relabel, a transpose), so the hop
+    costs one XLA gather over an already-cell-resident tensor instead of
+    the NHWC materialize + re-pad + space-to-depth of the generic path."""
+    if not conv_chain_aligned(cdims, next_cdims, m):
+        raise ValueError(
+            f"conv cell layouts misaligned: next stride {next_cdims.stride} "
+            f"pad {next_cdims.padding} vs cell stride m={m}"
+        )
+    tf = get_transform(m, r)
+    HO, WO = out_hw
+    S2n, L2 = next_cdims.stride, next_cdims.phase_pad
+    HO2, WO2 = next_cdims.out_size(HO), next_cdims.out_size(WO)
+    ty2, tx2 = -(-HO2 // m), -(-WO2 // m)
+    q = -(-tf.n // m)
+    gy2, gx2 = ty2 + q - 1, tx2 + q - 1
+    B = emitted.shape[0]
+    nch = emitted.shape[-1]
+    if S2n == 1:
+        lc = next_cdims.padding // m  # cell-aligned by conv_chain_aligned
+        arr = jnp.pad(
+            emitted,
+            (
+                (0, 0),
+                (lc, max(0, gy2 - lc - emitted.shape[1])),
+                (lc, max(0, gx2 - lc - emitted.shape[2])),
+                (0, 0),
+                (0, 0),
+            ),
+        )
+        return arr[:, :gy2, :gx2]
+    # S' == m: emitted cell (m*g + p - L2) intra (phi_y, phi_x) is next
+    # phase-pair pixel (m*g + p, m*gx' + q) — pad by L2 CELL rows, regroup.
+    arr = jnp.pad(
+        emitted,
+        (
+            (0, 0),
+            (L2, max(0, gy2 * m - L2 - emitted.shape[1])),
+            (L2, max(0, gx2 * m - L2 - emitted.shape[2])),
+            (0, 0),
+            (0, 0),
+        ),
+    )[:, : gy2 * m, : gx2 * m]
+    arr = arr.reshape(B, gy2, m, gx2, m, m, m, nch)  # (b,g,p,gx',q,phiy,phix,ch)
+    perm = jnp.asarray([next_cdims.phase_of(rho) for rho in range(S2n)], jnp.int32)
+    arr = jnp.take(jnp.take(arr, perm, axis=5), perm, axis=6)  # phases -> pairs
+    return jnp.transpose(arr, (0, 1, 3, 5, 6, 2, 4, 7)).reshape(
+        B, gy2, gx2, m * m * m * m, nch
+    )
+
+
+# -------------------------------------------------- conv engine custom VJP
+# Forward: the fused conv engine.  Backward: the shared activation-cotangent
+# prologue in XLA, then the conv Pallas backward engines — jax.grad of the
+# discriminator never runs a reference conv.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=tuple(range(5, 18)))
+def _conv_epi_vjp(
+    cells, ww, inv, scale, bias, bt_mat, pos_idx, m, n, ty, tx, s2,
+    out_mode, activation, out_h, out_w, interpret, blocks,
+):
+    bty, bn, bm = blocks[:3]
+    return winograd_conv_fused_engine(
+        cells, ww, inv, bt_mat,
+        pos_idx=pos_idx, m=m, n=n, ty=ty, tx=tx, s2=s2,
+        block_ty=bty, block_n=bn, block_m=bm, interpret=interpret,
+        out_mode=out_mode, activation=activation, scale=scale, bias=bias,
+        out_h=out_h, out_w=out_w,
+    )
+
+
+def _conv_epi_fwd(
+    cells, ww, inv, scale, bias, bt_mat, pos_idx, m, n, ty, tx, s2,
+    out_mode, activation, out_h, out_w, interpret, blocks,
+):
+    y = _conv_epi_vjp(
+        cells, ww, inv, scale, bias, bt_mat, pos_idx, m, n, ty, tx, s2,
+        out_mode, activation, out_h, out_w, interpret, blocks,
+    )
+    return y, (cells, ww, inv, scale, bias, y)
+
+
+def _conv_epi_bwd(
+    bt_mat, pos_idx, m, n, ty, tx, s2, out_mode, activation, out_h, out_w,
+    interpret, blocks, res, g,
+):
+    cells, ww, inv, scale, bias, y_out = res
+    _, _, _, bwd_bty, bwd_bn, bwd_bm = blocks
+    B, M = cells.shape[0], ww.shape[2]
+    f32 = jnp.float32
+
+    if out_mode == "cells":
+        def uncell(c):  # raw cells out -> output-image pixels
+            c = c[:, :ty, :tx, :, :M]
+            return jnp.transpose(
+                c.reshape(B, ty, tx, m, m, M), (0, 1, 3, 2, 4, 5)
+            ).reshape(B, ty * m, tx * m, M)
+
+        g_img = uncell(g.astype(f32))
+        y_img = uncell(y_out.astype(f32))
+        # the forward zeroed everything outside the crop window
+        g_img = jnp.pad(
+            g_img[:, :out_h, :out_w, :],
+            ((0, 0), (0, ty * m - out_h), (0, tx * m - out_w), (0, 0)),
+        )
+    else:
+        g_img = g.astype(f32)  # (B, ty*m, tx*m, M)
+        y_img = y_out.astype(f32)
+
+    g_aff, dscale, dbias = _epilogue_cotangent(
+        g_img, y_img, scale, bias, activation, M
+    )
+    g_scr = jnp.transpose(
+        g_aff.reshape(B, ty, m, tx, m, M), (0, 1, 3, 2, 4, 5)
+    ).reshape(B, ty, tx, m * m, M).astype(g.dtype)
+
+    gy, gx = cells.shape[1], cells.shape[2]
+    dcells = winograd_conv_fused_bwd_x(
+        g_scr, ww, inv, bt_mat,
+        pos_idx=pos_idx, m=m, n=n, ty=ty, tx=tx, gy=gy, gx=gx, s2=s2,
+        interpret=interpret, block_ty=bwd_bty, block_n=bwd_bn, block_m=bwd_bm,
+    )
+    if dcells.shape[-1] < cells.shape[-1]:
+        # a chained input carries block-padded trailing channels the engine
+        # contracts against zero weight rows — their cotangent is zero
+        dcells = jnp.pad(
+            dcells,
+            ((0, 0),) * 4 + ((0, cells.shape[-1] - dcells.shape[-1]),),
+        )
+    dww = winograd_conv_fused_bwd_w(
+        cells, g_scr, inv, bt_mat,
+        pos_idx=pos_idx, m=m, n=n, ty=ty, tx=tx, s2=s2,
+        interpret=interpret, block_ty=bwd_bty, block_n=bwd_bn, block_m=bwd_bm,
+    )[:, : ww.shape[1], :]  # chained inputs may be channel-padded past N
+    ds = None if scale is None else dscale.astype(scale.dtype)
+    db = None if bias is None else dbias.astype(bias.dtype)
+    return (
+        dcells.astype(cells.dtype), dww.astype(ww.dtype), jnp.zeros_like(inv),
+        ds, db,
+    )
+
+
+_conv_epi_vjp.defvjp(_conv_epi_fwd, _conv_epi_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "cdims", "in_hw", "m", "r", "backend", "interpret", "epilogue",
+        "emit_cells", "block_ty", "block_n", "block_m",
+        "bwd_block_ty", "bwd_block_n", "bwd_block_m",
+    ),
+)
+def winograd_conv2d_cells(
+    cells: jax.Array,  # (B, Gy, Gx, S^2*m*m, N) phase-major cell layout
+    packed: PackedConv,
+    cdims: ConvDims,
+    in_hw: tuple[int, int],  # the (H, W) the cells were built from
+    *,
+    m: int = 2,
+    r: int = 3,
+    backend: str = "pallas",
+    interpret: bool = False,
+    epilogue: str = "none",
+    scale: jax.Array | None = None,
+    bias: jax.Array | None = None,
+    emit_cells: bool = False,
+    block_ty: int = 8,
+    block_n: int = 128,
+    block_m: int = 128,
+    bwd_block_ty: int | None = None,
+    bwd_block_n: int | None = None,
+    bwd_block_m: int | None = None,
+) -> jax.Array:
+    """Cell-to-cell chained Winograd conv: consume the phase-major cell
+    layout directly (e.g. a previous conv layer's ``emit_cells`` output via
+    ``conv_cells_to_next``), run the fused engine, and return the NHWC
+    image (B, H_O, W_O, M) or — with ``emit_cells`` — the output image's
+    cell layout for the next chained layer."""
+    tf = get_transform(m, r)
+    H, W = in_hw
+    HO, WO = cdims.out_size(H), cdims.out_size(W)
+    ty, tx = -(-HO // m), -(-WO // m)
+    s2 = cdims.stride ** 2
+    pos_idx, _, _ = conv_packed_layout(cdims, m, r)
+    bt_mat = tuple(tuple(float(v) for v in row) for row in tf.BT)
+    out_mode = "cells" if emit_cells else "nhwc"
+    if backend == "pallas":
+        blocks = (
+            block_ty, block_n, block_m,
+            block_ty if bwd_block_ty is None else bwd_block_ty,
+            block_n if bwd_block_n is None else bwd_block_n,
+            block_m if bwd_block_m is None else bwd_block_m,
+        )
+        y = _conv_epi_vjp(
+            cells, packed.ww, packed.inv, scale, bias, bt_mat, pos_idx,
+            m, tf.n, ty, tx, s2, out_mode, epilogue, HO, WO, interpret, blocks,
+        )
+    elif backend == "ref":
+        y = _ref.conv_engine_ref(
+            cells, packed.ww, packed.inv, bt_mat, scale, bias,
+            pos_idx=pos_idx, m=m, n=tf.n, ty=ty, tx=tx, s2=s2,
+            out_mode=out_mode, activation=epilogue, out_h=HO, out_w=WO,
+        )
+    else:
+        raise ValueError(backend)
+    if emit_cells:
+        return y
+    return y[:, :HO, :WO, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "cdims", "m", "r", "backend", "interpret", "epilogue", "emit_cells",
+        "block_ty", "block_n", "block_m",
+        "bwd_block_ty", "bwd_block_n", "bwd_block_m",
+    ),
+)
+def winograd_conv2d_packed(
+    x: jax.Array,  # (B, H, W, N) NHWC
+    packed: PackedConv,
+    cdims: ConvDims,
+    *,
+    m: int = 2,
+    r: int = 3,
+    backend: str = "pallas",
+    interpret: bool = False,
+    epilogue: str | None = None,
+    scale: jax.Array | None = None,
+    bias: jax.Array | None = None,
+    emit_cells: bool = False,
+    block_ty: int = 8,
+    block_n: int = 128,
+    block_m: int = 128,
+    bwd_block_ty: int | None = None,
+    bwd_block_n: int | None = None,
+    bwd_block_m: int | None = None,
+) -> jax.Array:
+    """Strided Winograd conv from pre-packed weights: the discriminator
+    mirror of ``winograd_deconv2d_packed``.  ``epilogue``/``scale``/``bias``
+    fuse the per-channel affine (conv bias, folded eval BN) + activation
+    into the engine finalize; ``emit_cells`` chains into the next conv
+    layer via ``conv_cells_to_next``."""
+    return winograd_conv2d_cells(
+        conv_cells_from_image(x, cdims, m, r), packed, cdims,
+        (x.shape[1], x.shape[2]),
+        m=m, r=r, backend=backend, interpret=interpret,
+        epilogue=epilogue or "none", scale=scale, bias=bias,
+        emit_cells=emit_cells, block_ty=block_ty, block_n=block_n,
+        block_m=block_m, bwd_block_ty=bwd_block_ty, bwd_block_n=bwd_block_n,
+        bwd_block_m=bwd_block_m,
+    )
+
+
+def winograd_conv2d(
+    x: jax.Array,
+    w: jax.Array,  # (K, K, N, M) conv weights (cross-correlation)
+    cdims: ConvDims,
+    **kw,
+) -> jax.Array:
+    """Convenience wrapper that re-packs ``w`` on every call; hot paths
+    should ``prepack_conv`` once and call ``winograd_conv2d_packed``."""
+    return winograd_conv2d_packed(x, prepack_conv(w, cdims), cdims, **kw)

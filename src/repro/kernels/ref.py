@@ -15,6 +15,7 @@ __all__ = [
     "engine_ref",
     "fused_pre_engine_ref",
     "fused_epilogue_engine_ref",
+    "conv_engine_ref",
     "epilogue_apply_ref",
     "interleave_tiles_ref",
     "winograd_deconv2d_ref",
@@ -171,6 +172,79 @@ def fused_epilogue_engine_ref(
     out = jnp.transpose(
         img.reshape(B, ty * stride, m, tx * stride, m, M), (0, 1, 3, 2, 4, 5)
     ).reshape(B, ty * stride, tx * stride, m * m, M)
+    return out.astype(cells.dtype)
+
+
+def conv_engine_ref(
+    cells: jax.Array,  # (B, Gy, Gx, s2*m*m, N) phase-major cell layout
+    ww_packed: jax.Array,  # (C, N, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    bt_mat,  # (n, n) B^T
+    scale,  # (M,) or None
+    bias,  # (M,) or None
+    *,
+    pos_idx: tuple[int, ...],  # into the s2*n^2 phase-major position space
+    m: int,
+    n: int,
+    ty: int,
+    tx: int,
+    s2: int,
+    out_mode: str,  # "nhwc" | "cells"
+    activation: str,
+    out_h: int,
+    out_w: int,
+) -> jax.Array:
+    """Oracle for the fused Winograd Conv engine: per phase sub-filter,
+    rebuild the padded phase image from its cell block, gather overlapping
+    tiles and B-transform them; contract the packed positions (which index
+    the concatenated s2*n^2 space, summing the phases through the shared
+    inverse transform) and apply the epilogue.  Returns the output-image
+    pixels (B, ty*m, tx*m, M) or its crop-masked cell layout
+    (B, ty, tx, m*m, M)."""
+    B, Gy, Gx, s2m2c, N = cells.shape
+    M = ww_packed.shape[-1]
+    m2c = m * m
+    idx_y = (m * jnp.arange(ty))[:, None] + jnp.arange(n)[None, :]
+    idx_x = (m * jnp.arange(tx))[:, None] + jnp.arange(n)[None, :]
+    bt = jnp.asarray(bt_mat, jnp.float32)
+    xws = []
+    for s in range(s2):
+        sub = cells[:, :, :, s * m2c : (s + 1) * m2c, :]
+        img = jnp.transpose(
+            sub.reshape(B, Gy, Gx, m, m, N), (0, 1, 3, 2, 4, 5)
+        ).reshape(B, Gy * m, Gx * m, N)
+        tiles = img[:, idx_y][:, :, :, idx_x]  # (B, ty, n, tx, n, N)
+        tiles = jnp.transpose(tiles, (0, 1, 3, 2, 4, 5))
+        xw = jnp.einsum(
+            "ua,zyxabc,vb->zyxuvc", bt, tiles.astype(jnp.float32), bt,
+            precision=jax.lax.Precision.HIGHEST,
+        ).astype(cells.dtype)
+        xws.append(xw.reshape(B * ty * tx, n * n, N))
+    xw_all = jnp.concatenate(xws, axis=1)  # (T, s2*n2, N)
+    pos = jnp.asarray(pos_idx)
+    xg = xw_all[:, pos, :].astype(jnp.float32)  # (T, C, N)
+    yc = jnp.einsum(
+        "tcn,cnm->ctm", xg, ww_packed.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST,
+    )
+    y = jnp.einsum("ctm,ca->tam", yc, inv_packed.astype(jnp.float32))  # (T, m2, M)
+    img = jnp.transpose(
+        y.reshape(B, ty, tx, m, m, M), (0, 1, 3, 2, 4, 5)
+    ).reshape(B, ty * m, tx * m, M)
+    img = epilogue_apply_ref(img, scale, bias, activation)
+    if out_mode == "nhwc":
+        return img.astype(cells.dtype)
+    if out_mode != "cells":
+        raise ValueError(out_mode)
+    rows = jnp.arange(ty * m)
+    cols = jnp.arange(tx * m)
+    img = jnp.where(
+        (rows < out_h)[None, :, None, None] & (cols < out_w)[None, None, :, None],
+        img, 0.0,
+    )
+    out = jnp.transpose(
+        img.reshape(B, ty, m, tx, m, M), (0, 1, 3, 2, 4, 5)
+    ).reshape(B, ty, tx, m * m, M)
     return out.astype(cells.dtype)
 
 

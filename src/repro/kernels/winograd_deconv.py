@@ -50,6 +50,9 @@ __all__ = [
     "winograd_domain_engine_bwd_w",
     "winograd_fused_pre_engine_bwd_x",
     "winograd_fused_pre_engine_bwd_w",
+    "winograd_conv_fused_engine",
+    "winograd_conv_fused_bwd_x",
+    "winograd_conv_fused_bwd_w",
 ]
 
 
@@ -77,8 +80,48 @@ def _apply_epilogue(y, scale, bias, activation: str):
     return y
 
 
-def _com_pe(xw, ww_ref, acc_ref, *, pos_idx):
-    """com-PE: one MXU matmul per packed (structurally nonzero) position."""
+def _const_operand(bt_mat, pos_idx):
+    """Pack the static B^T matrix and packed-position indices into one tiny
+    fp32 operand: Pallas kernels cannot capture array constants (even in
+    interpret mode), and the batched interpret fast paths need both as
+    arrays (einsum / gather / scatter-add).  Rows [0, n) hold B^T, rows
+    [n, n+C) hold pos_idx (exact in fp32: positions < s2*n^2 <= 64).  The
+    unrolled compiled paths never read it."""
+    n = len(bt_mat)
+    C = len(pos_idx)
+    w = max(n, 1)
+    arr = np.zeros((n + C, w), np.float32)
+    if n:
+        arr[:n, :n] = np.asarray(bt_mat, np.float32)
+    arr[n:, 0] = np.asarray(pos_idx, np.float32)
+    return arr
+
+
+def _decode_consts(const_ref, n: int):
+    """(B^T fp32 (n, n) or None, pos int32 (C,)) from the const operand."""
+    c = const_ref[...]
+    bt = c[:n, :n] if n else None
+    return bt, c[n:, 0].astype(jnp.int32)
+
+
+def _com_pe(xw, ww_ref, acc_ref, *, pos_idx, batched: bool = False, pos=None):
+    """com-PE: one MXU matmul per packed (structurally nonzero) position.
+
+    ``batched`` is the interpret-mode fast path: one gather + ONE batched
+    dot_general over the packed axis instead of C unrolled matmuls — the
+    math (each position's independent N-contraction in fp32) is identical,
+    but interpret-mode wall time tracks op count, so collapsing the loop is
+    the difference between the emulated engine beating or trailing the
+    pure-jnp reference.  The compiled TPU path keeps the unrolled loop (one
+    explicit MXU matmul per position, Fig. 5's channel-accumulate)."""
+    if batched:
+        x_sel = jnp.take(xw, pos, axis=1)  # (T_t, C, N_t)
+        acc_ref[...] += jax.lax.dot_general(
+            jnp.transpose(x_sel, (1, 0, 2)), ww_ref[...],
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )  # (C, T_t, M_t)
+        return
     for p, pos in enumerate(pos_idx):
         x_p = xw[:, pos, :]  # (T_t, N_t) static row select
         w_p = ww_ref[p, :, :]  # (N_t, M_t)
@@ -122,6 +165,8 @@ def _com_post_pe(
     sub_slices: tuple[tuple[int, int], ...],
     m2: int,
     n_steps: int,
+    batched: bool = False,
+    pos=None,
 ):
     """Shared com-PE + post-PE stage of both engine variants (scratch-layout
     output: per-tile sub-pixel rows, sub-filter-major)."""
@@ -131,7 +176,7 @@ def _com_post_pe(
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    _com_pe(xw, ww_ref, acc_ref, pos_idx=pos_idx)
+    _com_pe(xw, ww_ref, acc_ref, pos_idx=pos_idx, batched=batched, pos=pos)
 
     # --- post-PE: sparse inverse transform, only on the final N step
     @pl.when(k == n_steps - 1)
@@ -256,6 +301,7 @@ def _engine_kernel(
     xw_ref,  # (T_t, n2, N_t) transformed input tiles
     ww_ref,  # (C, N_t, M_t) packed nonzero transformed weights
     inv_ref,  # (C, m2) fp32 inverse-transform rows
+    const_ref,  # (C, 1) fp32 packed positions (batched path only)
     out_ref,  # (T_t, S2*m2, M_t)
     acc_ref,  # scratch (C, T_t, M_t) fp32
     *,
@@ -263,10 +309,13 @@ def _engine_kernel(
     sub_slices: tuple[tuple[int, int], ...],  # per sub-filter (start, end) in packed dim
     m2: int,
     n_steps: int,
+    batched: bool,
 ):
+    _, pos = _decode_consts(const_ref, 0) if batched else (None, None)
     _com_post_pe(
         xw_ref[...], ww_ref, inv_ref, out_ref, acc_ref,
         pos_idx=pos_idx, sub_slices=sub_slices, m2=m2, n_steps=n_steps,
+        batched=batched, pos=pos,
     )
 
 
@@ -307,12 +356,14 @@ def winograd_domain_engine(
             sub_slices=sub_slices,
             m2=m2,
             n_steps=grid[2],
+            batched=interpret,
         ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bt, n2, bn), lambda i, j, k: (i, 0, k)),
             pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, k, j)),
             pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((C, 1), lambda i, j, k: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bt, S2 * m2, bm), lambda i, j, k: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((Tp, S2 * m2, Mp), xw.dtype),
@@ -321,7 +372,7 @@ def winograd_domain_engine(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(xw_p, ww_p, inv_packed)
+    )(xw_p, ww_p, inv_packed, jnp.asarray(_const_operand((), pos_idx)))
     return out[:T, :, :M]
 
 
@@ -364,13 +415,18 @@ def _adder_apply(coef: tuple[tuple[float, ...], ...], vals):
     return out
 
 
-def _cells_to_xw(c0_ref, c1_ref, *, bt_const, m, n, tx, in_dtype):
-    """Fused pre-PE: stitch n x n tiles from m x m cell rows (line buffer)
-    and apply B^T Z B in VMEM.  Returns xw (bty*tx, n*n, N_t) in ``in_dtype``."""
-    bty = c0_ref.shape[1]
-    bn = c0_ref.shape[4]
+def _cells_value_to_xw(cells, *, bt_const, m, n, bty, tx, in_dtype,
+                       batched: bool = False, bt=None):
+    """Fused pre-PE on a staged VMEM value: stitch n x n tiles from m x m
+    cell rows (line buffer) and apply B^T Z B.  ``cells`` is
+    (bty + halo, Gxp, m2c, N_t); returns xw (bty*tx, n*n, N_t) in
+    ``in_dtype``.  Shared by the deconv engines (whole cell block) and the
+    conv engines (per phase sub-block of the S^2-major cell axis).
+    ``batched`` (interpret fast path) replaces the unrolled adder network
+    with one einsum against the B^T constant — same contraction, two ops
+    instead of ~n^2 unrolled adds (op count is what interpret time buys)."""
+    bn = cells.shape[3]
     q = -(-n // m)
-    cells = jnp.concatenate([c0_ref[0], c1_ref[0]], axis=0)  # (bty+h, Gxp, m2c, N_t)
 
     # --- pre-PE step 1: stitch n x n tiles out of m x m cells (line buffer).
     # Tile (j, t) row a = m*dy + p comes from cell (j+dy, t+dx) row p.
@@ -384,15 +440,52 @@ def _cells_to_xw(c0_ref, c1_ref, *, bt_const, m, n, tx, in_dtype):
     z = jnp.concatenate(rows, axis=2)[:, :, :n, :n, :]  # (bty, tx, n, n, N_t)
     z = z.reshape(bty * tx, n, n, bn).astype(jnp.float32)
 
-    # --- pre-PE step 2: B^T Z B via the adder network.
-    zr = _adder_apply(bt_const, [z[:, a, :, :] for a in range(n)])  # (T_t, n, N_t) each
-    xw_uv = []
-    for u in range(n):
-        xw_uv.extend(_adder_apply(bt_const, [zr[u][:, b, :] for b in range(n)]))
-    xw = jnp.stack(xw_uv, axis=1)  # (T_t, n*n, N_t)
+    # --- pre-PE step 2: B^T Z B.
+    if batched:  # bt arrives via the const operand (kernels cannot capture)
+        xw = jnp.einsum("ua,tabc,vb->tuvc", bt, z, bt)
+        xw = xw.reshape(bty * tx, n * n, bn)
+    else:  # adder network: unrolled VPU adds (F(2,3) entries are 0/±1)
+        zr = _adder_apply(bt_const, [z[:, a, :, :] for a in range(n)])  # (T_t, n, N_t) each
+        xw_uv = []
+        for u in range(n):
+            xw_uv.extend(_adder_apply(bt_const, [zr[u][:, b, :] for b in range(n)]))
+        xw = jnp.stack(xw_uv, axis=1)  # (T_t, n*n, N_t)
     # Match the unfused path, which stores transformed tiles in the input
     # dtype before the channel contraction.
     return xw.astype(in_dtype)
+
+
+def _cells_to_xw(c0_ref, c1_ref, *, bt_const, m, n, tx, in_dtype,
+                 batched: bool = False, bt=None):
+    """Stage the main + halo cell-row blocks and run the fused pre-PE."""
+    bty = c0_ref.shape[1]
+    cells = jnp.concatenate([c0_ref[0], c1_ref[0]], axis=0)  # (bty+h, Gxp, m2c, N_t)
+    return _cells_value_to_xw(
+        cells, bt_const=bt_const, m=m, n=n, bty=bty, tx=tx, in_dtype=in_dtype,
+        batched=batched, bt=bt,
+    )
+
+
+def _conv_cells_to_xw(c0_ref, c1_ref, *, bt_const, m, n, tx, s2, in_dtype,
+                      batched: bool = False, bt=None):
+    """Conv pre-PE: the cell axis is S^2-major (one m x m cell block per
+    phase sub-filter — see ops.conv_cells_from_image); stitch + B-transform
+    each phase's block through the same line buffer and concatenate, giving
+    xw (bty*tx, s2*n2, N_t) — packed positions index into the s2*n2 space."""
+    bty = c0_ref.shape[1]
+    m2c = m * m
+    cells = jnp.concatenate([c0_ref[0], c1_ref[0]], axis=0)  # (bty+h, Gxp, s2*m2c, N_t)
+    return jnp.concatenate(
+        [
+            _cells_value_to_xw(
+                cells[:, :, s * m2c : (s + 1) * m2c, :],
+                bt_const=bt_const, m=m, n=n, bty=bty, tx=tx, in_dtype=in_dtype,
+                batched=batched, bt=bt,
+            )
+            for s in range(s2)
+        ],
+        axis=1,
+    )
 
 
 def _fused_pre_kernel(
@@ -400,6 +493,7 @@ def _fused_pre_kernel(
     c1_ref,  # (1, h, Gxp, m2c, N_t) halo cell rows [(iy+1)*bty, (iy+1)*bty+h)
     ww_ref,  # (C, N_t, M_t)
     inv_ref,  # (C, m2)
+    const_ref,  # (n+C, n) fp32 B^T + packed positions (batched path only)
     out_ref,  # (bty*tx, S2*m2, M_t)
     acc_ref,  # scratch (C, bty*tx, M_t) fp32
     *,
@@ -412,11 +506,15 @@ def _fused_pre_kernel(
     m2: int,
     n_steps: int,
     in_dtype,
+    batched: bool,
 ):
-    xw = _cells_to_xw(c0_ref, c1_ref, bt_const=bt_const, m=m, n=n, tx=tx, in_dtype=in_dtype)
+    bt_arr, pos = _decode_consts(const_ref, n) if batched else (None, None)
+    xw = _cells_to_xw(c0_ref, c1_ref, bt_const=bt_const, m=m, n=n, tx=tx,
+                      in_dtype=in_dtype, batched=batched, bt=bt_arr)
     _com_post_pe(
         xw, ww_ref, inv_ref, out_ref, acc_ref,
         pos_idx=pos_idx, sub_slices=sub_slices, m2=m2, n_steps=n_steps,
+        batched=batched, pos=pos,
     )
 
 
@@ -425,6 +523,7 @@ def _fused_pre_epi_kernel(
     c1_ref,  # (1, h, Gxp, m2c, N_t) halo cell rows
     ww_ref,  # (C, N_t, M_t)
     inv_ref,  # (C, m2)
+    const_ref,  # (n+C, n) fp32 B^T + packed positions (batched path only)
     scale_ref,  # (1, M_t) fp32 per-channel scale
     bias_ref,  # (1, M_t) fp32 per-channel bias
     mask_ref,  # cells mode: (bty*S, tx*S, m*m, 1) fp32 crop-window mask
@@ -444,6 +543,7 @@ def _fused_pre_epi_kernel(
     stride: int,
     has_scale: bool,
     has_bias: bool,
+    batched: bool,
 ):
     """Fused pre-PE + com-PE + epilogue-fused post-PE: the finalize applies
     scale/bias/activation and the stride-S depth-to-space in VMEM, writing
@@ -454,8 +554,10 @@ def _fused_pre_epi_kernel(
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    xw = _cells_to_xw(c0_ref, c1_ref, bt_const=bt_const, m=m, n=n, tx=tx, in_dtype=in_dtype)
-    _com_pe(xw, ww_ref, acc_ref, pos_idx=pos_idx)
+    bt_arr, pos = _decode_consts(const_ref, n) if batched else (None, None)
+    xw = _cells_to_xw(c0_ref, c1_ref, bt_const=bt_const, m=m, n=n, tx=tx,
+                      in_dtype=in_dtype, batched=batched, bt=bt_arr)
+    _com_pe(xw, ww_ref, acc_ref, pos_idx=pos_idx, batched=batched, pos=pos)
 
     @pl.when(k == n_steps - 1)
     def _finalize():
@@ -581,7 +683,9 @@ def winograd_fused_pre_engine(
         ),
         pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, k, j)),
         pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+        pl.BlockSpec((n + C, n), lambda i, j, k: (0, 0)),
     ]
+    const_op = jnp.asarray(_const_operand(bt_mat, pos_idx))
     common = dict(
         grid=grid,
         scratch_shapes=[pltpu.VMEM((C, bty * tx, bm), jnp.float32)],
@@ -604,6 +708,7 @@ def winograd_fused_pre_engine(
                 m2=m2,
                 n_steps=grid[2],
                 in_dtype=cells.dtype,
+                batched=interpret,
             ),
             in_specs=in_specs,
             out_specs=pl.BlockSpec((bty * tx, S2 * m2, bm), lambda i, j, k: (i, 0, j)),
@@ -611,7 +716,7 @@ def winograd_fused_pre_engine(
                 (B * n_ty_blocks * bty * tx, S2 * m2, Mp), cells.dtype
             ),
             **common,
-        )(cells_p, cells_p, ww_p, inv_packed)
+        )(cells_p, cells_p, ww_p, inv_packed, const_op)
         out = out.reshape(B, n_ty_blocks * bty, tx, S2 * m2, Mp)
         return out[:, :ty, :, :, :M]
 
@@ -684,12 +789,13 @@ def winograd_fused_pre_engine(
             stride=stride,
             has_scale=scale is not None,
             has_bias=bias is not None,
+            batched=interpret,
         ),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         **common,
-    )(cells_p, cells_p, ww_p, inv_packed, scale_p, bias_p, mask)
+    )(cells_p, cells_p, ww_p, inv_packed, const_op, scale_p, bias_p, mask)
     if out_mode == "nhwc":
         return out[:, : ty * ms, :, :M]
     # cells mode: return the raw padded array — the in-kernel crop-window
@@ -735,10 +841,20 @@ def _gw_from_cotangent(g, inv_ref, sub_slices, m2):
     return jnp.concatenate(parts, axis=0)
 
 
-def _scatter_packed_to_winograd(gw, ww_ref, pos_idx, n2):
+def _scatter_packed_to_winograd(gw, ww_ref, pos_idx, n2, batched: bool = False,
+                                pos=None):
     """dxw (T_t, n2, N_t) fp32: per packed position one MXU matmul
     gw[p] @ ww[p]^T, accumulated into its Winograd position (positions that
-    several sub-filters keep share a row; unkept positions stay zero)."""
+    several sub-filters keep share a row; unkept positions stay zero).
+    ``batched`` (interpret fast path): one batched dot + one scatter-add."""
+    if batched:
+        contrib = jax.lax.dot_general(
+            gw, ww_ref[...].astype(jnp.float32),
+            (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )  # (C, T_t, N_t)
+        out = jnp.zeros((gw.shape[1], n2, ww_ref.shape[1]), jnp.float32)
+        return out.at[:, pos, :].add(jnp.transpose(contrib, (1, 0, 2)))
     parts: list = [None] * n2
     for p, pos in enumerate(pos_idx):
         w_p = ww_ref[p, :, :].astype(jnp.float32)  # (N_t, M_t)
@@ -751,10 +867,33 @@ def _scatter_packed_to_winograd(gw, ww_ref, pos_idx, n2):
     return jnp.stack([v if v is not None else zero for v in parts], axis=1)
 
 
+def _bwd_w_accumulate(xw, gw, acc_ref, *, pos_idx, batched: bool = False,
+                      pos=None):
+    """dww accumulate: per packed position xw[:, pos]^T @ gw[p] (reduce the
+    tile axis).  ``batched`` collapses the loop into one gather + one
+    batched dot (interpret fast path, identical per-position math)."""
+    if batched:
+        xs = jnp.transpose(
+            jnp.take(xw, pos, axis=1), (1, 0, 2)
+        ).astype(jnp.float32)  # (C, T_t, N_t)
+        acc_ref[...] += jax.lax.dot_general(
+            xs, gw, (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )  # (C, N_t, M_t)
+        return
+    for p, pos in enumerate(pos_idx):
+        x_p = xw[:, pos, :].astype(jnp.float32)  # (T_t, N_t)
+        acc_ref[p, :, :] += jax.lax.dot_general(
+            x_p, gw[p], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (N_t, M_t)
+
+
 def _engine_bwd_x_kernel(
     g_ref,  # (T_t, S2*m2, M_t) output cotangent
     ww_ref,  # (C, N_t, M_t) packed transformed weights
     inv_ref,  # (C, m2) fp32
+    const_ref,  # (C, 1) fp32 packed positions (batched path only)
     out_ref,  # (T_t, n2, N_t) input-tile cotangent
     acc_ref,  # scratch (T_t, n2, N_t) fp32
     *,
@@ -763,6 +902,7 @@ def _engine_bwd_x_kernel(
     m2: int,
     n2: int,
     n_steps: int,
+    batched: bool,
 ):
     k = pl.program_id(2)
 
@@ -772,7 +912,8 @@ def _engine_bwd_x_kernel(
 
     g = g_ref[...].astype(jnp.float32)
     gw = _gw_from_cotangent(g, inv_ref, sub_slices, m2)  # (C, T_t, M_t)
-    acc_ref[...] += _scatter_packed_to_winograd(gw, ww_ref, pos_idx, n2)
+    _, pos = _decode_consts(const_ref, 0) if batched else (None, None)
+    acc_ref[...] += _scatter_packed_to_winograd(gw, ww_ref, pos_idx, n2, batched, pos)
 
     @pl.when(k == n_steps - 1)
     def _finalize():
@@ -817,12 +958,14 @@ def winograd_domain_engine_bwd_x(
             m2=m2,
             n2=n2,
             n_steps=grid[2],
+            batched=interpret,
         ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bt, s2m2, bm), lambda i, j, k: (i, 0, k)),
             pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, j, k)),
             pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((C, 1), lambda i, j, k: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bt, n2, bn), lambda i, j, k: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((Tp, n2, Np), g.dtype),
@@ -831,7 +974,7 @@ def winograd_domain_engine_bwd_x(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(g_p, ww_p, inv_packed)
+    )(g_p, ww_p, inv_packed, jnp.asarray(_const_operand((), pos_idx)))
     return out[:T, :, :N]
 
 
@@ -839,6 +982,7 @@ def _engine_bwd_w_kernel(
     xw_ref,  # (T_t, n2, N_t) transformed input tiles
     g_ref,  # (T_t, S2*m2, M_t) output cotangent
     inv_ref,  # (C, m2) fp32
+    const_ref,  # (C, 1) fp32 packed positions (batched path only)
     out_ref,  # (C, N_t, M_t) packed-weight cotangent
     acc_ref,  # scratch (C, N_t, M_t) fp32
     *,
@@ -846,6 +990,7 @@ def _engine_bwd_w_kernel(
     sub_slices: tuple[tuple[int, int], ...],
     m2: int,
     n_steps: int,
+    batched: bool,
 ):
     k = pl.program_id(2)
 
@@ -855,13 +1000,9 @@ def _engine_bwd_w_kernel(
 
     g = g_ref[...].astype(jnp.float32)
     gw = _gw_from_cotangent(g, inv_ref, sub_slices, m2)  # (C, T_t, M_t)
-    xw = xw_ref[...]
-    for p, pos in enumerate(pos_idx):
-        x_p = xw[:, pos, :].astype(jnp.float32)  # (T_t, N_t)
-        acc_ref[p, :, :] += jax.lax.dot_general(
-            x_p, gw[p], (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )  # (N_t, M_t)
+    _, pos = _decode_consts(const_ref, 0) if batched else (None, None)
+    _bwd_w_accumulate(xw_ref[...], gw, acc_ref, pos_idx=pos_idx,
+                      batched=batched, pos=pos)
 
     @pl.when(k == n_steps - 1)
     def _finalize():
@@ -906,12 +1047,14 @@ def winograd_domain_engine_bwd_w(
             sub_slices=sub_slices,
             m2=m2,
             n_steps=grid[2],
+            batched=interpret,
         ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bt, n2, bn), lambda i, j, k: (k, 0, i)),
             pl.BlockSpec((bt, s2m2, bm), lambda i, j, k: (k, 0, j)),
             pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((C, 1), lambda i, j, k: (0, 0)),
         ],
         out_specs=pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, i, j)),
         out_shape=jax.ShapeDtypeStruct((C, Np, Mp), g.dtype),
@@ -920,7 +1063,7 @@ def winograd_domain_engine_bwd_w(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(xw_p, g_p, inv_packed)
+    )(xw_p, g_p, inv_packed, jnp.asarray(_const_operand((), pos_idx)))
     return out[:, :N, :M]
 
 
@@ -935,11 +1078,59 @@ def winograd_domain_engine_bwd_w(
 # ---------------------------------------------------------------------------
 
 
+def _dxw_block_to_cells(dxw, *, b_const, m, n, tx, bty, h, gxc, bn,
+                        batched: bool = False, bt=None):
+    """dXw block (h+bty, tx, n, n, N_t) fp32 -> cell-layout input cotangent
+    (bty, gxc, m*m, N_t) fp32.
+
+    dZ = B dXw B^T via the adder network with transposed coefficients, then
+    the transpose of the tile gather: cell (j, c) intra position (p, qq)
+    sums dz[m*dy+p][m*dx+qq] of tile (j - dy, c - dx); with tile rows
+    staged at local offset +h, tile row j - dy sits at slice j + h - dy.
+    Shared by the deconv bwd_x kernel (whole block) and the conv bwd_x
+    kernel (once per phase sub-filter)."""
+    q = -(-n // m)
+    if batched:  # interpret fast path: one einsum against the B operand
+        bc = jnp.transpose(bt)  # b_const = B^T transposed
+        dzt = jnp.einsum("au,htuvc,bv->abhtc", bc, dxw, bc)
+        dz = [[dzt[a, b] for b in range(n)] for a in range(n)]
+    else:
+        rows = _adder_apply(b_const, [dxw[:, :, u] for u in range(n)])
+        dz = [
+            _adder_apply(b_const, [rows[a][:, :, v] for v in range(n)])
+            for a in range(n)
+        ]  # dz[a][b]: (h+bty, tx, N_t)
+    cellv = []
+    for p in range(m):
+        for qq in range(m):
+            acc = None
+            for dy in range(q):
+                if m * dy + p >= n:
+                    continue
+                for dx in range(q):
+                    if m * dx + qq >= n:
+                        continue
+                    piece = dz[m * dy + p][m * dx + qq][h - dy : h - dy + bty]
+                    pads = []
+                    if dx:
+                        pads.append(jnp.zeros((bty, dx, bn), jnp.float32))
+                    pads.append(piece)
+                    if gxc - tx - dx:
+                        pads.append(jnp.zeros((bty, gxc - tx - dx, bn), jnp.float32))
+                    shifted = pads[0] if len(pads) == 1 else jnp.concatenate(pads, axis=1)
+                    acc = shifted if acc is None else acc + shifted
+            cellv.append(
+                acc if acc is not None else jnp.zeros((bty, gxc, bn), jnp.float32)
+            )
+    return jnp.stack(cellv, axis=2)  # (bty, gxc, m*m, N_t)
+
+
 def _fused_pre_bwd_x_kernel(
     g0_ref,  # (1, bty, tx, S2*m2, M_t) tile-cotangent rows [iy*bty, +bty)
     g1_ref,  # (1, h, tx, S2*m2, M_t) halo rows [iy*bty - h, iy*bty)
     ww_ref,  # (C, N_t, M_t)
     inv_ref,  # (C, m2) fp32
+    const_ref,  # (n+C, n) fp32 B^T + packed positions (batched path only)
     out_ref,  # (1, bty, gxc, m*m, N_t) cell-layout input cotangent
     acc_ref,  # scratch ((h+bty)*tx, n2, N_t) fp32
     *,
@@ -951,6 +1142,7 @@ def _fused_pre_bwd_x_kernel(
     tx: int,
     m2: int,
     n_steps: int,
+    batched: bool,
 ):
     k = pl.program_id(2)
     bty = out_ref.shape[1]
@@ -964,46 +1156,19 @@ def _fused_pre_bwd_x_kernel(
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    bt_arr, pos = _decode_consts(const_ref, n) if batched else (None, None)
     g_all = jnp.concatenate([g1_ref[0], g0_ref[0]], axis=0)  # (h+bty, tx, S2m2, M_t)
     gt = g_all.reshape((h + bty) * tx, g_all.shape[2], g_all.shape[3]).astype(jnp.float32)
     gw = _gw_from_cotangent(gt, inv_ref, sub_slices, m2)  # (C, T_t, M_t)
-    acc_ref[...] += _scatter_packed_to_winograd(gw, ww_ref, pos_idx, n2)
+    acc_ref[...] += _scatter_packed_to_winograd(gw, ww_ref, pos_idx, n2, batched, pos)
 
     @pl.when(k == n_steps - 1)
     def _finalize():
         dxw = acc_ref[...].reshape(h + bty, tx, n, n, bn)
-        # dZ = B dXw B^T via the adder network with transposed coefficients.
-        rows = _adder_apply(b_const, [dxw[:, :, u] for u in range(n)])
-        dz = [
-            _adder_apply(b_const, [rows[a][:, :, v] for v in range(n)])
-            for a in range(n)
-        ]  # dz[a][b]: (h+bty, tx, N_t)
-        # Transpose of the tile gather: cell (j, c) intra position (p, qq)
-        # sums dz[m*dy+p][m*dx+qq] of tile (j - dy, c - dx); with tile rows
-        # staged at local offset +h, tile row j - dy sits at slice j + h - dy.
-        cellv = []
-        for p in range(m):
-            for qq in range(m):
-                acc = None
-                for dy in range(q):
-                    if m * dy + p >= n:
-                        continue
-                    for dx in range(q):
-                        if m * dx + qq >= n:
-                            continue
-                        piece = dz[m * dy + p][m * dx + qq][h - dy : h - dy + bty]
-                        pads = []
-                        if dx:
-                            pads.append(jnp.zeros((bty, dx, bn), jnp.float32))
-                        pads.append(piece)
-                        if gxc - tx - dx:
-                            pads.append(jnp.zeros((bty, gxc - tx - dx, bn), jnp.float32))
-                        shifted = pads[0] if len(pads) == 1 else jnp.concatenate(pads, axis=1)
-                        acc = shifted if acc is None else acc + shifted
-                cellv.append(
-                    acc if acc is not None else jnp.zeros((bty, gxc, bn), jnp.float32)
-                )
-        out = jnp.stack(cellv, axis=2)  # (bty, gxc, m*m, N_t)
+        out = _dxw_block_to_cells(
+            dxw, b_const=b_const, m=m, n=n, tx=tx, bty=bty, h=h, gxc=gxc, bn=bn,
+            batched=batched, bt=bt_arr,
+        )
         out_ref[...] = out[None].astype(out_ref.dtype)
 
 
@@ -1075,6 +1240,7 @@ def winograd_fused_pre_engine_bwd_x(
             tx=tx,
             m2=m2,
             n_steps=grid[2],
+            batched=interpret,
         ),
         grid=grid,
         in_specs=[
@@ -1088,6 +1254,7 @@ def winograd_fused_pre_engine_bwd_x(
             ),
             pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, j, k)),
             pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((n + C, n), lambda i, j, k: (0, 0)),
         ],
         out_specs=pl.BlockSpec(
             (1, bty, gx, m2c, bn), lambda i, j, k: (i // nob, i % nob, 0, 0, j)
@@ -1098,7 +1265,7 @@ def winograd_fused_pre_engine_bwd_x(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(g_p, g_p, ww_p, inv_packed)
+    )(g_p, g_p, ww_p, inv_packed, jnp.asarray(_const_operand(bt_mat, pos_idx)))
     out = out[:, :, :, :, :N]
     if out.shape[1] < gy:  # cell rows past the tile extent are structurally zero
         out = jnp.pad(out, ((0, 0), (0, gy - out.shape[1]), (0, 0), (0, 0), (0, 0)))
@@ -1110,6 +1277,7 @@ def _fused_pre_bwd_w_kernel(
     c1_ref,  # (1, h, Gxp, m2c, N_t) halo cell rows
     g_ref,  # (1, bty, tx, S2*m2, M_t) output cotangent for this tile-row block
     inv_ref,  # (C, m2) fp32
+    const_ref,  # (n+C, n) fp32 B^T + packed positions (batched path only)
     out_ref,  # (C, N_t, M_t) packed-weight cotangent
     acc_ref,  # scratch (C, N_t, M_t) fp32
     *,
@@ -1122,6 +1290,7 @@ def _fused_pre_bwd_w_kernel(
     m2: int,
     n_steps: int,
     in_dtype,
+    batched: bool,
 ):
     k = pl.program_id(2)
 
@@ -1132,15 +1301,12 @@ def _fused_pre_bwd_w_kernel(
     # Recompute the transformed tiles from cells in VMEM (same line-buffer +
     # adder-network stage as the forward kernel), then contract with the
     # inverse-weighted cotangent over this block's tiles.
-    xw = _cells_to_xw(c0_ref, c1_ref, bt_const=bt_const, m=m, n=n, tx=tx, in_dtype=in_dtype)
+    bt_arr, pos = _decode_consts(const_ref, n) if batched else (None, None)
+    xw = _cells_to_xw(c0_ref, c1_ref, bt_const=bt_const, m=m, n=n, tx=tx,
+                      in_dtype=in_dtype, batched=batched, bt=bt_arr)
     g = g_ref[0].reshape(xw.shape[0], g_ref.shape[3], g_ref.shape[4]).astype(jnp.float32)
     gw = _gw_from_cotangent(g, inv_ref, sub_slices, m2)  # (C, T_t, M_t)
-    for p, pos in enumerate(pos_idx):
-        x_p = xw[:, pos, :].astype(jnp.float32)  # (T_t, N_t)
-        acc_ref[p, :, :] += jax.lax.dot_general(
-            x_p, gw[p], (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
+    _bwd_w_accumulate(xw, gw, acc_ref, pos_idx=pos_idx, batched=batched, pos=pos)
 
     @pl.when(k == n_steps - 1)
     def _finalize():
@@ -1207,6 +1373,7 @@ def winograd_fused_pre_engine_bwd_w(
             m2=m2,
             n_steps=grid[2],
             in_dtype=cells.dtype,
+            batched=interpret,
         ),
         grid=grid,
         in_specs=[
@@ -1223,6 +1390,7 @@ def winograd_fused_pre_engine_bwd_w(
                 lambda i, j, k: (k // ntb, k % ntb, 0, 0, j),
             ),
             pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((n + C, n), lambda i, j, k: (0, 0)),
         ],
         out_specs=pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, i, j)),
         out_shape=jax.ShapeDtypeStruct((C, Np, Mp), g.dtype),
@@ -1231,5 +1399,526 @@ def winograd_fused_pre_engine_bwd_w(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(cells_p, cells_p, g_p, inv_packed)
+    )(cells_p, cells_p, g_p, inv_packed,
+      jnp.asarray(_const_operand(bt_mat, pos_idx)))
+    return out[:, :N, :M]
+
+
+# ---------------------------------------------------------------------------
+# Winograd Conv engines (the discriminator's hot path).  A stride-S conv
+# phase-decomposes into S^2 UNIT-STRIDE sub-correlations over de-interleaved
+# input phases (core/tdc.py::conv_plan — the inverse of the TDC
+# deconv-to-conv conversion: sub-inputs de-interleave and the sub-outputs
+# ACCUMULATE instead of interleaving).  That accumulation is exactly the
+# engine's packed-position channel-accumulate, so the conv engines reuse the
+# whole deconv machinery:
+#
+#   * input arrives in an S^2-major cell layout (one m x m cell block per
+#     phase sub-filter, ops.conv_cells_from_image) and rides the SAME
+#     line-buffer halo BlockSpecs — the pre-PE stitches + B-transforms each
+#     phase's block in VMEM (_conv_cells_to_xw);
+#   * packed weights are (C, N, M) with pos_idx indexing the s2*n^2 position
+#     space; structural zeros of the ragged phase sub-kernels (fixed by
+#     (K, S, P) alone) never reach VMEM — C(K4S2) = 36 vs 64 dense,
+#     C(K3S1) = 16;
+#   * the post-PE contracts ALL packed positions into ONE m x m output tile
+#     (sub_slices = ((0, C),)): the phase sum happens inside the inverse
+#     transform, and the finalize is the epilogue-fused stride-1 case of the
+#     deconv finalize (bias/BN affine + activation in VMEM; NHWC pixels or
+#     the output image's m x m cell layout out, crop window zeroed).
+#
+# Both backward engines mirror the deconv ones on the same grids: bwd_x
+# scatters gw into the s2*n^2 position space and runs the reverse line
+# buffer once per phase (_dxw_block_to_cells); bwd_w recomputes the phase
+# xw from cells in VMEM.
+# ---------------------------------------------------------------------------
+
+
+def _conv_fused_kernel(
+    c0_ref,  # (1, bty, Gxp, s2*m2c, N_t) phase-major cell rows
+    c1_ref,  # (1, h, Gxp, s2*m2c, N_t) halo cell rows
+    ww_ref,  # (C, N_t, M_t) packed transformed phase sub-filters
+    inv_ref,  # (C, m2) fp32
+    const_ref,  # (n+C, n) fp32 B^T + packed positions (batched path only)
+    scale_ref,  # (1, M_t) fp32
+    bias_ref,  # (1, M_t) fp32
+    mask_ref,  # cells mode: (bty, tx, m*m, 1) crop-window mask
+    out_ref,  # nhwc: (1, bty*m, tx*m, M_t) | cells: (1, bty, tx, m*m, M_t)
+    acc_ref,  # scratch (C, bty*tx, M_t) fp32
+    *,
+    bt_const: tuple[tuple[float, ...], ...],
+    pos_idx: tuple[int, ...],
+    m: int,
+    n: int,
+    tx: int,
+    s2: int,
+    n_steps: int,
+    in_dtype,
+    out_mode: str,  # "nhwc" | "cells"
+    activation: str,
+    has_scale: bool,
+    has_bias: bool,
+    batched: bool,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bt_arr, pos = _decode_consts(const_ref, n) if batched else (None, None)
+    xw = _conv_cells_to_xw(
+        c0_ref, c1_ref, bt_const=bt_const, m=m, n=n, tx=tx, s2=s2,
+        in_dtype=in_dtype, batched=batched, bt=bt_arr,
+    )
+    _com_pe(xw, ww_ref, acc_ref, pos_idx=pos_idx, batched=batched, pos=pos)
+
+    @pl.when(k == n_steps - 1)
+    def _finalize():
+        C = acc_ref.shape[0]
+        ys = _post_pe_sub_outputs(acc_ref, inv_ref, ((0, C),))
+        scale = scale_ref[0].astype(jnp.float32) if has_scale else None
+        bias = bias_ref[0].astype(jnp.float32) if has_bias else None
+        if out_mode == "nhwc":
+            _finalize_nhwc(
+                ys, out_ref, m=m, stride=1, tx=tx,
+                scale=scale, bias=bias, activation=activation,
+            )
+        elif out_mode == "cells":
+            _finalize_cells(
+                ys, out_ref, mask_ref[...], m=m, stride=1, tx=tx,
+                scale=scale, bias=bias, activation=activation,
+            )
+        else:
+            raise ValueError(out_mode)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bt_mat", "pos_idx", "m", "n", "ty", "tx", "s2",
+        "block_ty", "block_n", "block_m", "interpret",
+        "out_mode", "activation", "out_h", "out_w",
+    ),
+)
+def winograd_conv_fused_engine(
+    cells: jax.Array,  # (B, Gy, Gx, s2*m*m, N) phase-major cell layout
+    ww_packed: jax.Array,  # (C, N, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    bt_mat: tuple[tuple[float, ...], ...],
+    *,
+    pos_idx: tuple[int, ...],  # packed position -> s2*n2 position (len C)
+    m: int,
+    n: int,
+    ty: int,
+    tx: int,
+    s2: int,
+    block_ty: int = 8,
+    block_n: int = 128,
+    block_m: int = 128,
+    interpret: bool = False,
+    out_mode: str = "nhwc",  # "nhwc" | "cells"
+    activation: str = "none",
+    scale: jax.Array | None = None,  # (M,) per-channel epilogue scale
+    bias: jax.Array | None = None,  # (M,) per-channel epilogue bias
+    out_h: int = 0,  # H_O crop extent
+    out_w: int = 0,
+) -> jax.Array:
+    """Fused Winograd Conv engine: phase-decomposed stride-S conv as one
+    Pallas pipeline (pre-PE line buffer per phase + com-PE packed matmuls +
+    post-PE inverse transform summing the phases + epilogue finalize).
+
+    ``out_mode="nhwc"`` returns (B, ty_blocks_padded*m, tx*m, Mp); crop rows
+    and cols to [0, out_h) x [0, out_w) and channels to M for the image.
+    ``out_mode="cells"`` returns the OUTPUT image's padded m x m cell layout
+    (B, ty_pad, tx, m*m, Mp) with pixels outside the crop window zeroed —
+    the stride-1 analogue of the deconv engine's emit_cells, consumed by
+    ops.conv_cells_to_next for conv-to-conv chaining.
+    """
+    B, Gy, Gx, s2m2c, N = cells.shape
+    C, _, M = ww_packed.shape
+    m2c = m * m
+    q = -(-n // m)
+
+    bty = min(block_ty, ty)
+    n_ty_blocks = -(-ty // bty)
+    bn = min(block_n, _rup(N, 128))
+    bm = min(block_m, _rup(M, 128))
+    Np, Mp = _rup(N, bn), _rup(M, bm)
+    h = q - 1 if q > 1 and bty % (q - 1) == 0 else bty
+    Gyp = (n_ty_blocks + 1) * bty
+    Gxp = max(Gx, tx + q - 1)
+    if Gy > Gyp:
+        cells = cells[:, :Gyp]
+        Gy = Gyp
+    cells_p = jnp.pad(
+        cells, ((0, 0), (0, Gyp - Gy), (0, Gxp - Gx), (0, 0), (0, Np - N))
+    )
+    ww_p = jnp.pad(ww_packed, ((0, 0), (0, Np - ww_packed.shape[1]), (0, Mp - M)))
+    grid = (B * n_ty_blocks, Mp // bm, Np // bn)
+
+    if out_mode not in ("nhwc", "cells"):
+        raise ValueError(out_mode)
+    if out_h <= 0 or out_w <= 0:
+        raise ValueError("winograd_conv_fused_engine needs out_h/out_w")
+    ones = jnp.ones((M,), jnp.float32) if scale is None else scale
+    zeros = jnp.zeros((M,), jnp.float32) if bias is None else bias
+    scale_p = jnp.pad(ones.reshape(1, M).astype(jnp.float32), ((0, 0), (0, Mp - M)))
+    bias_p = jnp.pad(zeros.reshape(1, M).astype(jnp.float32), ((0, 0), (0, Mp - M)))
+    if out_mode == "cells":
+        rows = n_ty_blocks * bty
+        r_io = jnp.arange(rows, dtype=jnp.int32)[:, None, None, None]
+        c_io = jnp.arange(tx, dtype=jnp.int32)[None, :, None, None]
+        a_io = jnp.arange(m2c, dtype=jnp.int32)[None, None, :, None]
+        mask = (
+            (m * r_io + a_io // m < out_h) & (m * c_io + a_io % m < out_w)
+        ).astype(jnp.float32)
+        mask_spec = pl.BlockSpec(
+            (bty, tx, m2c, 1), lambda i, j, k: (i % n_ty_blocks, 0, 0, 0)
+        )
+    else:
+        mask = jnp.ones((1, 1, 1, 1), jnp.float32)
+        mask_spec = pl.BlockSpec((1, 1, 1, 1), lambda i, j, k: (0, 0, 0, 0))
+
+    in_specs = [
+        pl.BlockSpec(
+            (1, bty, Gxp, s2m2c, bn),
+            lambda i, j, k: (i // n_ty_blocks, i % n_ty_blocks, 0, 0, k),
+        ),
+        pl.BlockSpec(
+            (1, h, Gxp, s2m2c, bn),
+            lambda i, j, k: (
+                i // n_ty_blocks,
+                (i % n_ty_blocks + 1) * (bty // h),
+                0, 0, k,
+            ),
+        ),
+        pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, k, j)),
+        pl.BlockSpec((C, inv_packed.shape[1]), lambda i, j, k: (0, 0)),
+        pl.BlockSpec((n + C, n), lambda i, j, k: (0, 0)),
+        pl.BlockSpec((1, bm), lambda i, j, k: (0, j)),
+        pl.BlockSpec((1, bm), lambda i, j, k: (0, j)),
+        mask_spec,
+    ]
+    if out_mode == "nhwc":
+        out_specs = pl.BlockSpec(
+            (1, bty * m, tx * m, bm),
+            lambda i, j, k: (i // n_ty_blocks, i % n_ty_blocks, 0, j),
+        )
+        out_shape = jax.ShapeDtypeStruct(
+            (B, n_ty_blocks * bty * m, tx * m, Mp), cells.dtype
+        )
+    else:
+        out_specs = pl.BlockSpec(
+            (1, bty, tx, m2c, bm),
+            lambda i, j, k: (i // n_ty_blocks, i % n_ty_blocks, 0, 0, j),
+        )
+        out_shape = jax.ShapeDtypeStruct(
+            (B, n_ty_blocks * bty, tx, m2c, Mp), cells.dtype
+        )
+    out = pl.pallas_call(
+        functools.partial(
+            _conv_fused_kernel,
+            bt_const=bt_mat,
+            pos_idx=pos_idx,
+            m=m,
+            n=n,
+            tx=tx,
+            s2=s2,
+            n_steps=grid[2],
+            in_dtype=cells.dtype,
+            out_mode=out_mode,
+            activation=activation,
+            has_scale=scale is not None,
+            has_bias=bias is not None,
+            batched=interpret,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((C, bty * tx, bm), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(cells_p, cells_p, ww_p, inv_packed,
+      jnp.asarray(_const_operand(bt_mat, pos_idx)), scale_p, bias_p, mask)
+    if out_mode == "nhwc":
+        return out[:, : ty * m, :, :M]
+    # cells mode: raw padded return, crop-window zeroing already applied
+    # in-kernel (rows past ty and channels past M are zero — the consumer
+    # pads/crops to its own geometry, as in the deconv chain).
+    return out
+
+
+def _conv_fused_bwd_x_kernel(
+    g0_ref,  # (1, bty, tx, m2, M_t) tile-cotangent rows [iy*bty, +bty)
+    g1_ref,  # (1, h, tx, m2, M_t) halo rows [iy*bty - h, iy*bty)
+    ww_ref,  # (C, N_t, M_t)
+    inv_ref,  # (C, m2) fp32
+    const_ref,  # (n+C, n) fp32 B^T + packed positions (batched path only)
+    out_ref,  # (1, bty, gxc, s2*m*m, N_t) phase-major cell-layout cotangent
+    acc_ref,  # scratch ((h+bty)*tx, s2*n2, N_t) fp32
+    *,
+    b_const: tuple[tuple[float, ...], ...],
+    pos_idx: tuple[int, ...],
+    m: int,
+    n: int,
+    tx: int,
+    s2: int,
+    m2: int,
+    n_steps: int,
+    batched: bool,
+):
+    k = pl.program_id(2)
+    bty = out_ref.shape[1]
+    gxc = out_ref.shape[2]
+    h = g1_ref.shape[1]
+    bn = ww_ref.shape[1]
+    n2 = n * n
+    C = len(pos_idx)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bt_arr, pos = _decode_consts(const_ref, n) if batched else (None, None)
+    g_all = jnp.concatenate([g1_ref[0], g0_ref[0]], axis=0)  # (h+bty, tx, m2, M_t)
+    gt = g_all.reshape((h + bty) * tx, g_all.shape[2], g_all.shape[3]).astype(jnp.float32)
+    gw = _gw_from_cotangent(gt, inv_ref, ((0, C),), m2)  # (C, T_t, M_t)
+    acc_ref[...] += _scatter_packed_to_winograd(gw, ww_ref, pos_idx, s2 * n2,
+                                                batched, pos)
+
+    @pl.when(k == n_steps - 1)
+    def _finalize():
+        dxw = acc_ref[...].reshape(h + bty, tx, s2, n, n, bn)
+        outs = [
+            _dxw_block_to_cells(
+                dxw[:, :, s], b_const=b_const, m=m, n=n, tx=tx, bty=bty,
+                h=h, gxc=gxc, bn=bn, batched=batched, bt=bt_arr,
+            )
+            for s in range(s2)
+        ]
+        out_ref[...] = jnp.concatenate(outs, axis=2)[None].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bt_mat", "pos_idx", "m", "n", "ty", "tx", "gy", "gx", "s2",
+        "block_ty", "block_n", "block_m", "interpret",
+    ),
+)
+def winograd_conv_fused_bwd_x(
+    g: jax.Array,  # (B, ty, tx, m2, M) cotangent in the scratch tile layout
+    ww_packed: jax.Array,  # (C, N, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    bt_mat: tuple[tuple[float, ...], ...],
+    *,
+    pos_idx: tuple[int, ...],
+    m: int,
+    n: int,
+    ty: int,
+    tx: int,
+    gy: int,
+    gx: int,
+    s2: int,
+    block_ty: int = 8,
+    block_n: int = 128,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """dL/dcells (B, gy, gx, s2*m*m, N) of ``winograd_conv_fused_engine``:
+    the deconv fused bwd_x grid (reverse line-buffer halo, M accumulated),
+    with the packed scatter targeting the s2*n^2 position space and the
+    adder-transpose + overlap scatter run once per phase sub-filter."""
+    B, _, _, m2, M = g.shape
+    C, N, _ = ww_packed.shape
+    q = -(-n // m)
+    bty = min(block_ty, ty)
+    ntb = -(-ty // bty)
+    nob = ntb + 1
+    h = q - 1 if q > 1 and bty % (q - 1) == 0 else bty
+    if h < q - 1:
+        raise ValueError(f"block_ty={block_ty} smaller than the q-1={q-1} halo")
+    bn = min(block_n, _rup(N, 128))
+    bm = min(block_m, _rup(M, 128))
+    Np, Mp = _rup(N, bn), _rup(M, bm)
+    g_p = jnp.pad(
+        g, ((0, 0), (bty, (nob + 1) * bty - bty - ty), (0, 0), (0, 0), (0, Mp - M))
+    )
+    ww_p = jnp.pad(ww_packed, ((0, 0), (0, Np - N), (0, Mp - M)))
+    grid = (B * nob, Np // bn, Mp // bm)
+    m2c = m * m
+
+    out = pl.pallas_call(
+        functools.partial(
+            _conv_fused_bwd_x_kernel,
+            b_const=tuple(zip(*bt_mat)),
+            pos_idx=pos_idx,
+            m=m,
+            n=n,
+            tx=tx,
+            s2=s2,
+            m2=m2,
+            n_steps=grid[2],
+            batched=interpret,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, bty, tx, m2, bm),
+                lambda i, j, k: (i // nob, i % nob + 1, 0, 0, k),
+            ),
+            pl.BlockSpec(
+                (1, h, tx, m2, bm),
+                lambda i, j, k: (i // nob, (i % nob + 1) * (bty // h) - 1, 0, 0, k),
+            ),
+            pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, j, k)),
+            pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((n + C, n), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bty, gx, s2 * m2c, bn), lambda i, j, k: (i // nob, i % nob, 0, 0, j)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, nob * bty, gx, s2 * m2c, Np), g.dtype),
+        scratch_shapes=[pltpu.VMEM(((h + bty) * tx, s2 * n * n, bn), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(g_p, g_p, ww_p, inv_packed, jnp.asarray(_const_operand(bt_mat, pos_idx)))
+    out = out[:, :, :, :, :N]
+    if out.shape[1] < gy:  # cell rows past the tile extent are structurally zero
+        out = jnp.pad(out, ((0, 0), (0, gy - out.shape[1]), (0, 0), (0, 0), (0, 0)))
+    return out[:, :gy]
+
+
+def _conv_fused_bwd_w_kernel(
+    c0_ref,  # (1, bty, Gxp, s2*m2c, N_t) phase-major cell rows
+    c1_ref,  # (1, h, Gxp, s2*m2c, N_t) halo cell rows
+    g_ref,  # (1, bty, tx, m2, M_t)
+    inv_ref,  # (C, m2) fp32
+    const_ref,  # (n+C, n) fp32 B^T + packed positions (batched path only)
+    out_ref,  # (C, N_t, M_t)
+    acc_ref,  # scratch (C, N_t, M_t) fp32
+    *,
+    bt_const: tuple[tuple[float, ...], ...],
+    pos_idx: tuple[int, ...],
+    m: int,
+    n: int,
+    tx: int,
+    s2: int,
+    m2: int,
+    n_steps: int,
+    in_dtype,
+    batched: bool,
+):
+    k = pl.program_id(2)
+    C = len(pos_idx)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bt_arr, pos = _decode_consts(const_ref, n) if batched else (None, None)
+    xw = _conv_cells_to_xw(
+        c0_ref, c1_ref, bt_const=bt_const, m=m, n=n, tx=tx, s2=s2,
+        in_dtype=in_dtype, batched=batched, bt=bt_arr,
+    )
+    g = g_ref[0].reshape(xw.shape[0], g_ref.shape[3], g_ref.shape[4]).astype(jnp.float32)
+    gw = _gw_from_cotangent(g, inv_ref, ((0, C),), m2)  # (C, T_t, M_t)
+    _bwd_w_accumulate(xw, gw, acc_ref, pos_idx=pos_idx, batched=batched, pos=pos)
+
+    @pl.when(k == n_steps - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bt_mat", "pos_idx", "m", "n", "ty", "tx", "s2",
+        "block_ty", "block_n", "block_m", "interpret",
+    ),
+)
+def winograd_conv_fused_bwd_w(
+    cells: jax.Array,  # (B, Gy, Gx, s2*m*m, N) the forward's cell input
+    g: jax.Array,  # (B, ty, tx, m2, M)
+    inv_packed: jax.Array,  # (C, m2) fp32
+    bt_mat: tuple[tuple[float, ...], ...],
+    *,
+    pos_idx: tuple[int, ...],
+    m: int,
+    n: int,
+    ty: int,
+    tx: int,
+    s2: int,
+    block_ty: int = 8,
+    block_n: int = 128,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """dL/dww_packed (C, N, M) of ``winograd_conv_fused_engine``: reduce
+    over (batch x tile-row blocks), re-deriving each block's per-phase
+    transformed tiles from the cell layout in VMEM as the forward does."""
+    B, Gy, Gx, s2m2c, N = cells.shape
+    _, _, _, m2, M = g.shape
+    C = len(pos_idx)
+    q = -(-n // m)
+    bty = min(block_ty, ty)
+    ntb = -(-ty // bty)
+    bn = min(block_n, _rup(N, 128))
+    bm = min(block_m, _rup(M, 128))
+    Np, Mp = _rup(N, bn), _rup(M, bm)
+    h = q - 1 if q > 1 and bty % (q - 1) == 0 else bty
+    Gyp = (ntb + 1) * bty
+    Gxp = max(Gx, tx + q - 1)
+    cells_p = jnp.pad(
+        cells, ((0, 0), (0, Gyp - Gy), (0, Gxp - Gx), (0, 0), (0, Np - N))
+    )
+    g_p = jnp.pad(g, ((0, 0), (0, ntb * bty - ty), (0, 0), (0, 0), (0, Mp - M)))
+    grid = (Np // bn, Mp // bm, B * ntb)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _conv_fused_bwd_w_kernel,
+            bt_const=bt_mat,
+            pos_idx=pos_idx,
+            m=m,
+            n=n,
+            tx=tx,
+            s2=s2,
+            m2=m2,
+            n_steps=grid[2],
+            in_dtype=cells.dtype,
+            batched=interpret,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, bty, Gxp, s2m2c, bn),
+                lambda i, j, k: (k // ntb, k % ntb, 0, 0, i),
+            ),
+            pl.BlockSpec(
+                (1, h, Gxp, s2m2c, bn),
+                lambda i, j, k: (k // ntb, (k % ntb + 1) * (bty // h), 0, 0, i),
+            ),
+            pl.BlockSpec(
+                (1, bty, tx, m2, bm),
+                lambda i, j, k: (k // ntb, k % ntb, 0, 0, j),
+            ),
+            pl.BlockSpec((C, m2), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((n + C, n), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((C, bn, bm), lambda i, j, k: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((C, Np, Mp), g.dtype),
+        scratch_shapes=[pltpu.VMEM((C, bn, bm), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(cells_p, cells_p, g_p, inv_packed,
+      jnp.asarray(_const_operand(bt_mat, pos_idx)))
     return out[:, :N, :M]

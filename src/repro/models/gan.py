@@ -12,6 +12,14 @@ generator's deconv params are the packed (C, N, M) transformed weights
 directly, and ``jax.grad`` flows straight out of the Pallas backward
 engines into the optimizer — no G-transform, pack, or their transposes
 anywhere in the training step.
+
+The discriminator mirrors all of it through ``conv_impl``: its stride-2
+convs run as the phase-decomposed Winograd Conv engine ('lax' stays the
+XLA baseline), ``*_prepacked`` impls keep packed (C, N, M) conv weights in
+params, and the ``pallas_chained`` impls run the whole trunk conv-to-conv
+in the cell domain — in training mode too, via the two-pass cell-domain
+batchnorm (``_bn_act_cells``), so the FULL adversarial step (G update + D
+update, every gradient) stays on the Pallas engines.
 """
 from __future__ import annotations
 
@@ -24,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import GANConfig
 from repro.core import tdc_deconv2d, zero_padded_deconv2d, lax_deconv2d, winograd_deconv2d
-from repro.core.tdc import DeconvDims
+from repro.core.tdc import ConvDims, DeconvDims, conv_same_dims
 from repro.kernels import ops as kops
 
 from . import layers as L
@@ -94,9 +102,63 @@ def uses_prepacked(impl: str) -> bool:
 
 
 def uses_chained(impl: str) -> bool:
-    """True if ``impl`` runs the eval-mode generator as one cell-to-cell
-    chained engine pipeline (prepacked param layout, fused epilogues)."""
+    """True if ``impl`` runs the generator as one cell-to-cell chained
+    engine pipeline (prepacked param layout, fused epilogues in eval mode,
+    two-pass cell-domain batch stats in training mode)."""
     return impl in _CHAINED_KW
+
+
+# ------------------------------------------------- discriminator conv impls
+# conv_impl -> winograd_conv2d_packed / winograd_conv2d_cells kwargs.  The
+# discriminator mirror of the deconv tables: a stride-2 conv runs as the
+# phase-decomposed Winograd Conv engine (kernels.ops.winograd_conv2d_*),
+# the *_prepacked impls keep the packed (C, N, M) conv weights in params,
+# and the chained impls run the whole trunk conv-to-conv in the cell
+# domain.  "lax" (the default) is XLA's own conv — the pre-engine baseline.
+_CONV_PREPACKED_KW: dict[str, dict] = {
+    "prepacked_ref": dict(backend="ref"),
+    "pallas_prepacked": dict(backend="pallas"),
+    "pallas_prepacked_interpret": dict(
+        backend="pallas", interpret=True, **kops.INTERPRET_BLOCKS_CONV
+    ),
+    "pallas_chained": dict(backend="pallas"),
+    "pallas_chained_interpret": dict(
+        backend="pallas", interpret=True, **kops.INTERPRET_BLOCKS_CONV
+    ),
+    "chained_ref": dict(backend="ref"),
+}
+
+# raw-weight conv impl -> per-call engine kwargs (pack per call)
+_CONV_RAW_KW: dict[str, dict] = {
+    "ref": dict(backend="ref"),
+    "pallas": dict(backend="pallas"),
+    "pallas_interpret": dict(
+        backend="pallas", interpret=True, **kops.INTERPRET_BLOCKS_CONV
+    ),
+}
+
+CONV_PREPACKED_EQUIV: dict[str, str] = {
+    "ref": "prepacked_ref",
+    "pallas": "pallas_prepacked",
+    "pallas_interpret": "pallas_prepacked_interpret",
+}
+
+CONV_CHAINED_EQUIV: dict[str, str] = {
+    "pallas_prepacked": "pallas_chained",
+    "pallas_prepacked_interpret": "pallas_chained_interpret",
+}
+
+
+def uses_prepacked_conv(impl: str) -> bool:
+    """True if ``impl`` stores packed Winograd-domain conv weights in the
+    discriminator params."""
+    return impl in _CONV_PREPACKED_KW
+
+
+def uses_chained_conv(impl: str) -> bool:
+    """True if ``impl`` runs the discriminator trunk as one conv-to-conv
+    chained engine pipeline."""
+    return impl in ("pallas_chained", "pallas_chained_interpret", "chained_ref")
 
 
 # ---------------------------------------------------------- block overrides
@@ -250,6 +312,44 @@ def prepack_generator(params: Params, cfg: GANConfig, mesh=None) -> Params:
     return out
 
 
+def unpack_generator(params: Params, cfg: GANConfig) -> Params:
+    """Checkpoint-export inverse of ``prepack_generator``: packed
+    Winograd-domain generator params -> raw K_D x K_D deconv weights, via
+    least squares through the G-transform + pack
+    (``kernels.ops.unpack_weights``).  A packed-trained model exports to
+    the standard deconv format; raw ``{"w": ...}`` leaves pass through
+    untouched, so prepack -> unpack round-trips."""
+    out = dict(params)
+    for i, d in enumerate(cfg.deconvs):
+        wd = params[f"deconv{i}"]
+        if "ww" in wd:
+            out[f"deconv{i}"] = {"w": kops.unpack_weights(wd["ww"], d.dims)}
+    return out
+
+
+def prepack_discriminator(params: Params, cfg: GANConfig, mesh=None) -> Params:
+    """One-time conversion of raw-weight discriminator params to the packed
+    Winograd-domain conv layout (for use with a prepacked ``conv_impl``).
+    Already-packed leaves pass through; with ``mesh`` the tree is placed per
+    ``parallel.sharding.gan_param_specs`` (the disc half)."""
+    out = dict(params)
+    for i, cd in enumerate(disc_conv_dims(cfg)):
+        wd = params.get(f"conv{i}")
+        if wd is not None and "w" in wd:
+            out[f"conv{i}"] = {
+                "ww": kops.prepack_conv(wd["w"], cd).ww, "b": wd["b"]
+            }
+    if mesh is not None:
+        from repro.parallel import sharding as SH
+
+        impl = CONV_PREPACKED_EQUIV.get(cfg.conv_impl, "prepacked_ref")
+        cfg_p = cfg if uses_prepacked_conv(cfg.conv_impl) else \
+            dataclasses.replace(cfg, conv_impl=impl)
+        _, dsp, _ = SH.gan_param_specs(cfg_p, mesh)
+        out = jax.device_put(out, SH.named(mesh, dsp))
+    return out
+
+
 # ---------------------------------------------------------------- generator
 def generator_init(key: jax.Array, cfg: GANConfig, dtype=jnp.float32) -> Params:
     keys = jax.random.split(key, 2 + len(cfg.encoder) + len(cfg.deconvs))
@@ -286,40 +386,129 @@ def _bn_eval_affine(bn: Params, eps: float = 1e-5):
     return a, b
 
 
-def _chained_deconv_trunk(p: Params, cfg: GANConfig, h: jax.Array) -> jax.Array:
-    """Eval-mode deconv trunk as ONE engine-domain pipeline: every layer runs
-    the epilogue-fused engine (BN folded to scale/bias + activation applied
-    in VMEM) and — where the cell layouts line up (``ops.chain_aligned``) —
-    emits the next layer's cell layout directly, so consecutive layers chain
-    with zero XLA relayout between them.  Misaligned hops (ArtGAN's trailing
-    K4S2 -> K3S1) fall back to NHWC out + a cells re-layout, still with the
-    fused epilogue."""
+def _cells_to_image(c: jax.Array, out_hw: tuple[int, int], padding: int = 0) -> jax.Array:
+    """Emitted cell layout (B, R, Cc, m*m, M) -> the cropped NHWC image
+    (pure relayout; the inverse of the engines' emit_cells layout)."""
+    B, R, Cc, m2, M = c.shape
+    m = int(round(m2 ** 0.5))
+    img = jnp.transpose(
+        c.reshape(B, R, Cc, m, m, M), (0, 1, 3, 2, 4, 5)
+    ).reshape(B, R * m, Cc * m, M)
+    return img[:, padding : padding + out_hw[0], padding : padding + out_hw[1]]
+
+
+def _bn_act_cells(
+    bn: Params,
+    emitted: jax.Array,  # raw emit_cells output (B, R, Cc, m*m, >=M)
+    out_hw: tuple[int, int],
+    *,
+    act: str,
+    padding: int = 0,
+    momentum: float = 0.9,
+    eps: float = 1e-5,
+):
+    """Training-mode batchnorm + activation IN THE CELL DOMAIN — the second
+    pass of the two-pass chained-BN scheme.  The emitted cells are a pure
+    relayout of the layer's output pixels with everything outside the crop
+    window already zeroed, so the batch statistics come from plain masked
+    sums over the resident cell tensor (sum / count with count = the window
+    pixel count; zeros outside the window contribute nothing), the affine +
+    activation run as one fused XLA pointwise pass over the same tensor,
+    and the crop mask re-zeroes out-of-window cells so the next chained
+    engine call consumes the result directly.  Numerically equal to
+    ``layers.batchnorm`` + activation on the NHWC image, without ever
+    leaving the cell layout.  Returns (cells, new_running_stats)."""
+    M = bn["scale"].shape[0]
+    c = emitted[..., :M].astype(jnp.float32)
+    B, R, Cc, m2, _ = c.shape
+    m = int(round(m2 ** 0.5))
+    count = B * out_hw[0] * out_hw[1]
+    mean = c.sum(axis=(0, 1, 2, 3)) / count
+    # one-pass E[x^2] - mean^2 can dip (slightly) negative under fp32
+    # cancellation when |mean| >> std — clamp so rsqrt(var + eps) cannot
+    # NaN a diverging run the per-layer two-pass var would survive
+    var = jnp.maximum((c * c).sum(axis=(0, 1, 2, 3)) / count - mean * mean, 0.0)
+    y = (c - mean) * jax.lax.rsqrt(var + eps)
+    y = y * bn["scale"].astype(jnp.float32) + bn["bias"].astype(jnp.float32)
+    y = L.ACTIVATIONS[act](y)
+    mask = kops.cells_window_mask(R, Cc, m, padding, out_hw[0], out_hw[1])
+    new = {
+        "mean": momentum * bn["mean"] + (1 - momentum) * mean,
+        "var": momentum * bn["var"] + (1 - momentum) * var,
+    }
+    return (y * mask).astype(emitted.dtype), new
+
+
+def _chained_deconv_trunk(
+    p: Params, cfg: GANConfig, h: jax.Array, *, training: bool = False
+) -> tuple[jax.Array, Params]:
+    """Deconv trunk as ONE engine-domain pipeline, eval AND training mode.
+
+    Eval (and BN-free layers in either mode): every layer runs the
+    epilogue-fused engine (BN folded to scale/bias + activation applied in
+    VMEM) and — where the cell layouts line up (``ops.chain_aligned``) —
+    emits the next layer's cell layout directly, so consecutive layers
+    chain with zero XLA relayout between them.
+
+    Training-mode batch-stat BN layers use the two-pass scheme instead of
+    falling back to per-layer NHWC steps: the engine emits the raw cell
+    layout (no epilogue), ``_bn_act_cells`` computes the batch statistics
+    and applies BN + activation on the resident cell tensor, and the chain
+    continues — the trunk never materializes an intermediate NHWC image.
+    Misaligned hops (ArtGAN's trailing K4S2 -> K3S1) fall back to NHWC out
+    + a cells re-layout.  Returns (image, new_bn_stats)."""
     kw = _CHAINED_KW[cfg.deconv_impl]
+    new_stats: Params = {}
     hw = (h.shape[1], h.shape[2])
     cells = kops.cells_from_image(h, cfg.deconvs[0].dims)
     img = None
     for i, d in enumerate(cfg.deconvs):
-        scale, bias = (
-            _bn_eval_affine(p[f"deconv{i}_bn"]) if d.norm == "batch"
-            else (None, None)
-        )
+        packed = _packed_of(p[f"deconv{i}"], d.dims)
+        has_bn = d.norm == "batch"
         nxt = cfg.deconvs[i + 1].dims if i + 1 < len(cfg.deconvs) else None
         out_hw = (d.dims.out_size(hw[0]), d.dims.out_size(hw[1]))
-        if nxt is not None and kops.chain_aligned(d.dims, nxt):
-            emitted = kops.winograd_deconv2d_cells(
-                cells, _packed_of(p[f"deconv{i}"], d.dims), d.dims, hw,
-                epilogue=d.act, scale=scale, bias=bias, emit_cells=True, **kw,
-            )
-            cells = kops.cells_to_next(emitted, d.dims, nxt, out_hw)
+        aligned = nxt is not None and kops.chain_aligned(d.dims, nxt)
+        if training and has_bn:
+            if aligned:
+                emitted = kops.winograd_deconv2d_cells(
+                    cells, packed, d.dims, hw, emit_cells=True, **kw,
+                )
+                y_cells, stats = _bn_act_cells(
+                    p[f"deconv{i}_bn"], emitted, out_hw, act=d.act,
+                    padding=d.dims.padding,
+                )
+                cells = kops.cells_to_next(y_cells, d.dims, nxt, out_hw)
+            else:  # misaligned hop (or BN on the last layer): NHWC fallback
+                img = kops.winograd_deconv2d_cells(cells, packed, d.dims, hw, **kw)
+                img, stats = L.batchnorm(p[f"deconv{i}_bn"], img, training=True)
+                img = L.ACTIVATIONS[d.act](img)
+                if nxt is not None:
+                    cells = kops.cells_from_image(img, nxt)
+            new_stats[f"deconv{i}_bn"] = stats
         else:
-            img = kops.winograd_deconv2d_cells(
-                cells, _packed_of(p[f"deconv{i}"], d.dims), d.dims, hw,
-                epilogue=d.act, scale=scale, bias=bias, **kw,
+            scale, bias = (
+                _bn_eval_affine(p[f"deconv{i}_bn"]) if has_bn else (None, None)
             )
-            if nxt is not None:
-                cells = kops.cells_from_image(img, nxt)
+            if has_bn:
+                new_stats[f"deconv{i}_bn"] = {
+                    "mean": p[f"deconv{i}_bn"]["mean"],
+                    "var": p[f"deconv{i}_bn"]["var"],
+                }
+            if aligned:
+                emitted = kops.winograd_deconv2d_cells(
+                    cells, packed, d.dims, hw,
+                    epilogue=d.act, scale=scale, bias=bias, emit_cells=True, **kw,
+                )
+                cells = kops.cells_to_next(emitted, d.dims, nxt, out_hw)
+            else:
+                img = kops.winograd_deconv2d_cells(
+                    cells, packed, d.dims, hw,
+                    epilogue=d.act, scale=scale, bias=bias, **kw,
+                )
+                if nxt is not None:
+                    cells = kops.cells_from_image(img, nxt)
         hw = out_hw
-    return img
+    return img, new_stats
 
 
 def generator_apply(
@@ -328,11 +517,11 @@ def generator_apply(
     """inp: (B, z_dim) latent or (B, H, W, 3) image (image-to-image).
     Returns (image, new_bn_stats).
 
-    A chained ``deconv_impl`` runs the whole eval-mode deconv trunk inside
-    the engine domain (``_chained_deconv_trunk``).  In training mode the BN
-    batch statistics need the materialized layer outputs, so chained impls
-    step layer-by-layer through the same fused-pre engine instead (identical
-    numerics, grads via the Pallas backward engines)."""
+    A chained ``deconv_impl`` runs the whole deconv trunk inside the engine
+    domain (``_chained_deconv_trunk``) in BOTH modes: eval folds BN into the
+    fused epilogue; training uses the two-pass cell-domain BN (batch stats
+    computed on the resident cell tensor), so neither mode falls back to
+    per-layer NHWC steps.  Grads flow via the Pallas backward engines."""
     new_stats: Params = {}
     if cfg.z_dim:
         h = L.linear(p["stem"], inp)
@@ -348,8 +537,9 @@ def generator_apply(
                 h, s = L.batchnorm(p[f"enc{i}_bn"], h, training=training)
                 new_stats[f"enc{i}_bn"] = s
             h = L.ACTIVATIONS[e.act](h)
-    if uses_chained(cfg.deconv_impl) and not training:
-        return _chained_deconv_trunk(p, cfg, h), new_stats
+    if uses_chained(cfg.deconv_impl):
+        img, trunk_stats = _chained_deconv_trunk(p, cfg, h, training=training)
+        return img, {**new_stats, **trunk_stats}
     for i, d in enumerate(cfg.deconvs):
         h = _deconv_apply(cfg.deconv_impl, h, p[f"deconv{i}"], d.dims)
         if d.norm == "batch":
@@ -360,17 +550,47 @@ def generator_apply(
 
 
 # ------------------------------------------------------------ discriminator
-# Trunk widths; parallel.sharding.gan_param_specs mirrors this layout, so
-# the two must change together.
+# Default trunk widths; parallel.sharding.gan_param_specs mirrors this
+# layout via disc_channels(cfg), so the two must change together.
 DISC_CHANNELS: tuple[int, ...] = (64, 128, 256, 512)
+
+DISC_KERNEL, DISC_STRIDE = 4, 2
+
+
+def disc_channels(cfg: GANConfig) -> tuple[int, ...]:
+    """Trunk widths of the discriminator for this config."""
+    return tuple(getattr(cfg, "disc_channels", DISC_CHANNELS))
+
+
+def disc_conv_dims(cfg: GANConfig) -> tuple[ConvDims, ...]:
+    """Per-layer ConvDims of the discriminator trunk (K4S2, lax-SAME pads
+    per input extent — identical geometry to ``layers.conv2d(stride=2)``)."""
+    h, out = cfg.img_hw, []
+    for _ in disc_channels(cfg):
+        cd = conv_same_dims(DISC_KERNEL, DISC_STRIDE, h)
+        out.append(cd)
+        h = cd.out_size(h)
+    return tuple(out)
+
+
+def _packed_conv_of(wd: Params, cdims: ConvDims) -> kops.PackedConv:
+    """Rehydrate a PackedConv from the trainable ``ww`` leaf (static inverse
+    rows come from the cached layout — never in the param tree)."""
+    inv_np = kops.conv_packed_layout(cdims)[1]
+    return kops.PackedConv(wd["ww"], jnp.asarray(inv_np))
 
 
 def discriminator_init(key: jax.Array, cfg: GANConfig, dtype=jnp.float32) -> Params:
-    chans = [cfg.img_ch, *DISC_CHANNELS]
+    chans = [cfg.img_ch, *disc_channels(cfg)]
     keys = jax.random.split(key, len(chans))
+    dims = disc_conv_dims(cfg)
     p: Params = {}
     for i in range(len(chans) - 1):
-        p[f"conv{i}"] = L.conv2d_init(keys[i], 4, chans[i], chans[i + 1], dtype)
+        wd = L.conv2d_init(keys[i], DISC_KERNEL, chans[i], chans[i + 1], dtype)
+        if uses_prepacked_conv(cfg.conv_impl):
+            # Winograd-domain conv params: G-transform + pack once, here
+            wd = {"ww": kops.prepack_conv(wd["w"], dims[i]).ww, "b": wd["b"]}
+        p[f"conv{i}"] = wd
         if i > 0:
             p[f"conv{i}_bn"] = L.batchnorm_init(chans[i + 1], dtype)
     final_hw = cfg.img_hw // 2 ** (len(chans) - 1)
@@ -378,13 +598,118 @@ def discriminator_init(key: jax.Array, cfg: GANConfig, dtype=jnp.float32) -> Par
     return p
 
 
+def _disc_conv_apply(impl: str, x, wd: Params, cdims: ConvDims):
+    """One per-layer discriminator conv (bias fused into the engine
+    epilogue for the winograd impls)."""
+    if impl == "lax":
+        return L.conv2d(wd, x, stride=DISC_STRIDE)
+    if impl in _CONV_RAW_KW:
+        return kops.winograd_conv2d(
+            x, wd["w"], cdims, bias=wd["b"].astype(jnp.float32),
+            **_CONV_RAW_KW[impl],
+        )
+    if impl in _CONV_PREPACKED_KW:
+        kw = dict(_CONV_PREPACKED_KW[impl])
+        if kw.get("backend") == "pallas":
+            ww = wd["ww"]
+            kw.update(DECONV_BLOCKS.get((impl, cdims, ww.shape[1], ww.shape[2]), {}))
+        return kops.winograd_conv2d_packed(
+            x, _packed_conv_of(wd, cdims), cdims,
+            bias=wd["b"].astype(jnp.float32), **kw,
+        )
+    raise ValueError(impl)
+
+
+def _chained_conv_trunk(
+    p: Params, cfg: GANConfig, img: jax.Array, *, training: bool = True
+) -> tuple[jax.Array, Params]:
+    """Discriminator trunk as ONE conv-to-conv engine pipeline — every
+    stride-2 layer runs the fused Winograd Conv engine and hands the next
+    layer its phase-major cell layout via ``ops.conv_cells_to_next`` (with
+    m = S = 2, each output cell IS one phase pair of the next layer, so the
+    hop is a static cell-level gather, never an NHWC materialize).
+
+    Eval mode folds conv bias + running-stat BN into the fused epilogue;
+    training mode uses the two-pass cell-domain BN (conv bias still fused,
+    batch stats + BN + leaky_relu on the resident cell tensor).  The final
+    layer materializes pixels only for the dense head."""
+    base_kw = _CONV_PREPACKED_KW[cfg.conv_impl]
+    dims = disc_conv_dims(cfg)
+    new_stats: Params = {}
+    hw = (img.shape[1], img.shape[2])
+    cells = kops.conv_cells_from_image(img, dims[0])
+    h_img = None
+    n_layers = len(dims)
+    for i, cd in enumerate(dims):
+        wd = p[f"conv{i}"]
+        kw = dict(base_kw)
+        if kw.get("backend") == "pallas" and "ww" in wd:
+            kw.update(DECONV_BLOCKS.get(
+                (cfg.conv_impl, cd, wd["ww"].shape[1], wd["ww"].shape[2]), {}
+            ))
+        packed = _packed_conv_of(wd, cd)
+        b = wd["b"].astype(jnp.float32)
+        has_bn = f"conv{i}_bn" in p
+        last = i + 1 >= n_layers
+        out_hw = (cd.out_size(hw[0]), cd.out_size(hw[1]))
+        aligned = not last and kops.conv_chain_aligned(cd, dims[i + 1])
+        if training and has_bn:
+            emitted = kops.winograd_conv2d_cells(
+                cells, packed, cd, hw, bias=b, emit_cells=True, **kw,
+            )
+            y_cells, stats = _bn_act_cells(
+                p[f"conv{i}_bn"], emitted, out_hw, act="leaky_relu",
+            )
+            new_stats[f"conv{i}_bn"] = stats
+            if aligned:
+                cells = kops.conv_cells_to_next(y_cells, cd, dims[i + 1], out_hw)
+            else:
+                h_img = _cells_to_image(y_cells, out_hw)
+                if not last:
+                    cells = kops.conv_cells_from_image(h_img, dims[i + 1])
+        else:
+            if has_bn:
+                a, bb = _bn_eval_affine(p[f"conv{i}_bn"])
+                scale, bias = a, a * b + bb
+                new_stats[f"conv{i}_bn"] = {
+                    "mean": p[f"conv{i}_bn"]["mean"],
+                    "var": p[f"conv{i}_bn"]["var"],
+                }
+            else:
+                scale, bias = None, b
+            if aligned:
+                emitted = kops.winograd_conv2d_cells(
+                    cells, packed, cd, hw, epilogue="leaky_relu",
+                    scale=scale, bias=bias, emit_cells=True, **kw,
+                )
+                cells = kops.conv_cells_to_next(emitted, cd, dims[i + 1], out_hw)
+            else:
+                h_img = kops.winograd_conv2d_cells(
+                    cells, packed, cd, hw, epilogue="leaky_relu",
+                    scale=scale, bias=bias, **kw,
+                )
+                if not last:
+                    cells = kops.conv_cells_from_image(h_img, dims[i + 1])
+        hw = out_hw
+    return L.linear(p["head"], h_img.reshape(h_img.shape[0], -1)), new_stats
+
+
 def discriminator_apply(
     p: Params, cfg: GANConfig, img: jax.Array, *, training: bool = True
 ) -> tuple[jax.Array, Params]:
+    """``cfg.conv_impl`` selects the trunk: 'lax' (XLA conv, the baseline),
+    per-layer Winograd Conv engine impls, or the chained conv-to-conv
+    pipeline — all numerically identical, so the adversarial train step's
+    D-half (and the grad-through-D path that updates G) runs in whichever
+    domain the benchmark compares."""
+    impl = getattr(cfg, "conv_impl", "lax")
+    if uses_chained_conv(impl):
+        return _chained_conv_trunk(p, cfg, img, training=training)
+    dims = disc_conv_dims(cfg)
     h, new_stats = img, {}
     i = 0
     while f"conv{i}" in p:
-        h = L.conv2d(p[f"conv{i}"], h, stride=2)
+        h = _disc_conv_apply(impl, h, p[f"conv{i}"], dims[i])
         if f"conv{i}_bn" in p:
             h, s = L.batchnorm(p[f"conv{i}_bn"], h, training=training)
             new_stats[f"conv{i}_bn"] = s

@@ -197,9 +197,11 @@ def gan_param_specs(cfg: GANConfig, mesh: Mesh, axes: Optional[MeshAxes] = None)
     over N on the batch axes and TP-sharded over M on "model" where it
     divides (C is grid-parallel inside the engine already); raw (K, K, N, M)
     deconv weights and the discriminator convs shard the same way on their
-    trailing channel dims.  Non-divisible dims degrade to replication and are
-    recorded in the fallback log (e.g. every generator's last layer has
-    M = img_ch = 3, which no TP degree divides).
+    trailing channel dims.  A prepacked ``conv_impl`` gives the
+    discriminator's packed (C, N, M) conv leaves the identical rule.
+    Non-divisible dims degrade to replication and are recorded in the
+    fallback log (e.g. every generator's last layer has M = img_ch = 3,
+    which no TP degree divides).
     """
     from repro.models import gan as G  # lazy: keep parallel importable without kernels
 
@@ -208,6 +210,7 @@ def gan_param_specs(cfg: GANConfig, mesh: Mesh, axes: Optional[MeshAxes] = None)
     fsdp = axes.fsdp
     tp = _tp_or_none(mesh, axes)
     prepacked = G.uses_prepacked(cfg.deconv_impl)
+    prepacked_conv = G.uses_prepacked_conv(getattr(cfg, "conv_impl", "lax"))
 
     def bn_spec():
         # (c,) scale/bias + running stats: tiny, replicated
@@ -243,9 +246,16 @@ def gan_param_specs(cfg: GANConfig, mesh: Mesh, axes: Optional[MeshAxes] = None)
             gen[f"deconv{i}_bn"] = bn_spec()
 
     disc: dict[str, Any] = {}
-    chans = (cfg.img_ch,) + G.DISC_CHANNELS
+    chans = (cfg.img_ch,) + G.disc_channels(cfg)
     for i in range(len(chans) - 1):
-        disc[f"conv{i}"] = conv_spec(f"disc.conv{i}", chans[i], chans[i + 1])
+        if prepacked_conv:
+            disc[f"conv{i}"] = {
+                "ww": P(None, b.dim(f"disc.conv{i}.N", chans[i], fsdp),
+                        b.dim(f"disc.conv{i}.M", chans[i + 1], tp)),
+                "b": P(b.dim(f"disc.conv{i}.b", chans[i + 1], tp)),
+            }
+        else:
+            disc[f"conv{i}"] = conv_spec(f"disc.conv{i}", chans[i], chans[i + 1])
         if i > 0:
             disc[f"conv{i}_bn"] = bn_spec()
     final_hw = cfg.img_hw // 2 ** (len(chans) - 1)

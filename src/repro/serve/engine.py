@@ -17,6 +17,7 @@ forever, no recompilation as traffic varies.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
@@ -174,6 +175,15 @@ class GanServeEngine:
     behind it wait for the next step rather than jumping the queue), which
     trades a little packing efficiency for order fairness.
 
+    Deadline-aware admission: ``try_admit(req, deadline_ms=...)`` opens (or
+    joins) a bounded batching window instead of demanding immediate
+    service — the request is willing to wait up to ``deadline_ms`` for more
+    traffic to coalesce with.  ``poll()`` then serves only when the window
+    closes: the earliest admitted deadline has expired, the row pool is
+    full, or some admitted request declared no deadline at all (latency
+    first, the FIFO default).  ``step()`` stays unconditional, so existing
+    drive loops are unaffected.
+
     Params may arrive raw, already packed, or packed-and-sharded (straight
     out of a mesh training run — already-``ww`` leaves pass through
     ``prepack_generator`` untouched); ``mesh`` re-places them per
@@ -219,6 +229,10 @@ class GanServeEngine:
         self.served = 0
         self.active: list[GanRequest] = []  # admitted, not yet stepped
         self.rows_used = 0
+        # earliest absolute deadline (ms) among admitted requests; None while
+        # any admitted request wants immediate service (the FIFO default)
+        self._window_deadline: Optional[float] = None
+        self._immediate = False
 
     def bucket_for(self, b: int) -> int:
         """Smallest serving bucket that fits a size-``b`` request."""
@@ -239,10 +253,19 @@ class GanServeEngine:
         return imgs[:b]
 
     # ------------------------------------------------------------ admission
-    def try_admit(self, req: GanRequest) -> bool:
+    def try_admit(self, req: GanRequest, *, deadline_ms: Optional[float] = None,
+                  now: Optional[float] = None) -> bool:
         """FIFO admission: claim ``req.size`` free slot rows for the next
         step's shared batch; False when the pool can't fit the request (a
-        request larger than the pool is a caller error, as in generate)."""
+        request larger than the pool is a caller error, as in generate).
+
+        ``deadline_ms`` admits into a bounded batching window: the request
+        tolerates up to that much coalescing delay, and ``poll`` serves the
+        shared batch when the EARLIEST admitted deadline expires (or the
+        pool fills) rather than unconditionally.  Without it the request
+        demands immediate service and the next ``poll`` fires regardless —
+        a mixed batch honors its most impatient member.  ``now`` (ms)
+        overrides the wall clock, for tests and simulated drivers."""
         if req.size > self.batch:
             raise ValueError(
                 f"request batch {req.size} > engine max bucket {self.batch}"
@@ -251,7 +274,34 @@ class GanServeEngine:
             return False
         self.active.append(req)
         self.rows_used += req.size
+        if deadline_ms is None:
+            self._immediate = True
+        else:
+            t = (time.monotonic() * 1e3 if now is None else now) + deadline_ms
+            self._window_deadline = (
+                t if self._window_deadline is None
+                else min(self._window_deadline, t)
+            )
         return True
+
+    def window_open(self, now: Optional[float] = None) -> bool:
+        """True while the batching window is still collecting: some rows are
+        admitted, none demanded immediate service, the pool has free rows,
+        and the earliest deadline has not expired."""
+        if not self.active or self._immediate or self.rows_used >= self.batch:
+            return False
+        if self._window_deadline is None:
+            return False  # nothing admitted a deadline: serve right away
+        t = time.monotonic() * 1e3 if now is None else now
+        return t < self._window_deadline
+
+    def poll(self, now: Optional[float] = None) -> list[GanRequest]:
+        """Serve the admitted batch iff its window has closed (deadline
+        expired, pool full, or an immediate-service request is aboard);
+        returns [] while the window is still open."""
+        if not self.active or self.window_open(now):
+            return []
+        return self.step()
 
     # ----------------------------------------------------------------- step
     def step(self) -> list[GanRequest]:
@@ -270,6 +320,7 @@ class GanServeEngine:
             row += req.size
             finished.append(req)
         self.active, self.rows_used = [], 0
+        self._window_deadline, self._immediate = None, False
         return finished
 
     def run(self, requests: list[jax.Array]) -> list[jax.Array]:

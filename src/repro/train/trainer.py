@@ -119,6 +119,7 @@ def train_gan(
     hooks: TrainHooks = TrainHooks(),
     dtype=jnp.float32,
     deconv_impl: Optional[str] = None,
+    conv_impl: Optional[str] = None,
     mesh=None,
 ) -> dict:
     """End-to-end GAN training on synthetic data; restartable.
@@ -127,7 +128,10 @@ def train_gan(
     impl the generator trains in the Winograd domain — params hold the
     packed transformed weights (G-transform runs once at init), the forward
     consumes them directly, and the backward is the Pallas engines, so no
-    step ever re-runs the weight transform or pack.
+    step ever re-runs the weight transform or pack.  ``conv_impl``
+    likewise overrides the discriminator backend: a prepacked/chained conv
+    impl puts the FULL adversarial step — both nets, both grads — in the
+    engine domain.
 
     ``mesh`` runs the same loop multi-device: params/opt state are placed
     per ``parallel.sharding.gan_param_specs`` (FSDP + TP with ZeRO-sharded
@@ -138,6 +142,8 @@ def train_gan(
     """
     if deconv_impl is not None:
         cfg = dataclasses.replace(cfg, deconv_impl=deconv_impl)
+    if conv_impl is not None:
+        cfg = dataclasses.replace(cfg, conv_impl=conv_impl)
     k = jax.random.PRNGKey(seed)
     kg, kd = jax.random.split(k)
     gp = G.generator_init(kg, cfg, dtype)

@@ -1,0 +1,241 @@
+"""Engine-domain discriminator + full adversarial step: every conv_impl
+must match the lax discriminator in both modes, the chained trunks (G and
+D) must train through the two-pass cell-domain BN with per-layer-exact
+statistics, jax.grad of the WHOLE GAN loss must never fall back to a
+reference conv, and packed discriminators must shard/prepack/export."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.gan_zoo import tiny_dcgan
+from repro.kernels import ops
+from repro.models import gan as G
+
+
+def _disc_cfg(conv_impl="lax", img_hw=16):
+    """Small-image discriminator config (generator side unused)."""
+    return dataclasses.replace(tiny_dcgan(conv_impl=conv_impl), img_hw=img_hw)
+
+
+def _disc_fixture(img_hw=16):
+    cfg = _disc_cfg(img_hw=img_hw)
+    dp = G.discriminator_init(jax.random.PRNGKey(0), cfg)
+    # non-trivial running stats so eval-mode folding is actually exercised
+    for i in range(1, len(G.disc_channels(cfg))):
+        bn = dict(dp[f"conv{i}_bn"])
+        bn["mean"] = 0.1 * jnp.arange(bn["mean"].shape[0], dtype=jnp.float32)
+        bn["var"] = 1.0 + 0.1 * jnp.arange(bn["var"].shape[0], dtype=jnp.float32)
+        dp[f"conv{i}_bn"] = bn
+    img = jax.random.normal(jax.random.PRNGKey(5), (2, cfg.img_hw, cfg.img_hw, 3))
+    return cfg, dp, img
+
+
+@pytest.mark.parametrize("impl", [
+    "ref", "pallas_interpret", "prepacked_ref", "pallas_prepacked_interpret",
+    "chained_ref", "pallas_chained_interpret",
+])
+def test_disc_impls_match_lax(impl):
+    """Every Winograd conv_impl == the lax discriminator in eval AND
+    training mode, including the training batch-norm statistics (the
+    chained impls compute them in the cell domain)."""
+    cfg, dp, img = _disc_fixture()
+    want_e, _ = G.discriminator_apply(dp, cfg, img, training=False)
+    want_t, want_stats = G.discriminator_apply(dp, cfg, img, training=True)
+    params = G.prepack_discriminator(dp, cfg) if G.uses_prepacked_conv(impl) else dp
+    c = dataclasses.replace(cfg, conv_impl=impl)
+    got_e, _ = G.discriminator_apply(params, c, img, training=False)
+    np.testing.assert_allclose(np.asarray(got_e), np.asarray(want_e),
+                               atol=5e-4, rtol=5e-4)
+    got_t, stats = G.discriminator_apply(params, c, img, training=True)
+    np.testing.assert_allclose(np.asarray(got_t), np.asarray(want_t),
+                               atol=5e-4, rtol=5e-4)
+    assert sorted(stats) == sorted(want_stats)
+    for k in want_stats:
+        for f in ("mean", "var"):
+            np.testing.assert_allclose(
+                np.asarray(stats[k][f]), np.asarray(want_stats[k][f]),
+                atol=5e-4, rtol=5e-4,
+            )
+
+
+def test_disc_grads_match_lax():
+    """Training-mode jax.grad through the chained engine discriminator ==
+    lax autodiff: raw-weight grads via the pack's chain rule; bias grads at
+    absolute tolerance (under BN they are exactly zero in exact
+    arithmetic)."""
+    cfg, dp, img = _disc_fixture()
+    dp_packed = G.prepack_discriminator(dp, cfg)
+    c_ch = dataclasses.replace(cfg, conv_impl="pallas_chained_interpret")
+
+    def loss(params, c):
+        y, _ = G.discriminator_apply(params, c, img, training=True)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    g_lax = jax.grad(lambda q: loss(q, cfg))(dp)
+    g_ch = jax.grad(lambda q: loss(q, c_ch))(dp_packed)
+    for i, cd in enumerate(G.disc_conv_dims(cfg)):
+        _, vjp = jax.vjp(lambda w: ops.pack_conv_weights(w, cd), dp[f"conv{i}"]["w"])
+        gw_raw = vjp(g_ch[f"conv{i}"]["ww"])[0]
+        scale = float(jnp.abs(g_lax[f"conv{i}"]["w"]).max()) + 1e-9
+        np.testing.assert_allclose(
+            np.asarray(gw_raw) / scale,
+            np.asarray(g_lax[f"conv{i}"]["w"]) / scale, atol=5e-4,
+        )
+        np.testing.assert_allclose(
+            np.asarray(g_ch[f"conv{i}"]["b"]) / scale,
+            np.asarray(g_lax[f"conv{i}"]["b"]) / scale, atol=5e-4,
+        )
+    np.testing.assert_allclose(
+        np.asarray(g_ch["head"]["w"]), np.asarray(g_lax["head"]["w"]),
+        atol=5e-4, rtol=5e-3,
+    )
+
+
+def test_gen_chained_training_matches_per_layer():
+    """The training-mode chained generator (two-pass cell-domain BN) ==
+    the per-layer fused-pre path: image, BN statistics, and grads — the
+    chained trunk no longer falls back per-layer in training (the PR 4
+    ROADMAP blocker)."""
+    cfg_pl = tiny_dcgan("pallas_fused_pre_prepacked_interpret")
+    cfg_ch = dataclasses.replace(cfg_pl, deconv_impl="pallas_chained_interpret")
+    gp = G.generator_init(jax.random.PRNGKey(0), cfg_pl)
+    z = jax.random.normal(jax.random.PRNGKey(1), (2, cfg_pl.z_dim))
+    want, stats_pl = G.generator_apply(gp, cfg_pl, z, training=True)
+    got, stats_ch = G.generator_apply(gp, cfg_ch, z, training=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-4, rtol=5e-4)
+    assert sorted(stats_pl) == sorted(stats_ch)
+    for k in stats_pl:
+        for f in ("mean", "var"):
+            np.testing.assert_allclose(
+                np.asarray(stats_ch[k][f]), np.asarray(stats_pl[k][f]),
+                atol=5e-4, rtol=5e-4,
+            )
+
+    def loss(p, cfg):
+        img, _ = G.generator_apply(p, cfg, z, training=True)
+        return jnp.sum(img.astype(jnp.float32) ** 2)
+
+    g_pl = jax.grad(lambda p: loss(p, cfg_pl))(gp)
+    g_ch = jax.grad(lambda p: loss(p, cfg_ch))(gp)
+    for i in range(len(cfg_pl.deconvs)):
+        a, b = g_ch[f"deconv{i}"]["ww"], g_pl[f"deconv{i}"]["ww"]
+        scale = float(jnp.abs(b).max()) + 1e-9
+        np.testing.assert_allclose(np.asarray(a) / scale, np.asarray(b) / scale,
+                                   atol=1e-3)
+
+
+def test_full_gan_grad_never_calls_ref_conv(monkeypatch):
+    """Tripwire: with chained engine impls on BOTH nets, jax.grad of the
+    full adversarial loss (G loss + D loss, training mode) must never
+    dispatch an XLA conv or a reference-oracle conv — the whole thing runs
+    on the Pallas engines."""
+    from repro.kernels import ref as kref
+    from repro.train.trainer import gan_losses
+
+    cfg = tiny_dcgan("pallas_chained_interpret", "pallas_chained_interpret")
+    kg, kd = jax.random.split(jax.random.PRNGKey(0))
+    gp = G.generator_init(kg, cfg)
+    dp = G.discriminator_init(kd, cfg)
+    z = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.z_dim))
+    real = jax.random.normal(jax.random.PRNGKey(2), (2, cfg.img_hw, cfg.img_hw, 3))
+
+    def boom(*a, **k):
+        raise AssertionError("conv fallback reached inside the engine-domain GAN step")
+
+    monkeypatch.setattr(jax.lax, "conv_general_dilated", boom)
+    monkeypatch.setattr(jax.lax, "conv_transpose", boom)
+    for name in ("conv_engine_ref", "engine_ref", "fused_pre_engine_ref",
+                 "fused_epilogue_engine_ref", "winograd_deconv2d_ref"):
+        monkeypatch.setattr(kref, name, boom)
+
+    def full_loss(gp_, dp_):
+        gl, dl, _ = gan_losses(gp_, dp_, cfg, z, real, training=True)
+        return gl + dl
+
+    gg, gd = jax.grad(full_loss, argnums=(0, 1))(gp, dp)
+    assert np.isfinite(float(jnp.abs(gg["deconv0"]["ww"]).sum()))
+    assert float(jnp.abs(gd["conv0"]["ww"]).sum()) > 0
+
+
+def test_full_engine_train_step():
+    """One GAN train step with chained engine impls on both nets: finite
+    losses, packed leaves (deconv AND conv) are what the optimizer moves."""
+    from repro.train.trainer import train_gan
+
+    out = train_gan(
+        tiny_dcgan(), steps=1, batch=2, log_every=1,
+        deconv_impl="pallas_chained_interpret",
+        conv_impl="pallas_chained_interpret",
+    )
+    gp, dp = out["params"]["gp"], out["params"]["dp"]
+    assert "ww" in gp["deconv0"] and "ww" in dp["conv0"]
+    assert dp["conv0"]["ww"].shape[0] == 36  # C(K4S2) packed conv leaf
+    assert all(np.isfinite(m["g_loss"]) and np.isfinite(m["d_loss"])
+               for m in out["metrics"])
+
+
+def test_unpack_generator_roundtrip():
+    """Packed -> raw export (least squares through G) reproduces the packed
+    forward exactly, and re-prepacking returns the original leaves."""
+    cfg_p = tiny_dcgan("prepacked_ref")
+    cfg_raw = dataclasses.replace(cfg_p, deconv_impl="ref")
+    gp = G.generator_init(jax.random.PRNGKey(0), cfg_p)
+    raw = G.unpack_generator(gp, cfg_p)
+    assert "w" in raw["deconv0"] and "ww" not in raw["deconv0"]
+    z = jax.random.normal(jax.random.PRNGKey(1), (2, cfg_p.z_dim))
+    want, _ = G.generator_apply(gp, cfg_p, z, training=False)
+    got, _ = G.generator_apply(raw, cfg_raw, z, training=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+    back = G.prepack_generator(raw, cfg_p)
+    for i in range(len(cfg_p.deconvs)):
+        np.testing.assert_allclose(
+            np.asarray(back[f"deconv{i}"]["ww"]),
+            np.asarray(gp[f"deconv{i}"]["ww"]), atol=1e-5, rtol=1e-5,
+        )
+
+
+def test_packed_disc_param_specs_match_tree():
+    """Spec-tree mirror contract for the packed discriminator: the sharding
+    specs line up leaf-for-leaf with discriminator_init's packed layout."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh
+    from repro.parallel import sharding as SH
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    for impl in ("lax", "prepacked_ref", "pallas_chained_interpret"):
+        cfg = _disc_cfg(conv_impl=impl)
+        _, dsp, _ = SH.gan_param_specs(cfg, mesh)
+        dp = jax.eval_shape(
+            lambda k, cfg=cfg: G.discriminator_init(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        jax.tree.map(lambda s, leaf: None, dsp, dp,
+                     is_leaf=lambda x: isinstance(x, P))
+        assert all(
+            isinstance(s, P)
+            for s in jax.tree.leaves(dsp, is_leaf=lambda x: isinstance(x, P))
+        )
+
+
+def test_disc_conv_dims_match_lax_same():
+    """conv_same_dims reproduces lax SAME geometry (even and odd extents,
+    the asymmetric K3S2 split included)."""
+    from repro.core.tdc import conv_same_dims
+
+    for k, s, h in [(4, 2, 64), (4, 2, 7), (3, 2, 8), (3, 1, 9)]:
+        cd = conv_same_dims(k, s, h)
+        x = jnp.ones((1, h, h, 2))
+        w = jnp.ones((k, k, 2, 2))
+        want = jax.lax.conv_general_dilated(
+            x, w, (s, s), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        assert cd.out_size(h) == want.shape[1]
+        got = jax.lax.conv_general_dilated(
+            x, w, (s, s), [(cd.padding, cd.pad_hi)] * 2,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

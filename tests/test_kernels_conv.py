@@ -1,0 +1,193 @@
+"""Winograd Conv engine (the discriminator path): the phase-decomposed
+stride-S conv must equal ``lax.conv`` exactly (fwd and every gradient)
+across the DCGAN-family geometries, the conv-to-conv cell chain must equal
+the per-layer path, and the packed layout must round-trip through the
+least-squares unpack."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tdc import ConvDims, DeconvDims, conv_plan, conv_same_dims
+from repro.kernels import ops
+
+IB = dict(block_ty=4, block_n=8, block_m=8)
+
+# (K, S, H): the discriminator geometries named by the issue — K4S2 (DCGAN
+# trunk), K3S1 (unit-stride tail), K3S2 (asymmetric SAME pad) — plus an odd
+# input extent so the ragged right edge is exercised.
+GEOMETRIES = [(4, 2, 8), (3, 1, 8), (3, 2, 8), (4, 2, 7)]
+
+
+def _lax_conv(x, w, cd: ConvDims):
+    return jax.lax.conv_general_dilated(
+        x, w, (cd.stride, cd.stride),
+        [(cd.padding, cd.pad_hi), (cd.padding, cd.pad_hi)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        precision=jax.lax.Precision.HIGHEST,
+    )
+
+
+def _data(K, H, n_in=3, m_out=5, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, H, H, n_in)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, K, n_in, m_out)), jnp.float32)
+    return x, w
+
+
+def test_conv_plan_structural_counts():
+    """The phase decomposition's structural sparsity: C(K4S2) = 36 of 64
+    dense positions, C(K3S1) = 16, and every sub-filter mask matches the
+    |G|-propagated tap presence."""
+    assert conv_plan(conv_same_dims(4, 2, 8)).c_total == 36
+    assert conv_plan(conv_same_dims(3, 1, 8)).c_total == 16
+    sp = conv_plan(conv_same_dims(3, 2, 8))  # pads (0, 1): presence [1,1,0]/[1,0,0]
+    assert sp.taps_1d == ((1, 1, 0), (1, 0, 0))
+    assert sp.c_total == 36 - 0  # 4 pairs x 3*3 nonzero 1-D positions
+    # r too small for the geometry must fail fast, not silently truncate
+    with pytest.raises(ValueError):
+        conv_plan(ConvDims(7, 2, 1, 1))
+
+
+@pytest.mark.parametrize("K,S,H", GEOMETRIES)
+def test_conv_engine_matches_lax(K, S, H):
+    """Forward parity of both backends (pure-jnp oracle and the interpret
+    Pallas engine) against lax.conv, in NHWC and emit_cells out modes."""
+    cd = conv_same_dims(K, S, H)
+    x, w = _data(K, H)
+    want = _lax_conv(x, w, cd)
+    pk = ops.prepack_conv(w, cd)
+    got_ref = ops.winograd_conv2d_packed(x, pk, cd, backend="ref")
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+    got_pl = ops.winograd_conv2d_packed(x, pk, cd, interpret=True, **IB)
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+    # emit_cells is a pure relayout of the same pixels, crop-window zeroed
+    emitted = ops.winograd_conv2d_packed(
+        x, pk, cd, interpret=True, emit_cells=True, **IB
+    )
+    HO, WO = cd.out_size(H), cd.out_size(H)
+    ty, tx = -(-HO // 2), -(-WO // 2)
+    c = emitted[:, :ty, :tx, :, : w.shape[-1]]
+    img = jnp.transpose(
+        c.reshape(2, ty, tx, 2, 2, w.shape[-1]), (0, 1, 3, 2, 4, 5)
+    ).reshape(2, ty * 2, tx * 2, w.shape[-1])
+    np.testing.assert_allclose(np.asarray(img[:, :HO, :WO]), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("K,S,H", [(4, 2, 8), (3, 1, 8), (3, 2, 8)])
+def test_conv_engine_grads_match_lax(K, S, H):
+    """jax.grad through the fused-epilogue conv engine (custom VJP -> Pallas
+    backward engines) == lax.conv autodiff for x, the packed weights (via
+    the linear pack's chain rule), scale, and bias."""
+    cd = conv_same_dims(K, S, H)
+    x, w = _data(K, H)
+    pk = ops.prepack_conv(w, cd)
+    rng = np.random.default_rng(1)
+    sc = jnp.asarray(rng.standard_normal(w.shape[-1]), jnp.float32)
+    bi = jnp.asarray(rng.standard_normal(w.shape[-1]), jnp.float32)
+
+    def loss_pl(xx, ww, s, b):
+        y = ops.winograd_conv2d_packed(
+            xx, ops.PackedConv(ww, pk.inv), cd, interpret=True,
+            epilogue="leaky_relu", scale=s, bias=b, **IB,
+        )
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    def loss_lax(xx, wraw, s, b):
+        y = _lax_conv(xx, wraw, cd) * s + b
+        return jnp.sum(jnp.where(y >= 0, y, 0.2 * y).astype(jnp.float32) ** 2)
+
+    g_pl = jax.grad(loss_pl, argnums=(0, 1, 2, 3))(x, pk.ww, sc, bi)
+    g_lx = jax.grad(loss_lax, argnums=(0, 1, 2, 3))(x, w, sc, bi)
+    _, pack_vjp = jax.vjp(lambda wraw: ops.pack_conv_weights(wraw, cd), w)
+    got = (g_pl[0], pack_vjp(g_pl[1])[0], g_pl[2], g_pl[3])
+    for a, b in zip(got, g_lx):
+        scale = float(jnp.abs(b).max()) + 1e-9
+        np.testing.assert_allclose(
+            np.asarray(a) / scale, np.asarray(b) / scale, atol=2e-4
+        )
+
+
+def test_conv_chain_matches_per_layer():
+    """K4S2 -> K4S2 conv-to-conv chain (emit_cells + conv_cells_to_next:
+    with m = S = 2 each output cell IS a phase pair of the next layer) ==
+    two lax convs, forward and grads."""
+    H = 16
+    cd1 = conv_same_dims(4, 2, H)
+    HO1 = cd1.out_size(H)
+    cd2 = conv_same_dims(4, 2, HO1)
+    assert ops.conv_chain_aligned(cd1, cd2)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, H, H, 3)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((4, 4, 3, 6)), jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((4, 4, 6, 5)), jnp.float32)
+    p1, p2 = ops.prepack_conv(w1, cd1), ops.prepack_conv(w2, cd2)
+
+    def chain(xx, ww1, ww2):
+        e = ops.winograd_conv2d_packed(
+            xx, ops.PackedConv(ww1, p1.inv), cd1, interpret=True,
+            emit_cells=True, epilogue="leaky_relu", **IB,
+        )
+        c2 = ops.conv_cells_to_next(e, cd1, cd2, (HO1, HO1))
+        return ops.winograd_conv2d_cells(
+            c2, ops.PackedConv(ww2, p2.inv), cd2, (HO1, HO1),
+            interpret=True, **IB,
+        )
+
+    def lax_chain(xx, wa, wb):
+        y1 = _lax_conv(xx, wa, cd1)
+        return _lax_conv(jnp.where(y1 >= 0, y1, 0.2 * y1), wb, cd2)
+
+    want = lax_chain(x, w1, w2)
+    got = chain(x, p1.ww, p2.ww)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+    g = jax.grad(lambda a: jnp.sum(chain(a, p1.ww, p2.ww) ** 2))(x)
+    gl = jax.grad(lambda a: jnp.sum(lax_chain(a, w1, w2) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gl),
+                               atol=2e-4, rtol=2e-3)
+    # the misaligned stride-1 hop (K3S1 SAME: pad 1 not cell-aligned) refuses
+    cd3 = conv_same_dims(3, 1, cd2.out_size(HO1))
+    assert not ops.conv_chain_aligned(cd2, cd3)
+    with pytest.raises(ValueError):
+        ops.conv_cells_to_next(got, cd2, cd3, (4, 4))
+
+
+@pytest.mark.parametrize("dims", [
+    DeconvDims(5, 2, 2, 1), DeconvDims(4, 2, 1, 0), DeconvDims(3, 1, 1, 0),
+    conv_same_dims(4, 2, 8), conv_same_dims(3, 1, 8), conv_same_dims(3, 2, 8),
+], ids=lambda d: f"{type(d).__name__}-K{d.kernel}S{d.stride}")
+def test_unpack_weights_roundtrip(dims):
+    """pack -> unpack (least squares through G) recovers raw weights for
+    both families (the checkpoint-export inverse, ROADMAP item)."""
+    rng = np.random.default_rng(3)
+    K = dims.kernel
+    w = jnp.asarray(rng.standard_normal((K, K, 4, 6)), jnp.float32)
+    pack = ops.pack_conv_weights if isinstance(dims, ConvDims) else ops.pack_weights
+    back = ops.unpack_weights(pack(w, dims), dims)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(w),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_autotune_conv_sweeps_epilogue_axes():
+    """The conv autotuner times fused configs across the epilogue/chain
+    output axes and a full AdamW step keeps the packed leaf updated."""
+    from repro.kernels.autotune import EngineConfig, autotune_conv, conv_candidates
+
+    cands = conv_candidates(block_ty=(2,))
+    assert any(c.epilogue == "leaky_relu" and c.emit_cells for c in cands)
+    cd = conv_same_dims(4, 2, 8)
+    rows = autotune_conv(
+        cd, (1, 8, 8, 4), 4, mode="step", repeats=1,
+        candidates=[
+            EngineConfig(True, block_ty=2, block_n=8, block_m=8, prepack=True),
+            EngineConfig(True, block_ty=2, block_n=8, block_m=8, prepack=True,
+                         epilogue="leaky_relu"),
+            None,  # the lax baseline rides the same sweep
+        ],
+    )
+    assert any(r["ok"] for r in rows)
+    assert all(np.isfinite(r["ms"]) for r in rows if r["ok"])

@@ -246,9 +246,9 @@ def test_chained_generator_matches_per_layer():
 
 
 def test_chained_impl_trains_per_layer():
-    """Training mode with a chained impl falls back to the per-layer engine
-    (batch-stat BN needs materialized layer outputs) and grads flow into the
-    packed leaves."""
+    """Training mode with a chained impl runs the two-pass cell-domain BN
+    trunk (batch stats computed on the resident cell tensor — no per-layer
+    fallback) and grads flow into the packed leaves."""
     from repro.models import gan as G
 
     cfg = _mini_chain_cfg("pallas_chained_interpret")

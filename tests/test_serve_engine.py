@@ -112,6 +112,34 @@ def test_gan_queue_rejects_oversized_request():
         eng.try_admit(big)
 
 
+def test_gan_queue_deadline_window():
+    """Deadline-aware admission: try_admit(deadline_ms=) opens a bounded
+    batching window — poll() holds while the window is open, serves when
+    the earliest deadline expires, when the row pool fills, or when an
+    immediate (no-deadline) request joins the batch."""
+    eng, _, cfg = _gan_engine(batch=4)
+    z1 = jax.random.normal(jax.random.PRNGKey(1), (1, cfg.z_dim))
+    r = GanRequest(rid=0, z=z1)
+    assert eng.try_admit(r, deadline_ms=50.0, now=0.0)
+    assert eng.window_open(now=10.0) and eng.poll(now=10.0) == []
+    done = eng.poll(now=60.0)  # deadline expired -> serve
+    assert [q.rid for q in done] == [0] and r.done
+    # the pool filling closes the window before any deadline
+    zs = [jax.random.normal(jax.random.PRNGKey(i + 2), (2, cfg.z_dim))
+          for i in range(2)]
+    assert eng.try_admit(GanRequest(rid=1, z=zs[0]), deadline_ms=1e6, now=0.0)
+    assert eng.poll(now=0.0) == []
+    assert eng.try_admit(GanRequest(rid=2, z=zs[1]), deadline_ms=1e6, now=0.0)
+    assert [q.rid for q in eng.poll(now=0.0)] == [1, 2]  # 4/4 rows
+    # a mixed batch honors its most impatient member
+    assert eng.try_admit(GanRequest(rid=3, z=z1), deadline_ms=1e6, now=0.0)
+    assert eng.try_admit(GanRequest(rid=4, z=z1))  # FIFO default: immediate
+    assert [q.rid for q in eng.poll(now=0.0)] == [3, 4]
+    # the window state resets after a step
+    assert eng.try_admit(GanRequest(rid=5, z=z1), deadline_ms=50.0, now=100.0)
+    assert eng.poll(now=120.0) == [] and [q.rid for q in eng.poll(now=151.0)] == [5]
+
+
 def test_gan_engine_defaults_to_chained_for_pallas_impls():
     """The serve engine upgrades pallas impls to the chained pipeline by
     default (and leaves ref impls bit-exact per-layer); chained=False opts
