@@ -20,9 +20,14 @@ trajectory.  Three checks:
   * the ``discriminator`` and full-``adversarial``-step sections gate the
     same way: per-arch lax/ref/engine times under ``--rel-tol`` and the
     packed+chained engine-family geomeans under ``--geomean-tol``;
+  * the 1D-engine ``conv1d`` section (SSM prefill conv + audio deconv
+    layer, engine vs lax) gates per (case, variant) under its own
+    ``--conv1d-rel-tol`` (default ``--rel-tol``) — its smoke shapes are the
+    smallest in the report, so the slack is usually set wider;
   * the sharded per-device-count step times gate under the same
     ``--rel-tol``; ``--sharded-only`` restricts the gate to that table (the
-    multi-device CI job) and then treats missing device counts as failures.
+    multi-device CI job) and then treats missing device counts as failures
+    (the conv1d gate, like the per-layer ones, is skipped in that job).
 
 Interpret-mode CPU timings on shared runners are noisy, so the per-time
 tolerance is deliberately loose by default (2.5x) — it catches the
@@ -74,6 +79,19 @@ def _generator_times(report: dict) -> dict[tuple, float]:
 # the discriminator / full-adversarial-step sections share one row shape
 _DISC_VARIANTS = ("lax", "ref", "pallas_raw", "pallas")
 
+_CONV1D_VARIANTS = ("lax", "ref", "pallas")
+
+
+def _conv1d_times(report: dict) -> dict[tuple, float]:
+    """Flatten the 1D-engine section to {(case, variant): ms}."""
+    out: dict[tuple, float] = {}
+    for row in report.get("conv1d", {}).get("cases", []):
+        for variant in _CONV1D_VARIANTS:
+            ms = row.get(f"{variant}_ms")
+            if ms is not None:
+                out[(row["name"], variant)] = float(ms)
+    return out
+
 
 def _section_times(report: dict, section: str) -> dict[tuple, float]:
     """Flatten a per-arch variant section ("discriminator"/"adversarial")
@@ -112,6 +130,7 @@ def compare(
     rel_tol: float = 1.5,
     geomean_tol: float = 0.25,
     sharded_only: bool = False,
+    conv1d_rel_tol: float | None = None,
 ) -> list[str]:
     """Returns the list of regression messages (empty = gate passes).
 
@@ -194,6 +213,24 @@ def compare(
                         f"{b_ms * (1 + rel_tol):.2f}ms"
                     )
 
+        # 1D engine section: every baseline case/variant must still run,
+        # under its own (usually looser) tolerance — the conv1d smoke shapes
+        # are tiny, so their absolute times carry the most runner noise
+        c_tol = rel_tol if conv1d_rel_tol is None else conv1d_rel_tol
+        base_c, fresh_c = _conv1d_times(baseline), _conv1d_times(fresh)
+        for key, b_ms in sorted(base_c.items()):
+            f_ms = fresh_c.get(key)
+            name = "conv1d/" + "/".join(str(k) for k in key)
+            if f_ms is None:
+                failures.append(
+                    f"{name}: baseline ran in {b_ms:.2f}ms, fresh failed or is missing"
+                )
+            elif f_ms > b_ms * (1 + c_tol):
+                failures.append(
+                    f"{name}: {f_ms:.2f}ms > {b_ms:.2f}ms * (1 + {c_tol}) = "
+                    f"{b_ms * (1 + c_tol):.2f}ms"
+                )
+
     b_sh = baseline.get("sharded", {}).get("step_ms", {})
     f_sh = fresh.get("sharded", {}).get("step_ms", {})
     if sharded_only and not b_sh:
@@ -234,6 +271,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--sharded-only", action="store_true",
                     help="gate only the per-device-count sharded step times "
                          "(strict about missing entries)")
+    ap.add_argument("--conv1d-rel-tol", type=float, default=None,
+                    help="per-time slack for the 1D-engine section "
+                         "(default: --rel-tol); its smoke shapes are tiny, "
+                         "so the times carry the most runner noise")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -243,7 +284,7 @@ def main(argv: list[str] | None = None) -> int:
 
     failures = compare(
         baseline, fresh, rel_tol=args.rel_tol, geomean_tol=args.geomean_tol,
-        sharded_only=args.sharded_only,
+        sharded_only=args.sharded_only, conv1d_rel_tol=args.conv1d_rel_tol,
     )
     n_base = len(baseline.get("sharded", {}).get("step_ms", {})) if args.sharded_only \
         else len(_times(baseline))

@@ -432,6 +432,82 @@ def bench_generator(
     return out
 
 
+def bench_conv1d(*, interpret: bool, smoke: bool, repeats: int = 3) -> dict:
+    """The 1D engine's two consumers, engine vs the XLA baseline: the SSM
+    prefill causal conv (dense K=4 stride-1 — the Mamba ``d_conv`` shape)
+    and one audio-decoder K4S2 deconv layer.  Variants per case: ``lax``
+    (XLA conv), ``ref`` (pure-JAX 1D engine oracle), ``pallas`` (the 1D
+    Pallas engine; interpret mode on CPU).  Timed via the interleaved-rounds
+    harness so runner noise hits every variant equally."""
+    from repro.core.tdc import DeconvDims
+    from repro.kernels import ops
+    from repro.models.gan import lax_deconv1d
+
+    kw = dict(ops.INTERPRET_BLOCKS_1D, interpret=True) if interpret else {}
+    rng = np.random.default_rng(0)
+    if smoke:  # seconds-scale on CPU interpret
+        conv_shape, conv_out = (1, 64, 8), 8
+        dec_shape, dec_out = (1, 32, 8), 8
+    else:
+        conv_shape, conv_out = (8, 2048, 256), 256
+        dec_shape, dec_out = (8, 1024, 128), 64
+    K = 4
+    dims = DeconvDims(kernel=4, stride=2, padding=1)
+    out = {"interpret": interpret, "smoke": smoke, "cases": []}
+
+    def one_case(name, shape, fns, args_of):
+        times, errors = _interleaved_times(fns, args_of, repeats=repeats)
+        row = {"name": name, "shape": list(shape)}
+        for v in fns:
+            if v in times:
+                row[f"{v}_ms"] = times[v]
+            else:
+                row[f"{v}_error"] = errors[v]
+        if "lax" in times and "pallas" in times:
+            row["engine_vs_lax"] = times["lax"] / times["pallas"]
+        out["cases"].append(row)
+        cells = ",".join(
+            f"{v}={row[f'{v}_ms']:.2f}" if f"{v}_ms" in row else f"{v}=FAIL"
+            for v in fns
+        )
+        print(f"train_step,conv1d,{name},{cells}")
+
+    # SSM prefill conv: dense channels so engine and lax do the same flops
+    x = jnp.asarray(rng.standard_normal(conv_shape), jnp.float32)
+    w = jnp.asarray(
+        rng.standard_normal((K, conv_shape[2], conv_out)), jnp.float32
+    )
+    pk = ops.prepack_conv1d(w, K)
+    one_case(
+        "ssm_prefill_conv_k4", conv_shape,
+        {
+            "lax": jax.jit(lambda x: jax.lax.conv_general_dilated(
+                x, w, (1,), [(K - 1, 0)],
+                dimension_numbers=("NHC", "HIO", "NHC"))),
+            "ref": lambda x: ops.winograd_conv1d_packed(x, pk, K, backend="ref"),
+            "pallas": lambda x: ops.winograd_conv1d_packed(x, pk, K, **kw),
+        },
+        lambda n: (x,),
+    )
+
+    # audio decoder upsampling layer: 1D TDC deconv, L -> 2L
+    xd = jnp.asarray(rng.standard_normal(dec_shape), jnp.float32)
+    wd = jnp.asarray(
+        rng.standard_normal((dims.kernel, dec_shape[2], dec_out)), jnp.float32
+    )
+    pkd = ops.prepack_deconv1d(wd, dims)
+    one_case(
+        "audio_deconv_k4s2", dec_shape,
+        {
+            "lax": jax.jit(lambda x: lax_deconv1d(x, wd, dims)),
+            "ref": lambda x: ops.winograd_deconv1d_packed(x, pkd, dims, backend="ref"),
+            "pallas": lambda x: ops.winograd_deconv1d_packed(x, pkd, dims, **kw),
+        },
+        lambda n: (xd,),
+    )
+    return out
+
+
 def bench_sharded(
     requested: int, *, interpret: bool, smoke: bool, repeats: int = 3
 ) -> dict:
@@ -571,6 +647,9 @@ def main(argv: list[str] | None = None) -> dict:
         )
         report["adversarial"] = bench_adversarial(
             archs, interpret=interpret, smoke=args.smoke, repeats=args.repeats
+        )
+        report["conv1d"] = bench_conv1d(
+            interpret=interpret, smoke=args.smoke, repeats=args.repeats
         )
     if args.devices:
         report["sharded"] = bench_sharded(

@@ -22,6 +22,16 @@ class DeconvSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class Deconv1dSpec:
+    """One layer of a MusicGen-style audio deconv decoder (1D TDC upsample)."""
+
+    c_in: int
+    c_out: int
+    dims: DeconvDims  # per-axis scalar geometry, reused 1D (K_D, S, P, OP)
+    act: str = "relu"  # relu | leaky_relu | tanh | none
+
+
+@dataclasses.dataclass(frozen=True)
 class ConvSpec:
     c_in: int
     c_out: int

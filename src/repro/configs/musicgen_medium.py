@@ -1,6 +1,8 @@
 """musicgen-medium [arXiv:2306.05284]: decoder-only over EnCodec tokens
 (vocab 2048); the EnCodec codec frontend is a stub — token ids in."""
-from .base import LMConfig
+from repro.core.tdc import DeconvDims
+
+from .base import Deconv1dSpec, LMConfig
 
 CONFIG = LMConfig(
     arch_id="musicgen-medium",
@@ -8,3 +10,17 @@ CONFIG = LMConfig(
     d_ff=6144, vocab=2048,
     mlp="gelu", norm="layernorm", family="audio", subquadratic=False,
 )
+
+
+def audio_decoder(width: int = 64) -> tuple[Deconv1dSpec, ...]:
+    """EnCodec-style 1D deconv decoder stack: K4S2 upsampling layers (each
+    doubles the sequence length), latent -> waveform.  Every layer is the
+    1D engine's K4S2 TDC geometry — per sub-filter C(2) = 3 of n = 4
+    positions, 2x interleave in the finalize.  ``width`` scales channel
+    counts (tests and the CPU smoke bench shrink it)."""
+    k4s2 = DeconvDims(kernel=4, stride=2, padding=1)
+    return (
+        Deconv1dSpec(width * 4, width * 2, k4s2, act="relu"),
+        Deconv1dSpec(width * 2, width, k4s2, act="relu"),
+        Deconv1dSpec(width, 1, k4s2, act="tanh"),
+    )

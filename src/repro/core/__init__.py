@@ -1,5 +1,15 @@
 """Core: the paper's contribution — TDC + Winograd deconvolution."""
-from .tdc import DeconvDims, SubFilterPlan, plan, decompose_weights, tdc_deconv2d
+from .tdc import (
+    DeconvDims,
+    SubFilterPlan,
+    SubFilterPlan1D,
+    plan,
+    plan_1d,
+    decompose_weights,
+    decompose_weights_1d,
+    tdc_deconv1d,
+    tdc_deconv2d,
+)
 from .winograd import WinogradTransform, get_transform, f23
 from .winograd_deconv import winograd_deconv2d, transform_weights
 from .baselines import standard_deconv2d, zero_padded_deconv2d, lax_deconv2d

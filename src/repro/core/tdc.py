@@ -42,9 +42,13 @@ from .winograd import WinogradTransform, get_transform
 __all__ = [
     "DeconvDims",
     "SubFilterPlan",
+    "SubFilterPlan1D",
     "plan",
+    "plan_1d",
     "decompose_weights",
+    "decompose_weights_1d",
     "tdc_deconv2d",
+    "tdc_deconv1d",
     "interleave_crop",
     "ConvDims",
     "ConvSubFilterPlan",
@@ -152,6 +156,95 @@ def decompose_weights(w: jax.Array, dims: DeconvDims, r: int = 3) -> jax.Array:
                     uy, ux = kc - 1 - ty, kc - 1 - tx
                     out = out.at[ry, rx, uy, ux].set(w[ry + S * ty, rx + S * tx])
     return out
+
+
+# ---------------------------------------------------------------------------
+# 1D TDC (audio deconv stacks).  DeconvDims is already per-axis scalar
+# geometry, so the 1D decomposition is the rank-1 restriction of the 2D one:
+# S flipped sub-kernels instead of S^2, depth-to-space along the single
+# sequence axis, and the structural masks come straight from the 1D
+# tap-presence vectors (no outer product).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SubFilterPlan1D:
+    """Structural description of the S sub-filters of a 1D deconv."""
+
+    dims: DeconvDims
+    r: int
+    taps_1d: tuple[tuple[int, ...], ...]  # per-rho: flipped tap presence (len r)
+    nnz_winograd: np.ndarray  # (S,) nonzero count of each transformed sub-filter
+    masks_winograd: np.ndarray  # (S, n) bool structural nonzero masks
+
+    @property
+    def c_total(self) -> int:
+        """Total multiplies per m-length output tile across the S
+        sub-filters (the 1D analogue of the paper's C(K_C))."""
+        return int(self.nnz_winograd.sum())
+
+
+def plan_1d(dims: DeconvDims, m: int = 2, r: int = 3) -> SubFilterPlan1D:
+    """Structural sparsity plan of a 1D deconv under F(m, r)."""
+    if dims.kc > r:
+        raise ValueError(
+            f"K_C={dims.kc} > r={r}: kernel {dims.kernel} stride {dims.stride} "
+            f"not expressible in F({m},{r}); use a larger r."
+        )
+    tf = get_transform(m, r)
+    S = dims.stride
+    pres = [_tap_presence_1d(dims, rho, r) for rho in range(S)]
+    masks = np.stack([tf.filter_mask1d(p) for p in pres]).astype(bool)
+    nnz = masks.sum(axis=1).astype(int)
+    taps = tuple(tuple(int(v) for v in p) for p in pres)
+    return SubFilterPlan1D(dims, r, taps, nnz, masks)
+
+
+def decompose_weights_1d(w: jax.Array, dims: DeconvDims, r: int = 3) -> jax.Array:
+    """Split deconv1d weights (K_D, N, M) into S correlation-ready
+    sub-kernels, flipped and zero-padded to (S, r, N, M)."""
+    K, S, kc = dims.kernel, dims.stride, dims.kc
+    if w.shape[0] != K:
+        raise ValueError(f"weight tap dim {w.shape[0]} != K_D={K}")
+    out = jnp.zeros((S, r, w.shape[1], w.shape[2]), dtype=w.dtype)
+    for rho in range(S):
+        for t in range(math.ceil((K - rho) / S)):
+            out = out.at[rho, kc - 1 - t].set(w[rho + S * t])
+    return out
+
+
+def tdc_deconv1d(
+    x: jax.Array, w: jax.Array, dims: DeconvDims, *, precision=jax.lax.Precision.HIGHEST
+) -> jax.Array:
+    """TDC-based deconv1d WITHOUT Winograd — the 1D oracle baseline.
+
+    x: (B, L, N); w: (K_D, N, M) deconv weights.  Runs S stride-1
+    cross-correlations with the flipped sub-kernels and interleaves.
+    Exactly equals the standard 1D transposed convolution.
+    """
+    S, kc = dims.stride, dims.kc
+    B, L, N = x.shape
+    M = w.shape[-1]
+    lj = dims.j_extent(L)
+    subw = decompose_weights_1d(w, dims, r=kc)  # (S, kc, N, M)
+    pad_r = max(0, lj + kc - 1 - (L + kc - 1))
+    xp = jnp.pad(x, ((0, 0), (kc - 1, pad_r), (0, 0)))
+    outs = []
+    for rho in range(S):
+        y = jax.lax.conv_general_dilated(
+            xp,
+            subw[rho],
+            window_strides=(1,),
+            padding="VALID",
+            dimension_numbers=("NHC", "HIO", "NHC"),
+            precision=precision,
+        )
+        outs.append(y[:, :lj, :])
+    sub_out = jnp.stack(outs)  # (S, B, LJ, M)
+    full = jnp.transpose(sub_out, (1, 2, 0, 3)).reshape(B, lj * S, M)
+    return jax.lax.dynamic_slice(
+        full, (0, dims.padding, 0), (B, dims.out_size(L), M)
+    )
 
 
 # ---------------------------------------------------------------------------

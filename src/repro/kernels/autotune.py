@@ -43,9 +43,9 @@ from . import ops
 
 __all__ = [
     "EngineConfig", "candidate_configs", "small_candidates",
-    "epilogue_candidates", "conv_candidates",
-    "autotune_deconv", "autotune_conv", "best_config",
-    "make_timed_fn", "make_timed_conv_fn", "time_one",
+    "epilogue_candidates", "conv_candidates", "conv1d_candidates",
+    "autotune_deconv", "autotune_conv", "autotune_conv1d", "best_config",
+    "make_timed_fn", "make_timed_conv_fn", "make_timed_conv1d_fn", "time_one",
 ]
 
 
@@ -368,6 +368,138 @@ def make_timed_conv_fn(cfg: Optional[EngineConfig], cdims, mode: str, interpret:
         return (x, p)
 
     return fn, make_args
+
+
+def conv1d_candidates(
+    block_ty: Sequence[int] = (32, 64, 128),
+    *,
+    prepack: bool = True,
+) -> list[EngineConfig]:
+    """Sweep grid for the 1D engine (audio deconv / SSM prefill conv): the
+    1D finalize has no tx axis, so the tile-row block is the only spatial
+    knob next to the (block_n, block_m) channel tiling."""
+    return [
+        EngineConfig(True, block_ty=bty, block_n=bn, block_m=bm, prepack=prepack)
+        for bty in block_ty
+        for bn in (128, 256)
+        for bm in (128, 256)
+    ]
+
+
+def make_timed_conv1d_fn(cfg: Optional[EngineConfig], geom, mode: str,
+                         interpret: bool):
+    """1D counterpart of ``make_timed_conv_fn``.  ``geom`` is either an int
+    kernel size (stride-1 causal conv — the SSM prefill shape) or a
+    ``DeconvDims`` (the audio decoder's upsampling deconv).  ``cfg=None``
+    times the ``lax.conv_general_dilated`` baseline for the same geometry."""
+    is_deconv = isinstance(geom, DeconvDims)
+    if cfg is None:
+        if is_deconv:
+            from repro.models.gan import lax_deconv1d
+
+            fwd = lambda x, p: lax_deconv1d(x, p, geom)
+        else:
+            def fwd(x, p):
+                return jax.lax.conv_general_dilated(
+                    x, p, (1,), [(geom - 1, 0)],
+                    dimension_numbers=("NHC", "HIO", "NHC"),
+                )
+
+        make_params = lambda w: w
+        get_leaf = lambda p: p
+        set_leaf = lambda p, leaf: leaf
+    else:
+        kw = dict(
+            interpret=interpret, block_ty=cfg.block_ty, block_n=cfg.block_n,
+            block_m=cfg.block_m, bwd_block_ty=cfg.bwd_block_ty,
+            bwd_block_n=cfg.bwd_block_n, bwd_block_m=cfg.bwd_block_m,
+        )
+        if is_deconv:
+            if cfg.prepack:
+                fwd = lambda x, p: ops.winograd_deconv1d_packed(x, p, geom, **kw)
+                make_params = lambda w: ops.prepack_deconv1d(w, geom)
+            else:
+                fwd = lambda x, p: ops.winograd_deconv1d(x, p, geom, **kw)
+                make_params = lambda w: w
+        else:
+            if cfg.prepack:
+                fwd = lambda x, p: ops.winograd_conv1d_packed(x, p, geom, **kw)
+                make_params = lambda w: ops.prepack_conv1d(w, geom)
+            else:
+                fwd = lambda x, p: ops.winograd_conv1d(x, p, **kw)
+                make_params = lambda w: w
+        if cfg.prepack:
+            get_leaf = lambda p: p.ww
+            set_leaf = lambda p, leaf: ops.PackedConv1d(leaf, p.inv)
+        else:
+            get_leaf = lambda p: p
+            set_leaf = lambda p, leaf: leaf
+
+    def loss(x, p):
+        return jnp.sum(fwd(x, p).astype(jnp.float32) ** 2)
+
+    if mode == "fwd":
+        fn = jax.jit(fwd)
+    elif mode == "grad":
+        fn = jax.jit(jax.value_and_grad(loss, argnums=1))
+    elif mode == "step":
+        def step(x, p, opt):
+            _, g = jax.value_and_grad(loss, argnums=1)(x, p)
+            leaf2, opt2, _ = adamw_update(get_leaf(p), get_leaf(g), opt, lr=1e-3)
+            return set_leaf(p, leaf2), opt2
+
+        fn = jax.jit(step)
+    else:
+        raise ValueError(mode)
+
+    def make_args(x, w):
+        p = make_params(w)
+        if mode == "step":
+            return (x, p, adamw_init(get_leaf(p)))
+        return (x, p)
+
+    return fn, make_args
+
+
+def autotune_conv1d(
+    geom,  # int kernel (stride-1 causal conv) | DeconvDims (1D deconv)
+    input_shape: tuple[int, int, int],  # (B, L, N)
+    c_out: int,
+    *,
+    dtype=jnp.float32,
+    candidates: Iterable[EngineConfig] | None = None,
+    interpret: bool | None = None,
+    repeats: int = 3,
+    seed: int = 0,
+    mode: str = "fwd",
+) -> list[dict]:
+    """Time every candidate 1D engine config for one conv1d/deconv1d layer
+    (``mode`` as in ``autotune_deconv``).  Returns rows sorted
+    fastest-first; infeasible configs kept with ok=False."""
+    if mode not in ("fwd", "grad", "step"):
+        raise ValueError(mode)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if candidates is None:
+        candidates = conv1d_candidates()
+    B, L, N = input_shape
+    K = geom.kernel if isinstance(geom, DeconvDims) else geom
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((B, L, N)), dtype)
+    w = jnp.asarray(rng.standard_normal((K, N, c_out)), dtype)
+    rows: list[dict] = []
+    for cfg in candidates:
+        try:
+            fn, make_args = make_timed_conv1d_fn(cfg, geom, mode, interpret)
+            dt = time_one(fn, make_args(x, w), repeats)
+            rows.append({"config": cfg, "ms": dt * 1e3, "ok": True, "error": ""})
+        except Exception as e:
+            rows.append(
+                {"config": cfg, "ms": float("inf"), "ok": False,
+                 "error": f"{type(e).__name__}: {e}"[:200]}
+            )
+    rows.sort(key=lambda r: r["ms"])
+    return rows
 
 
 def autotune_conv(

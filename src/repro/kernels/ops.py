@@ -25,7 +25,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tdc import ConvDims, DeconvDims, conv_plan, interleave_crop, plan
+from repro.core.tdc import (
+    ConvDims,
+    DeconvDims,
+    conv_plan,
+    decompose_weights_1d,
+    interleave_crop,
+    plan,
+    plan_1d,
+)
 from repro.core.winograd import get_transform
 from repro.core.winograd_deconv import (
     transform_conv_weights,
@@ -34,6 +42,11 @@ from repro.core.winograd_deconv import (
 )
 
 from . import ref as _ref
+from .engine import (
+    winograd_conv1d_fused_bwd_w,
+    winograd_conv1d_fused_bwd_x,
+    winograd_conv1d_fused_engine,
+)
 from .winograd_deconv import (
     EPILOGUE_ACTIVATIONS,
     winograd_conv_fused_bwd_w,
@@ -71,9 +84,22 @@ __all__ = [
     "conv_cells_to_next",
     "conv_chain_aligned",
     "cells_window_mask",
+    "conv1d_layout",
+    "packed_deconv1d_layout",
+    "pack_conv1d_weights",
+    "pack_deconv1d_weights",
+    "PackedConv1d",
+    "prepack_conv1d",
+    "prepack_deconv1d",
+    "conv1d_cells",
+    "winograd_conv1d",
+    "winograd_conv1d_packed",
+    "winograd_deconv1d",
+    "winograd_deconv1d_packed",
     "EPILOGUE_ACTIVATIONS",
     "INTERPRET_BLOCKS",
     "INTERPRET_BLOCKS_FUSED",
+    "INTERPRET_BLOCKS_1D",
 ]
 
 # CPU-feasible tilings for interpret-mode runs (models' *_interpret impls
@@ -84,6 +110,9 @@ INTERPRET_BLOCKS_FUSED = dict(block_ty=4, block_n=8, block_m=8)
 # count, and the trunk's tile-row extents (32 down to 1) fit one block, so
 # a taller tile-row block is strictly fewer interpret steps
 INTERPRET_BLOCKS_CONV = dict(block_ty=16, block_n=8, block_m=8)
+# 1D engines (audio/SSM): a single tile-row axis, so the same reasoning as
+# the conv engine — one tall block per sequence
+INTERPRET_BLOCKS_1D = dict(block_ty=16, block_n=8, block_m=8)
 
 
 @functools.lru_cache(maxsize=None)
@@ -1214,3 +1243,351 @@ def winograd_conv2d(
     """Convenience wrapper that re-packs ``w`` on every call; hot paths
     should ``prepack_conv`` once and call ``winograd_conv2d_packed``."""
     return winograd_conv2d_packed(x, prepack_conv(w, cdims), cdims, **kw)
+
+
+# ---------------------------------------------------------------------------
+# 1D Winograd (de)conv (audio/SSM stacks) — the rank-1 instantiations of the
+# engine core.  Stride-1 conv1d (the Mamba2 d_conv causal conv) is one
+# sub-filter spanning all n positions; 1D TDC deconv (the MusicGen-style
+# audio decoder) is the 1D analogue of the deconv path: S flipped
+# sub-kernels packed by structural nonzeros, outputs interleaving in the
+# engine finalize.  Same prepack-then-apply API as the 2D families; the
+# engine core is LINEAR here (activation/bias stay in XLA where jax.grad
+# handles them), so the custom VJP has only the three engine cotangents.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def conv1d_layout(kernel: int, m: int = 2):
+    """Static packed layout of a stride-1 conv1d under F(m, K): every one of
+    the n = m + K - 1 Winograd positions is kept (a dense 1D kernel has no
+    structural zeros), one sub-filter spans them all.
+
+    Returns (pos_idx, sub_slices, inv_packed_np, bt_mat, n).
+    """
+    tf = get_transform(m, kernel)
+    n = tf.n
+    AT = np.asarray(tf.AT)  # (m, n)
+    inv = np.ascontiguousarray(AT.T).astype(np.float32)  # (n, m)
+    bt_mat = tuple(tuple(float(v) for v in row) for row in tf.BT)
+    return tuple(range(n)), ((0, n),), inv, bt_mat, n
+
+
+@functools.lru_cache(maxsize=None)
+def packed_deconv1d_layout(dims: DeconvDims, m: int = 2, r: int = 3):
+    """Static packed layout of a 1D TDC deconv: position indices into the
+    shared n-space, per-residue sub-filter slices, and the packed 1D
+    inverse-transform rows (only the structurally nonzero positions of each
+    transformed sub-kernel are kept — the 1D analogue of Fig. 5's pack).
+
+    Returns (pos_idx, sub_slices, inv_packed_np, keeps).
+    """
+    sp = plan_1d(dims, m, r)
+    tf = get_transform(m, r)
+    n = tf.n
+    AT = np.asarray(tf.AT)
+    pos_idx: list[int] = []
+    sub_slices: list[tuple[int, int]] = []
+    inv_rows: list[np.ndarray] = []
+    keeps: list[list[int]] = []
+    for rho in range(dims.stride):
+        mask = sp.masks_winograd[rho]
+        keep = [u for u in range(n) if mask[u]]
+        lo = len(pos_idx)
+        for u in keep:
+            pos_idx.append(u)
+            inv_rows.append(AT[:, u])
+        sub_slices.append((lo, len(pos_idx)))
+        keeps.append(keep)
+    inv = (
+        np.stack(inv_rows).astype(np.float32)
+        if inv_rows
+        else np.zeros((0, m), np.float32)
+    )
+    return tuple(pos_idx), tuple(sub_slices), inv, keeps
+
+
+def pack_conv1d_weights(w: jax.Array, kernel: int, m: int = 2) -> jax.Array:
+    """Conv1d weights (K, N, M) -> packed Winograd-domain (n, N, M) via the
+    1D G-transform (dense: every position is structurally nonzero)."""
+    if w.shape[0] != kernel:
+        raise ValueError(f"weight tap dim {w.shape[0]} != K={kernel}")
+    tf = get_transform(m, kernel)
+    G = jnp.asarray(np.asarray(tf.G), jnp.float32)  # (n, r)
+    return jnp.einsum("ur,rnm->unm", G, w.astype(jnp.float32)).astype(w.dtype)
+
+
+def pack_deconv1d_weights(w: jax.Array, dims: DeconvDims, m: int = 2, r: int = 3) -> jax.Array:
+    """Deconv1d weights (K_D, N, M) -> packed Winograd-domain (C, N, M):
+    decompose into the S flipped sub-kernels, G-transform each, keep only
+    the structurally nonzero rows."""
+    pos_idx, sub_slices, _, keeps = packed_deconv1d_layout(dims, m, r)
+    tf = get_transform(m, r)
+    G = jnp.asarray(np.asarray(tf.G), jnp.float32)
+    subw = decompose_weights_1d(w, dims, r)  # (S, r, N, M)
+    wt = jnp.einsum("ur,srnm->sunm", G, subw.astype(jnp.float32))  # (S, n, N, M)
+    flat = wt.reshape(-1, *wt.shape[2:])  # (S*n, N, M)
+    idx = np.asarray(
+        [rho * tf.n + u for rho, keep in enumerate(keeps) for u in keep],
+        np.int32,
+    )
+    if idx.size == 0:
+        return jnp.zeros((0, *w.shape[1:]), w.dtype)
+    return jnp.take(flat, jnp.asarray(idx), axis=0).astype(w.dtype)
+
+
+class PackedConv1d(NamedTuple):
+    """Pre-packed Winograd-domain 1D (de)conv weights (a pytree) — the 1D
+    mirror of :class:`PackedDeconv`: ``ww`` is the trainable leaf, ``inv``
+    the static packed 1D inverse transform."""
+
+    ww: jax.Array  # (C, N, M)
+    inv: jax.Array  # (C, m) fp32
+
+
+def prepack_conv1d(w: jax.Array, kernel: int, m: int = 2) -> PackedConv1d:
+    """One-time 1D G-transform of raw stride-1 conv1d weights (K, N, M)."""
+    _, _, inv_np, _, _ = conv1d_layout(kernel, m)
+    return PackedConv1d(pack_conv1d_weights(w, kernel, m), jnp.asarray(inv_np))
+
+
+def prepack_deconv1d(w: jax.Array, dims: DeconvDims, m: int = 2, r: int = 3) -> PackedConv1d:
+    """One-time G-transform + zero-skipping pack of raw deconv1d weights."""
+    _, _, inv_np, _ = packed_deconv1d_layout(dims, m, r)
+    return PackedConv1d(pack_deconv1d_weights(w, dims, m, r), jnp.asarray(inv_np))
+
+
+def conv1d_cells(x_pad: jax.Array, ty: int, m: int, n: int) -> jax.Array:
+    """Padded (B, Lp, N) sequence -> the 1D engine's cell layout
+    (B, Gy, m, N): space-to-depth by the tile stride m (pure reshape)."""
+    B, Lp, N = x_pad.shape
+    q = -(-n // m)
+    gy = ty + q - 1
+    need = gy * m
+    x_pad = jnp.pad(x_pad, ((0, 0), (0, max(0, need - Lp)), (0, 0)))[:, :need, :]
+    return x_pad.reshape(B, gy, m, N)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=tuple(range(3, 11)))
+def _engine1d_vjp(
+    cells, ww, inv, bt_mat, pos_idx, sub_slices, m, n, ty, stride, interpret_blocks,
+):
+    """1D fused engine with a custom VJP: forward in "nlc" mode (the padded
+    interleave), dL/dww through the rank-agnostic Pallas domain backward,
+    dL/dcells through the same plus the cheap rank-1 host-side B-scatter."""
+    interpret, blocks = interpret_blocks
+    bty, bn, bm = blocks[:3]
+    return winograd_conv1d_fused_engine(
+        cells, ww, inv, bt_mat,
+        pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty,
+        block_ty=bty, block_n=bn, block_m=bm, interpret=interpret,
+        out_mode="nlc", stride=stride,
+    )
+
+
+def _engine1d_fwd(
+    cells, ww, inv, bt_mat, pos_idx, sub_slices, m, n, ty, stride, interpret_blocks,
+):
+    y = _engine1d_vjp(
+        cells, ww, inv, bt_mat, pos_idx, sub_slices, m, n, ty, stride,
+        interpret_blocks,
+    )
+    return y, (cells, ww, inv)
+
+
+def _engine1d_bwd(
+    bt_mat, pos_idx, sub_slices, m, n, ty, stride, interpret_blocks, res, g,
+):
+    cells, ww, inv = res
+    interpret, blocks = interpret_blocks
+    bwd_bt, bwd_bn, bwd_bm = blocks[3:]
+    B = cells.shape[0]
+    S = stride
+    # inverse of the nlc interleave (row m*S*j + S*p + rho) back to the
+    # scratch tile layout's sub-filter-major rows (rho*m + p)
+    g_scr = jnp.transpose(
+        g.reshape(B, ty, m, S, g.shape[-1]), (0, 1, 3, 2, 4)
+    ).reshape(B, ty, S * m, g.shape[-1])
+    dcells = winograd_conv1d_fused_bwd_x(
+        g_scr, ww, inv, bt_mat,
+        pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty,
+        gy=cells.shape[1], block_t=bwd_bt, block_n=bwd_bn, block_m=bwd_bm,
+        interpret=interpret,
+    )
+    if dcells.shape[-1] < cells.shape[-1]:
+        # a chained input carries block-padded trailing channels the engine
+        # contracts against zero weight rows — their cotangent is zero
+        dcells = jnp.pad(
+            dcells, ((0, 0),) * 3 + ((0, cells.shape[-1] - dcells.shape[-1]),)
+        )
+    dww = winograd_conv1d_fused_bwd_w(
+        cells, g_scr, inv, bt_mat,
+        pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty,
+        block_t=bwd_bt, block_n=bwd_bn, block_m=bwd_bm, interpret=interpret,
+    )[:, : ww.shape[1], :]  # chained inputs may be channel-padded past N
+    return dcells.astype(cells.dtype), dww.astype(ww.dtype), jnp.zeros_like(inv)
+
+
+_engine1d_vjp.defvjp(_engine1d_fwd, _engine1d_bwd)
+
+
+def _conv1d_pads(kernel: int, padding: str) -> tuple[int, int]:
+    if padding == "causal":
+        return kernel - 1, 0
+    if padding == "same":
+        return (kernel - 1) // 2, kernel - 1 - (kernel - 1) // 2
+    if padding == "valid":
+        return 0, 0
+    raise ValueError(padding)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "kernel", "m", "padding", "backend", "interpret",
+        "block_ty", "block_n", "block_m",
+        "bwd_block_ty", "bwd_block_n", "bwd_block_m",
+    ),
+)
+def winograd_conv1d_packed(
+    x: jax.Array,  # (B, L, N)
+    packed: PackedConv1d,
+    kernel: int,
+    *,
+    m: int = 2,
+    padding: str = "causal",  # "causal" | "same" | "valid"
+    backend: str = "pallas",
+    interpret: bool = False,
+    block_ty: int = 128,
+    block_n: int = 128,
+    block_m: int = 128,
+    bwd_block_ty: int | None = None,
+    bwd_block_n: int | None = None,
+    bwd_block_m: int | None = None,
+) -> jax.Array:
+    """Stride-1 Winograd conv1d from pre-packed weights: x (B, L, N) ->
+    (B, L_O, M) with L_O = L (causal/same) or L - K + 1 (valid).
+
+    ``causal`` left-pads K-1 (the SSM prefill convention: output t sees
+    inputs (t-K+1..t]); ``same`` splits the pad low-first like ``lax``.
+    The engine is linear — bias/activation belong outside, where ``jax.grad``
+    differentiates them for free and the custom VJP handles only the
+    Winograd-domain cotangents."""
+    pos_idx, sub_slices, _, bt_mat, n = conv1d_layout(kernel, m)
+    B, L, N = x.shape
+    pad_lo, pad_hi = _conv1d_pads(kernel, padding)
+    LO = L + pad_lo + pad_hi - (kernel - 1)
+    ty = -(-LO // m)
+    x_pad = jnp.pad(
+        x, ((0, 0), (pad_lo, max(0, m * (ty - 1) + n - (L + pad_lo))), (0, 0))
+    )
+    cells = conv1d_cells(x_pad, ty, m, n).astype(x.dtype)
+    if backend == "pallas":
+        blocks = (
+            block_ty, block_n, block_m,
+            block_ty if bwd_block_ty is None else bwd_block_ty,
+            block_n if bwd_block_n is None else bwd_block_n,
+            block_m if bwd_block_m is None else bwd_block_m,
+        )
+        y = _engine1d_vjp(
+            cells, packed.ww, packed.inv, bt_mat, pos_idx, sub_slices,
+            m, n, ty, 1, (interpret, blocks),
+        )
+    elif backend == "ref":
+        y = _ref.conv1d_engine_ref(
+            cells, packed.ww, packed.inv, bt_mat,
+            pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=n, ty=ty, stride=1,
+        )
+    else:
+        raise ValueError(backend)
+    return y[:, :LO, :].astype(x.dtype)
+
+
+def winograd_conv1d(
+    x: jax.Array,
+    w: jax.Array,  # (K, N, M) conv1d weights (cross-correlation taps)
+    *,
+    m: int = 2,
+    **kw,
+) -> jax.Array:
+    """Convenience wrapper that re-packs ``w`` on every call; hot paths
+    should ``prepack_conv1d`` once and call ``winograd_conv1d_packed``."""
+    return winograd_conv1d_packed(
+        x, prepack_conv1d(w, w.shape[0], m), w.shape[0], m=m, **kw
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "dims", "m", "r", "backend", "interpret",
+        "block_ty", "block_n", "block_m",
+        "bwd_block_ty", "bwd_block_n", "bwd_block_m",
+    ),
+)
+def winograd_deconv1d_packed(
+    x: jax.Array,  # (B, L, N)
+    packed: PackedConv1d,
+    dims: DeconvDims,
+    *,
+    m: int = 2,
+    r: int = 3,
+    backend: str = "pallas",
+    interpret: bool = False,
+    block_ty: int = 128,
+    block_n: int = 128,
+    block_m: int = 128,
+    bwd_block_ty: int | None = None,
+    bwd_block_n: int | None = None,
+    bwd_block_m: int | None = None,
+) -> jax.Array:
+    """1D TDC Winograd deconv from pre-packed weights: x (B, L, N) ->
+    (B, L_O, M) with L_O = S*(L-1) + K_D - 2P + OP — the audio decoder's
+    upsampling layer, running the S sub-correlations in the engine and the
+    stride-S interleave in its finalize."""
+    tf = get_transform(m, r)
+    pos_idx, sub_slices, _, _ = packed_deconv1d_layout(dims, m, r)
+    bt_mat = tuple(tuple(float(v) for v in row) for row in tf.BT)
+    B, L, N = x.shape
+    kc = dims.kc
+    LO = dims.out_size(L)
+    lj = dims.j_extent(L)
+    ty = -(-lj // m)
+    x_pad = jnp.pad(
+        x, ((0, 0), (kc - 1, max(0, m * (ty - 1) + tf.n - (L + kc - 1))), (0, 0))
+    )
+    cells = conv1d_cells(x_pad, ty, m, tf.n).astype(x.dtype)
+    if backend == "pallas":
+        blocks = (
+            block_ty, block_n, block_m,
+            block_ty if bwd_block_ty is None else bwd_block_ty,
+            block_n if bwd_block_n is None else bwd_block_n,
+            block_m if bwd_block_m is None else bwd_block_m,
+        )
+        y = _engine1d_vjp(
+            cells, packed.ww, packed.inv, bt_mat, pos_idx, sub_slices,
+            m, tf.n, ty, dims.stride, (interpret, blocks),
+        )
+    elif backend == "ref":
+        y = _ref.conv1d_engine_ref(
+            cells, packed.ww, packed.inv, bt_mat,
+            pos_idx=pos_idx, sub_slices=sub_slices, m=m, n=tf.n, ty=ty,
+            stride=dims.stride,
+        )
+    else:
+        raise ValueError(backend)
+    P = dims.padding
+    return y[:, P : P + LO, :].astype(x.dtype)
+
+
+def winograd_deconv1d(
+    x: jax.Array,
+    w: jax.Array,  # (K_D, N, M) deconv1d weights
+    dims: DeconvDims,
+    **kw,
+) -> jax.Array:
+    """Convenience wrapper that re-packs ``w`` on every call; hot paths
+    should ``prepack_deconv1d`` once and call ``winograd_deconv1d_packed``."""
+    return winograd_deconv1d_packed(x, prepack_deconv1d(w, dims, **{
+        k: v for k, v in kw.items() if k in ("m", "r")
+    }), dims, **kw)

@@ -16,6 +16,7 @@ __all__ = [
     "fused_pre_engine_ref",
     "fused_epilogue_engine_ref",
     "conv_engine_ref",
+    "conv1d_engine_ref",
     "epilogue_apply_ref",
     "interleave_tiles_ref",
     "winograd_deconv2d_ref",
@@ -246,6 +247,54 @@ def conv_engine_ref(
         img.reshape(B, ty, m, tx, m, M), (0, 1, 3, 2, 4, 5)
     ).reshape(B, ty, tx, m * m, M)
     return out.astype(cells.dtype)
+
+
+def conv1d_engine_ref(
+    cells: jax.Array,  # (B, Gy, phases*m, N) 1D cell layout
+    ww_packed: jax.Array,  # (C, N, M)
+    inv_packed: jax.Array,  # (C, m) fp32
+    bt_mat,  # (n, n) B^T
+    *,
+    pos_idx: tuple[int, ...],
+    sub_slices: tuple[tuple[int, int], ...],
+    m: int,
+    n: int,
+    ty: int,
+    stride: int,
+    phases: int = 1,
+) -> jax.Array:
+    """Oracle for the 1D fused engine's "nlc" mode: same cell layout in,
+    same padded interleave (B, ty*m*S, M) out — tile stitching and the
+    rank-1 B-transform done with plain jnp slices.  ``stride`` must equal
+    the sub-filter count (deconv) or 1 (conv)."""
+    B, Gy, pm, N = cells.shape
+    M = ww_packed.shape[-1]
+    q = -(-n // m)
+    need = ty + q - 1
+    if Gy < need:
+        cells = jnp.pad(cells, ((0, 0), (0, need - Gy), (0, 0), (0, 0)))
+    bt = jnp.asarray(bt_mat, jnp.float32)
+    xws = []
+    for s in range(phases):
+        blk = cells[:, :, s * m : (s + 1) * m, :]
+        tiles = jnp.concatenate(
+            [blk[:, dy : dy + ty] for dy in range(q)], axis=2
+        )[:, :, :n, :]  # (B, ty, n, N)
+        xws.append(
+            jnp.einsum(
+                "ua,btac->btuc", bt, tiles.astype(jnp.float32),
+                precision=jax.lax.Precision.HIGHEST,
+            ).astype(cells.dtype)
+        )
+    xw = xws[0] if phases == 1 else jnp.concatenate(xws, axis=2)
+    y = engine_ref(
+        xw.reshape(B * ty, phases * n, N), ww_packed, inv_packed,
+        pos_idx=pos_idx, sub_slices=sub_slices, m2=m,
+    )  # (T, S2*m, M)
+    y = y.reshape(B, ty, stride, m, M)
+    return jnp.transpose(y, (0, 1, 3, 2, 4)).reshape(
+        B, ty * m * stride, M
+    ).astype(cells.dtype)
 
 
 # ------------------------------------------------------------- backward

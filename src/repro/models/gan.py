@@ -724,3 +724,78 @@ def merge_bn_stats(params: Params, stats: Params) -> Params:
     for k, s in stats.items():
         out[k] = {**params[k], **s}
     return out
+
+
+# ------------------------------------------------------------ audio decoder
+# MusicGen/EnCodec-style waveform head: a stack of 1D K4S2 TDC deconv
+# layers (configs.musicgen_medium.audio_decoder) running on the 1D engine.
+# The engine call is linear — bias + activation run in XLA after it, so
+# jax.grad differentiates the epilogue for free and the custom VJP only
+# handles the Winograd-domain cotangents.
+
+_AUDIO_ACTS = {
+    "relu": jax.nn.relu,
+    "leaky_relu": L.leaky_relu,
+    "tanh": jnp.tanh,
+    "none": lambda x: x,
+}
+
+
+def lax_deconv1d(x: jax.Array, w: jax.Array, dims: DeconvDims) -> jax.Array:
+    """XLA baseline for the 1D TDC deconv: lhs-dilated correlation with the
+    flipped kernel; x (B, L, N), w (K_D, N, M) -> (B, L_O, M)."""
+    K, P = dims.kernel, dims.padding
+    return jax.lax.conv_general_dilated(
+        x, jnp.flip(w, 0),
+        window_strides=(1,),
+        padding=[(K - 1 - P, K - 1 - P + dims.output_padding)],
+        lhs_dilation=(dims.stride,),
+        dimension_numbers=("NHC", "HIO", "NHC"),
+    )
+
+
+def audio_decoder_init(key: jax.Array, specs, dtype=jnp.float32) -> Params:
+    """Params for a ``Deconv1dSpec`` stack: raw (K_D, N, M) deconv taps plus
+    a per-channel bias per layer (no batchnorm — audio decoders normalize
+    upstream of the waveform head)."""
+    keys = jax.random.split(key, max(1, len(specs)))
+    p: Params = {}
+    for i, s in enumerate(specs):
+        p[f"deconv{i}"] = {
+            "w": L.normal_init(keys[i], (s.dims.kernel, s.c_in, s.c_out), 0.02, dtype),
+            "b": jnp.zeros((s.c_out,), dtype),
+        }
+    return p
+
+
+def _audio_deconv_apply(impl: str, x, w, dims: DeconvDims):
+    if impl == "lax":
+        return lax_deconv1d(x, w, dims)
+    if impl == "tdc":
+        from repro.core.tdc import tdc_deconv1d
+
+        return tdc_deconv1d(x, w, dims)
+    if impl == "ref":
+        return kops.winograd_deconv1d(x, w, dims, backend="ref")
+    if impl == "pallas":
+        return kops.winograd_deconv1d(x, w, dims)
+    if impl == "pallas_interpret":
+        return kops.winograd_deconv1d(
+            x, w, dims, interpret=True, **kops.INTERPRET_BLOCKS_1D
+        )
+    raise ValueError(impl)
+
+
+def audio_decoder_apply(
+    params: Params, specs, x: jax.Array, *, impl: str = "pallas"
+) -> jax.Array:
+    """Run the deconv decoder stack: latent (B, L, c_in) -> waveform
+    (B, L * prod(strides), c_out).  ``impl`` picks the layer backend: 'lax'
+    (XLA lhs-dilated conv, the baseline), 'tdc' (sub-correlation oracle),
+    'ref' / 'pallas' / 'pallas_interpret' (the 1D Winograd engine) — all
+    numerically identical."""
+    for i, s in enumerate(specs):
+        wd = params[f"deconv{i}"]
+        x = _audio_deconv_apply(impl, x, wd["w"], s.dims)
+        x = _AUDIO_ACTS[s.act](x + wd["b"])
+    return x

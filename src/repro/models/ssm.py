@@ -50,6 +50,23 @@ def ssm_init(key, d_model: int, spec: SSMSpec, dtype=jnp.float32):
     }
 
 
+# Prefill causal-conv implementation: "direct" (XLA sliding sum, the
+# default) or "engine" / "engine_interpret" (the 1D Winograd engine via
+# ops.winograd_conv1d — the d_conv=4 kernel rides F(2,4)).  The engine path
+# expands the depthwise (K, C) weights to a diagonal dense (K, C, C) kernel,
+# so it is a wiring/parity demonstration of the 1D engine on a real
+# consumer, not a flop win; decode always keeps the O(1) cache step.
+_CONV_IMPL = "direct"
+
+
+def set_conv_impl(impl: str) -> None:
+    """Select the prefill causal-conv backend (module-wide)."""
+    global _CONV_IMPL
+    if impl not in ("direct", "engine", "engine_interpret"):
+        raise ValueError(impl)
+    _CONV_IMPL = impl
+
+
 def _causal_conv(x, conv, init_state=None):
     """Depthwise causal conv1d + SiLU.  x (B,T,C).  Returns (y, tail)."""
     w, b = conv["w"], conv["b"]
@@ -59,7 +76,20 @@ def _causal_conv(x, conv, init_state=None):
     else:
         pad = init_state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)
-    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    if _CONV_IMPL == "direct":
+        y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    else:
+        from repro.kernels import ops as _kops
+
+        wd = w[:, :, None] * jnp.eye(w.shape[1], dtype=w.dtype)
+        kw = (
+            dict(_kops.INTERPRET_BLOCKS_1D, interpret=True)
+            if _CONV_IMPL == "engine_interpret"
+            else {}
+        )
+        # valid conv on the already-left-padded sequence == causal on x,
+        # and honors a decode-prefill init_state tail
+        y = _kops.winograd_conv1d(xp, wd, padding="valid", **kw)
     return jax.nn.silu(y + b), xp[:, -(K - 1) :, :]
 
 

@@ -1,5 +1,6 @@
 from .sharding import (
     MeshAxes,
+    audio_decoder_param_specs,
     cache_specs,
     gan_batch_specs,
     gan_param_specs,

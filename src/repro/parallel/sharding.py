@@ -266,6 +266,29 @@ def gan_param_specs(cfg: GANConfig, mesh: Mesh, axes: Optional[MeshAxes] = None)
     return gen, disc, b.fallbacks
 
 
+def audio_decoder_param_specs(specs, mesh: Mesh, axes: Optional[MeshAxes] = None,
+                              packed: bool = False):
+    """PartitionSpec pytree matching gan.audio_decoder_init (raw (K_D, N, M)
+    1D deconv taps) or its Winograd-domain form (``packed=True``: the packed
+    1D (C, N, M) ``ww`` leaves from ``kernels.ops.prepack_deconv1d``).  Same
+    rule as the 2D generator: FSDP over N on the batch axes, TP over M on
+    "model" where it divides, leading K/C axis replicated (it is
+    grid-parallel inside the engine).  Returns (specs_tree, fallback_log)."""
+    axes = axes or MeshAxes.for_mesh(mesh)
+    b = SpecBuilder(mesh, axes)
+    tp = _tp_or_none(mesh, axes)
+    sp: dict[str, Any] = {}
+    for i, s in enumerate(specs):
+        n_ax = b.dim(f"audio.deconv{i}.N", s.c_in, axes.fsdp)
+        m_ax = b.dim(f"audio.deconv{i}.M", s.c_out, tp)
+        key = "ww" if packed else "w"
+        sp[f"deconv{i}"] = {
+            key: P(None, n_ax, m_ax),
+            "b": P(b.dim(f"audio.deconv{i}.b", s.c_out, tp)),
+        }
+    return sp, b.fallbacks
+
+
 def gan_batch_specs(cfg: GANConfig, batch: int, mesh: Mesh,
                     axes: Optional[MeshAxes] = None):
     """Specs for the GAN train batch: (z_or_image_spec, real_spec, fallbacks).

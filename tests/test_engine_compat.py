@@ -1,0 +1,46 @@
+"""Backward-compat surface of the engine-core split: every pre-split public
+name must still import from ``repro.kernels.winograd_deconv`` (the
+instantiation layer) and resolve to the shared engine core underneath."""
+import pytest
+
+OLD_NAMES = [
+    "winograd_domain_engine",
+    "winograd_fused_pre_engine",
+    "winograd_domain_engine_bwd_x",
+    "winograd_domain_engine_bwd_w",
+    "winograd_fused_pre_engine_bwd_x",
+    "winograd_fused_pre_engine_bwd_w",
+    "winograd_conv_fused_engine",
+    "winograd_conv_fused_bwd_x",
+    "winograd_conv_fused_bwd_w",
+    "LEAKY_SLOPE",
+    "EPILOGUE_ACTIVATIONS",
+]
+
+
+@pytest.mark.parametrize("name", OLD_NAMES)
+def test_old_import_path(name):
+    mod = __import__("repro.kernels.winograd_deconv", fromlist=[name])
+    assert hasattr(mod, name), name
+
+
+def test_domain_aliases_are_engine_core():
+    """The domain/fused names are straight aliases (not wrappers) of the
+    engine core, so call sites pay no indirection and patching either module
+    patches both."""
+    from repro.kernels import engine, winograd_deconv as wd
+
+    assert wd.winograd_domain_engine is engine.domain_engine
+    assert wd.winograd_fused_pre_engine is engine.fused_engine
+    assert wd.winograd_domain_engine_bwd_x is engine.domain_engine_bwd_x
+    assert wd.winograd_domain_engine_bwd_w is engine.domain_engine_bwd_w
+    assert wd.winograd_fused_pre_engine_bwd_x is engine.fused_engine_bwd_x
+    assert wd.winograd_fused_pre_engine_bwd_w is engine.fused_engine_bwd_w
+    assert wd.LEAKY_SLOPE is engine.LEAKY_SLOPE
+
+
+def test_all_covers_old_surface():
+    from repro.kernels import winograd_deconv as wd
+
+    missing = [n for n in OLD_NAMES if n not in wd.__all__ and not n.isupper()]
+    assert not missing, missing
