@@ -25,9 +25,17 @@ trajectory.  Three checks:
     ``--conv1d-rel-tol`` (default ``--rel-tol``) — its smoke shapes are the
     smallest in the report, so the slack is usually set wider;
   * the sharded per-device-count step times gate under the same
-    ``--rel-tol``; ``--sharded-only`` restricts the gate to that table (the
-    multi-device CI job) and then treats missing device counts as failures
-    (the conv1d gate, like the per-layer ones, is skipped in that job).
+    ``--rel-tol``; ``--sharded-only`` restricts the gate to the
+    multi-device tables (the multi-device CI job) and then treats missing
+    device counts as failures (the conv1d gate, like the per-layer ones,
+    is skipped in that job — the skipped sections are printed so the CI
+    log shows what was actually gated);
+  * the ``weak_scaling`` table (the communication-efficient overlapped +
+    compressed step at constant per-device batch) gates per device count
+    under its own ``--weak-scaling-rel-tol`` (default ``--rel-tol``) with
+    the same missing-baseline disarm guard the sharded gate has, plus a
+    baseline-free flatness check: the fresh per-device-normalized time at
+    the largest count must stay within 2x of the 1-device point.
 
 Interpret-mode CPU timings on shared runners are noisy, so the per-time
 tolerance is deliberately loose by default (2.5x) — it catches the
@@ -131,6 +139,7 @@ def compare(
     geomean_tol: float = 0.25,
     sharded_only: bool = False,
     conv1d_rel_tol: float | None = None,
+    weak_scaling_rel_tol: float | None = None,
 ) -> list[str]:
     """Returns the list of regression messages (empty = gate passes).
 
@@ -255,6 +264,45 @@ def compare(
                 f"sharded/devices={d}: {f_ms:.2f}ms > {b_ms:.2f}ms * "
                 f"(1 + {rel_tol}) = {b_ms * (1 + rel_tol):.2f}ms"
             )
+
+    # weak-scaling table: per-device-count times under their own tolerance,
+    # with the same missing-baseline disarm guard as the sharded gate
+    w_tol = rel_tol if weak_scaling_rel_tol is None else weak_scaling_rel_tol
+    b_wk = baseline.get("weak_scaling", {}).get("step_ms", {})
+    f_wk = fresh.get("weak_scaling", {}).get("step_ms", {})
+    if sharded_only and not b_wk:
+        failures.append(
+            "baseline has no weak_scaling table (regenerate it with --devices N)"
+        )
+    if sharded_only and b_wk and not f_wk:
+        failures.append(
+            "baseline has a weak_scaling table but the fresh report has none"
+        )
+    for d, b_ms in sorted(b_wk.items(), key=lambda kv: int(kv[0])):
+        f_ms = f_wk.get(d)
+        if f_ms is None:
+            if sharded_only:
+                failures.append(
+                    f"weak_scaling/devices={d}: baseline ran in {b_ms:.2f}ms, "
+                    "fresh is missing (device-count override not applied?)"
+                )
+            continue
+        if f_ms > b_ms * (1 + w_tol):
+            failures.append(
+                f"weak_scaling/devices={d}: {f_ms:.2f}ms > {b_ms:.2f}ms * "
+                f"(1 + {w_tol}) = {b_ms * (1 + w_tol):.2f}ms"
+            )
+    # flatness: baseline-free, same-run ratio (machine speed cancels) — the
+    # per-device-normalized time must not blow past 2x the 1-device point
+    norm = fresh.get("weak_scaling", {}).get("per_device_norm_ms", {})
+    if len(norm) >= 2:
+        counts = sorted(norm, key=int)
+        lo, hi = float(norm[counts[0]]), float(norm[counts[-1]])
+        if lo > 0 and hi > 2.0 * lo:
+            failures.append(
+                f"weak_scaling flatness: per-device time at d={counts[-1]} "
+                f"({hi:.2f}ms) exceeds 2x the d={counts[0]} point ({lo:.2f}ms)"
+            )
     return failures
 
 
@@ -275,6 +323,9 @@ def main(argv: list[str] | None = None) -> int:
                     help="per-time slack for the 1D-engine section "
                          "(default: --rel-tol); its smoke shapes are tiny, "
                          "so the times carry the most runner noise")
+    ap.add_argument("--weak-scaling-rel-tol", type=float, default=None,
+                    help="per-time slack for the weak_scaling table "
+                         "(default: --rel-tol)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -285,9 +336,25 @@ def main(argv: list[str] | None = None) -> int:
     failures = compare(
         baseline, fresh, rel_tol=args.rel_tol, geomean_tol=args.geomean_tol,
         sharded_only=args.sharded_only, conv1d_rel_tol=args.conv1d_rel_tol,
+        weak_scaling_rel_tol=args.weak_scaling_rel_tol,
     )
-    n_base = len(baseline.get("sharded", {}).get("step_ms", {})) if args.sharded_only \
-        else len(_times(baseline))
+    if args.sharded_only:
+        # say what was NOT gated, so the CI log shows the job's actual scope
+        skipped = [
+            s for s in ("layers", "generator", "discriminator",
+                        "adversarial", "conv1d")
+            if baseline.get(s)
+        ]
+        if baseline.get("prepacked_step_speedup_geomean") is not None:
+            skipped.append("prepacked_step_speedup_geomean")
+        print(
+            "compare_bench: --sharded-only gates sharded + weak_scaling; "
+            "skipped sections: " + (", ".join(skipped) if skipped else "none")
+        )
+    n_base = (
+        len(baseline.get("sharded", {}).get("step_ms", {}))
+        + len(baseline.get("weak_scaling", {}).get("step_ms", {}))
+    ) if args.sharded_only else len(_times(baseline))
     if failures:
         print(f"compare_bench: {len(failures)} regression(s) vs {args.baseline}:")
         for msg in failures:

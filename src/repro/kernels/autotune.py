@@ -239,7 +239,7 @@ def _mesh_shardings(mesh, cfg, mode, input_shape, c_out):
 
 def make_timed_fn(cfg: Optional[EngineConfig], dims: DeconvDims, mode: str, interpret: bool,
                   mesh=None, input_shape=None, c_out: Optional[int] = None,
-                  _shardings=None):
+                  _shardings=None, grad_compression: Optional[str] = None):
     """Build the callable the sweep times, per mode x variant.
 
     ``cfg=None`` times the pure-JAX reference path (no Pallas, no packing);
@@ -253,6 +253,13 @@ def make_timed_fn(cfg: Optional[EngineConfig], dims: DeconvDims, mode: str, inte
     weight leaf, sharded moments — so the timings (and therefore the block
     choices ``mode='step'`` picks) reflect the sharded layout the multi-
     device GAN train step runs under, not the single-device one.
+
+    ``grad_compression='int8'`` (``mode='step'`` + ``mesh`` only) instead
+    times a data-parallel shard_map step whose weight-grad all-reduce goes
+    through ``parallel.compression.compressed_psum`` with an error-feedback
+    residual threaded through the arguments — the layer-level mirror of the
+    compressed whole-model step, so block choices can be tuned under the
+    collective pattern they will actually run with.
     """
     if cfg is None:
         from repro.core.winograd_deconv import winograd_deconv2d
@@ -276,6 +283,53 @@ def make_timed_fn(cfg: Optional[EngineConfig], dims: DeconvDims, mode: str, inte
 
     def loss(x, p):
         return jnp.sum(fwd(x, p).astype(jnp.float32) ** 2)
+
+    if grad_compression is not None:
+        if grad_compression != "int8":
+            raise ValueError(f"unknown grad_compression: {grad_compression!r}")
+        if mode != "step" or mesh is None:
+            raise ValueError("grad_compression requires mode='step' and a mesh")
+        if input_shape is None:
+            raise ValueError("grad_compression timing needs input_shape")
+        from jax.sharding import PartitionSpec as P
+
+        from repro import compat
+        from repro.parallel.compression import compressed_psum
+        from repro.parallel.sharding import MeshAxes
+
+        axes = MeshAxes.for_mesh(mesh).batch
+        rows = 1
+        for a in axes:
+            rows *= mesh.shape[a]
+        if input_shape[0] % rows != 0:
+            raise ValueError(
+                f"batch {input_shape[0]} not divisible by {rows} shards"
+            )
+
+        # DP over the batch axes, replicated weights: the local weight grad
+        # is int8-all-reduced with error feedback, residual rides along with
+        # a leading shard dim (one row per shard).
+        def comm_step(x, p, opt, res):
+            _, g = jax.value_and_grad(loss, argnums=1)(x, p)
+            red, r2 = compressed_psum(get_leaf(g), res[0], axes, axis_size=rows)
+            leaf2, opt2, _ = adamw_update(get_leaf(p), red, opt, lr=1e-3)
+            return set_leaf(p, leaf2), opt2, r2[None]
+
+        xspec = P(axes, *([None] * (len(input_shape) - 1)))
+        fn = jax.jit(compat.shard_map(
+            comm_step, mesh=mesh,
+            in_specs=(xspec, P(), P(), P(axes)),
+            out_specs=(P(), P(), P(axes)),
+            check_vma=False,
+        ))
+
+        def make_args(x, w):
+            p = make_params(w)
+            leaf = get_leaf(p)
+            res = jnp.zeros((rows,) + tuple(leaf.shape), jnp.float32)
+            return (x, p, adamw_init(leaf), res)
+
+        return fn, make_args
 
     jit_kw: dict = {}
     if mesh is not None:
@@ -557,6 +611,7 @@ def autotune_deconv(
     seed: int = 0,
     mode: str = "fwd",
     mesh=None,
+    grad_compression: Optional[str] = None,
 ) -> list[dict]:
     """Time every candidate engine config for one deconv layer.
 
@@ -571,9 +626,16 @@ def autotune_deconv(
     1903.01811's point that the tile/parallelism design space must be
     re-explored per configuration applies to the mesh layout too, so block
     choices for the sharded train step should come from a sharded sweep.
+
+    ``grad_compression='int8'`` (``mode='step'`` with ``mesh`` only) times
+    the data-parallel step whose weight-grad all-reduce is the int8
+    error-feedback ``compressed_psum`` — the collective pattern the
+    compressed whole-model step runs with.
     """
     if mode not in ("fwd", "grad", "step"):  # fail fast: a bad mode is a
         raise ValueError(mode)  # caller error, not a per-config infeasibility
+    if grad_compression is not None and (mode != "step" or mesh is None):
+        raise ValueError("grad_compression requires mode='step' and a mesh")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if candidates is None:
@@ -588,16 +650,18 @@ def autotune_deconv(
     for cfg in candidates:
         row: dict = {"config": cfg}
         shardings = None
-        if mesh is not None:
+        if mesh is not None and grad_compression is None:
             # surface dims that silently fell back to replication — a sweep
             # that claims to measure the sharded layout must say when it
-            # actually timed a replicated one
+            # actually timed a replicated one (the compressed step is DP:
+            # replicated weights by construction, nothing to surface)
             shardings, fb = _mesh_shardings(mesh, cfg, mode, input_shape, c_out)
             row["sharding_fallbacks"] = fb
         try:
             fn, make_args = make_timed_fn(cfg, dims, mode, interpret,
                                           mesh=mesh, input_shape=input_shape,
-                                          c_out=c_out, _shardings=shardings)
+                                          c_out=c_out, _shardings=shardings,
+                                          grad_compression=grad_compression)
             args = make_args(x, w)
             dt = time_one(fn, args, repeats)
             rows.append({**row, "ms": dt * 1e3, "ok": True, "error": ""})

@@ -178,8 +178,33 @@ def gan_input_specs(cfg: GANConfig, mesh: Mesh, batch: int = GAN_TRAIN_BATCH):
     return (gp, dp, z, real), (gspecs, dspecs, zspec, rspec), meta
 
 
-def build_gan_step(cfg: GANConfig, mesh: Mesh):
+def build_gan_step(cfg: GANConfig, mesh: Mesh, *,
+                   overlap: bool = False,
+                   grad_compression: Optional[str] = None,
+                   bucket_bytes: Optional[int] = None):
+    """GSPMD GAN train step by default; ``overlap=True`` (or any
+    ``grad_compression``) delegates to the explicit-collective step from
+    ``parallel.overlap`` (prefetched gathers, bucketed backward-order grad
+    reduction, sync-BN, ZeRO block updates).  With int8 compression the
+    arg structs gain a ``CommState`` of error-feedback residuals between
+    the opt states and the batch."""
     from repro.train.trainer import gan_losses
+
+    if overlap or grad_compression is not None:
+        from repro.parallel import overlap as OV
+
+        kw = {} if bucket_bytes is None else {"bucket_bytes": bucket_bytes}
+        fn, meta = OV.build_gan_comm_step(
+            cfg, mesh, batch=GAN_TRAIN_BATCH,
+            grad_compression=grad_compression, dtype=PARAM_DTYPE, **kw,
+        )
+        (gp, dp, z, real), _, _ = gan_input_specs(cfg, mesh)
+        gopt = jax.eval_shape(adamw_init, gp)
+        dopt = jax.eval_shape(adamw_init, dp)
+        args = (gp, dp, gopt, dopt) + (
+            (meta["comm_struct"],) if meta["comm_struct"] is not None else ()
+        ) + (z, real)
+        return fn, args, meta
 
     (gp, dp, z, real), (gspecs, dspecs, zspec, rspec), meta = gan_input_specs(cfg, mesh)
     gopt = jax.eval_shape(adamw_init, gp)
@@ -188,18 +213,17 @@ def build_gan_step(cfg: GANConfig, mesh: Mesh):
     dosp = SH.opt_specs(dspecs)
 
     def step(gp_, dp_, go_, do_, z_, real_):
-        def g_obj(g):
-            gl, _, (gs, _, _) = gan_losses(g, dp_, cfg, z_, real_)
-            return gl, gs
+        # simultaneous G/D update from one shared forward — mirrors
+        # train.trainer.make_gan_step (two vjp pulls, one linearization)
+        def both(g, d):
+            gl, dl, (gs, ds, _) = gan_losses(g, d, cfg, z_, real_)
+            return (gl, dl), (gs, ds)
 
-        (gl, gs), ggrads = jax.value_and_grad(g_obj, has_aux=True)(gp_)
+        (gl, dl), vjp, _ = jax.vjp(both, gp_, dp_, has_aux=True)
+        one, zero = jnp.ones_like(gl), jnp.zeros_like(dl)
+        ggrads, _ = vjp((one, zero))
+        _, dgrads = vjp((zero, one))
         gp2, go2, _ = adamw_update(gp_, ggrads, go_, lr=2e-4, b1=0.5)
-
-        def d_obj(d):
-            _, dl, (_, ds, _) = gan_losses(gp2, d, cfg, z_, real_)
-            return dl, ds
-
-        (dl, ds), dgrads = jax.value_and_grad(d_obj, has_aux=True)(dp_)
         dp2, do2, _ = adamw_update(dp_, dgrads, do_, lr=2e-4, b1=0.5)
         return gp2, dp2, go2, do2, gl, dl
 

@@ -424,10 +424,15 @@ def _bn_act_cells(
     m = int(round(m2 ** 0.5))
     count = B * out_hw[0] * out_hw[1]
     mean = c.sum(axis=(0, 1, 2, 3)) / count
+    ex2 = (c * c).sum(axis=(0, 1, 2, 3)) / count
+    # sync-BN: inside a `L.bn_sync_axis` context (sharded train step) the
+    # moments pmean across the data shards — same global stats as the
+    # single-device step (equal-sized shards)
+    mean, ex2 = L.bn_sync_moments(mean, ex2)
     # one-pass E[x^2] - mean^2 can dip (slightly) negative under fp32
     # cancellation when |mean| >> std — clamp so rsqrt(var + eps) cannot
     # NaN a diverging run the per-layer two-pass var would survive
-    var = jnp.maximum((c * c).sum(axis=(0, 1, 2, 3)) / count - mean * mean, 0.0)
+    var = jnp.maximum(ex2 - mean * mean, 0.0)
     y = (c - mean) * jax.lax.rsqrt(var + eps)
     y = y * bn["scale"].astype(jnp.float32) + bn["bias"].astype(jnp.float32)
     y = L.ACTIVATIONS[act](y)

@@ -5,6 +5,7 @@ Params are nested dicts of jnp arrays so they shard/checkpoint trivially.
 """
 from __future__ import annotations
 
+import contextlib
 import math
 from typing import Callable
 
@@ -62,6 +63,44 @@ def rmsnorm(p, x, eps=1e-6):
 
 
 # ------------------------------------------------------------- batchnorm
+# Sync-BN hook: inside a `bn_sync_axis(axes)` context (entered while tracing
+# a shard_map body), training-mode batch statistics are pmean'd over the
+# given mesh axis name(s) so a data-sharded step computes the exact
+# single-device function.  Module-global because BN call sites are buried
+# under apply fns that don't thread mesh context.
+_BN_SYNC_AXES = None
+
+
+@contextlib.contextmanager
+def bn_sync_axis(axes):
+    """Cross-device batch statistics for training-mode BN.  ``axes`` is a
+    mesh axis name or tuple of names; the context must wrap the *tracing*
+    of the shard_map body (it is consulted at trace time, not run time)."""
+    global _BN_SYNC_AXES
+    prev = _BN_SYNC_AXES
+    _BN_SYNC_AXES = axes if axes else None
+    try:
+        yield
+    finally:
+        _BN_SYNC_AXES = prev
+
+
+def bn_sync_moments(mean, ex2):
+    """pmean (mean, E[x^2]) over the active sync axes; identity outside a
+    ``bn_sync_axis`` context.  Equal-sized shards make the pmean of
+    per-device means the global mean.  The two moments ride one fused
+    collective — on emulated/host meshes the per-collective rendezvous,
+    not the payload, is the cost."""
+    if _BN_SYNC_AXES is not None:
+        c = mean.shape[-1] if mean.ndim else mean.size
+        both = jax.lax.pmean(
+            jnp.concatenate([mean.reshape(-1), ex2.reshape(-1)]), _BN_SYNC_AXES
+        )
+        mean = both[:c].reshape(mean.shape)
+        ex2 = both[c:].reshape(ex2.shape)
+    return mean, ex2
+
+
 def batchnorm_init(c, dtype=jnp.float32):
     return {
         "scale": jnp.ones((c,), dtype),
@@ -76,8 +115,12 @@ def batchnorm(p, x, *, training: bool, momentum=0.9, eps=1e-5):
     if training:
         xf = x.astype(jnp.float32)
         axes = tuple(range(x.ndim - 1))
-        mu = xf.mean(axes)
-        var = xf.var(axes)
+        if _BN_SYNC_AXES is not None:
+            mu, ex2 = bn_sync_moments(xf.mean(axes), (xf * xf).mean(axes))
+            var = jnp.maximum(ex2 - mu * mu, 0.0)
+        else:
+            mu = xf.mean(axes)
+            var = xf.var(axes)
         new = {
             "mean": momentum * p["mean"] + (1 - momentum) * mu,
             "var": momentum * p["var"] + (1 - momentum) * var,

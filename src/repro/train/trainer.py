@@ -50,8 +50,13 @@ def gan_losses(gp, dp, cfg: GANConfig, z, real, *, training=True):
 
 
 def make_gan_step(cfg: GANConfig, lr=2e-4, b1=0.5, *, mesh=None,
-                  batch: Optional[int] = None, donate: bool = True):
-    """Returns jit'd alternating G/D update.
+                  batch: Optional[int] = None, donate: bool = True,
+                  overlap: bool = False, grad_compression: Optional[str] = None,
+                  bucket_bytes: Optional[int] = None):
+    """Returns the jit'd GAN train step: simultaneous G/D update from one
+    shared forward (two vjp pulls on a single linearization — one generator
+    forward per step, and no updated param is re-consumed within the step,
+    so the sharded variants need no mid-step re-gather).
 
     With ``mesh``, the step is NamedSharding-constrained end-to-end: params
     and AdamW moments follow ``parallel.sharding.gan_param_specs`` /
@@ -61,22 +66,47 @@ def make_gan_step(cfg: GANConfig, lr=2e-4, b1=0.5, *, mesh=None,
     size) is required then, for the divisibility check; ``donate=False``
     opts out of donation for callers that re-time the step on one argument
     set (benchmarks).
+
+    ``overlap=True`` (or any ``grad_compression``) swaps the GSPMD step for
+    the explicit-collective one from ``parallel.overlap``: prefetched FSDP
+    gathers, bucketed grad reduction in backward order (``bucket_bytes``
+    sets the target), ZeRO block updates, sync-BN.  With
+    ``grad_compression="int8"`` the step additionally takes/returns a
+    ``parallel.overlap.CommState`` (error-feedback residuals) between the
+    opt-state and batch arguments — init via ``overlap.init_comm_state``.
     """
+    if overlap or grad_compression is not None:
+        if mesh is None or batch is None:
+            raise ValueError("overlap/grad_compression require mesh and batch")
+        from repro.parallel import overlap as OV
+
+        kw = {} if bucket_bytes is None else {"bucket_bytes": bucket_bytes}
+        fn, _ = OV.build_gan_comm_step(
+            cfg, mesh, batch=batch, lr=lr, b1=b1,
+            grad_compression=grad_compression, donate=donate, **kw,
+        )
+        return fn
 
     def step(gp, dp, g_opt, d_opt, z, real):
-        def g_obj(gp_):
-            gl, _, (g_stats, _, _) = gan_losses(gp_, dp, cfg, z, real)
-            return gl, g_stats
+        # Simultaneous G/D update from ONE shared forward: both objectives
+        # come out of a single gan_losses evaluation, and the two gradient
+        # trees are two vjp calls on the same linearization.  One generator
+        # forward per step (the alternating form ran it twice), and the
+        # d-side cotangent through the generator is dead code XLA removes.
+        # Sharded, this is the comm win: no mid-step re-gather exists
+        # because no updated param is consumed again within the step.
+        def both(gp_, dp_):
+            gl, dl, (g_stats, d_stats, _) = gan_losses(gp_, dp_, cfg, z, real)
+            return (gl, dl), (g_stats, d_stats)
 
-        (g_loss, g_stats), g_grads = jax.value_and_grad(g_obj, has_aux=True)(gp)
+        (g_loss, d_loss), vjp, (g_stats, d_stats) = jax.vjp(
+            both, gp, dp, has_aux=True
+        )
+        one, zero = jnp.ones_like(g_loss), jnp.zeros_like(d_loss)
+        g_grads, _ = vjp((one, zero))
+        _, d_grads = vjp((zero, one))
         gp2, g_opt2, gm = adamw_update(gp, g_grads, g_opt, lr=lr, b1=b1)
         gp2 = G.merge_bn_stats(gp2, g_stats)
-
-        def d_obj(dp_):
-            _, dl, (_, d_stats, _) = gan_losses(gp2, dp_, cfg, z, real)
-            return dl, d_stats
-
-        (d_loss, d_stats), d_grads = jax.value_and_grad(d_obj, has_aux=True)(dp)
         dp2, d_opt2, dm = adamw_update(dp, d_grads, d_opt, lr=lr, b1=b1)
         dp2 = G.merge_bn_stats(dp2, d_stats)
         metrics = {
@@ -121,6 +151,9 @@ def train_gan(
     deconv_impl: Optional[str] = None,
     conv_impl: Optional[str] = None,
     mesh=None,
+    overlap: bool = False,
+    grad_compression: Optional[str] = None,
+    bucket_bytes: Optional[int] = None,
 ) -> dict:
     """End-to-end GAN training on synthetic data; restartable.
 
@@ -139,6 +172,12 @@ def train_gan(
     from ``make_gan_step(mesh=...)``.  ``batch`` must divide the mesh's
     ("pod","data") extent for the inputs to shard (otherwise they replicate,
     recorded in the spec fallback log).
+
+    ``overlap``/``grad_compression``/``bucket_bytes`` select the
+    communication-efficient step (see ``make_gan_step``); with int8
+    compression the error-feedback residuals live in loop state and reset
+    to zero on fault-restore (they are device-local, not checkpointed —
+    one step of bounded extra quantization error).
     """
     if deconv_impl is not None:
         cfg = dataclasses.replace(cfg, deconv_impl=deconv_impl)
@@ -159,6 +198,7 @@ def train_gan(
             gp, dp, g_opt, d_opt = tree["gp"], tree["dp"], tree["g_opt"], tree["d_opt"]
             start = last
 
+    comm = None
     if mesh is not None:
         from repro.parallel import sharding as SH
 
@@ -167,7 +207,17 @@ def train_gan(
         dp = jax.device_put(dp, SH.named(mesh, dsp))
         g_opt = jax.device_put(g_opt, SH.named(mesh, SH.opt_specs(gsp)))
         d_opt = jax.device_put(d_opt, SH.named(mesh, SH.opt_specs(dsp)))
-        step_fn = make_gan_step(cfg, mesh=mesh, batch=batch)
+        step_fn = make_gan_step(
+            cfg, mesh=mesh, batch=batch, overlap=overlap,
+            grad_compression=grad_compression, bucket_bytes=bucket_bytes,
+        )
+        if grad_compression is not None:
+            from repro.parallel import overlap as OV
+
+            ckw = {} if bucket_bytes is None else {"bucket_bytes": bucket_bytes}
+            comm = OV.init_comm_state(gp, dp, mesh, **ckw)
+    elif overlap or grad_compression is not None:
+        raise ValueError("overlap/grad_compression require mesh")
     else:
         step_fn = make_gan_step(cfg)
     metrics_hist = []
@@ -183,7 +233,12 @@ def train_gan(
                 seed, 1_000_000 + s, batch, cfg.img_hw
             )
             real = D.gan_batch(seed, s, batch, cfg.img_hw)
-            gp, dp, g_opt, d_opt, m = step_fn(gp, dp, g_opt, d_opt, z, real)
+            if comm is not None:
+                gp, dp, g_opt, d_opt, comm, m = step_fn(
+                    gp, dp, g_opt, d_opt, comm, z, real
+                )
+            else:
+                gp, dp, g_opt, d_opt, m = step_fn(gp, dp, g_opt, d_opt, z, real)
             if hooks.step_deadline_s and time.monotonic() - t0 > hooks.step_deadline_s:
                 raise TimeoutError(f"step {s} exceeded deadline (straggler)")
         except (RuntimeError, TimeoutError) as e:
@@ -203,6 +258,13 @@ def train_gan(
                 )
                 gp, dp, g_opt, d_opt = tree["gp"], tree["dp"], tree["g_opt"], tree["d_opt"]
                 s = last
+            if comm is not None:
+                # residuals are device-local and not checkpointed: restart
+                # the error feedback from zero (bounded one-step error)
+                from repro.parallel import overlap as OV
+
+                ckw = {} if bucket_bytes is None else {"bucket_bytes": bucket_bytes}
+                comm = OV.init_comm_state(gp, dp, mesh, **ckw)
             continue
         if (s + 1) % log_every == 0 or s + 1 == steps:
             host_m = {k2: float(v) for k2, v in m.items()}
