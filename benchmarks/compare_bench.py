@@ -35,7 +35,14 @@ trajectory.  Three checks:
     under its own ``--weak-scaling-rel-tol`` (default ``--rel-tol``) with
     the same missing-baseline disarm guard the sharded gate has, plus a
     baseline-free flatness check: the fresh per-device-normalized time at
-    the largest count must stay within 2x of the 1-device point.
+    the largest count must stay within 2x of the 1-device point;
+  * the ``serve`` section (the fig8 async multi-tenant load test) gates
+    per (arrival pattern, arch) row under its own ``--serve-rel-tol``
+    (default ``--rel-tol``): delivered throughput must not drop below
+    baseline / (1 + tol) and p95 end-to-end latency must not exceed
+    baseline * (1 + tol); passing ``--serve-rel-tol`` explicitly arms the
+    missing-baseline disarm guard (a baseline without a serve section
+    fails rather than silently gating nothing).
 
 Interpret-mode CPU timings on shared runners are noisy, so the per-time
 tolerance is deliberately loose by default (2.5x) — it catches the
@@ -113,6 +120,14 @@ def _section_times(report: dict, section: str) -> dict[tuple, float]:
     return out
 
 
+def _serve_rows(report: dict) -> dict[tuple, dict]:
+    """Flatten the serving load-test section to {(pattern, arch): row}."""
+    return {
+        (row["pattern"], row["arch"]): row
+        for row in report.get("serve", {}).get("rows", [])
+    }
+
+
 def _geomean_gate(baseline: dict, fresh: dict, section: str, key: str,
                   geomean_tol: float, failures: list[str]) -> None:
     """Shared headline-geomean regression check for one report section."""
@@ -140,6 +155,7 @@ def compare(
     sharded_only: bool = False,
     conv1d_rel_tol: float | None = None,
     weak_scaling_rel_tol: float | None = None,
+    serve_rel_tol: float | None = None,
 ) -> list[str]:
     """Returns the list of regression messages (empty = gate passes).
 
@@ -240,6 +256,51 @@ def compare(
                     f"{b_ms * (1 + c_tol):.2f}ms"
                 )
 
+        # serving load test: throughput floor + p95 ceiling per
+        # (arrival pattern, arch) row.  Passing --serve-rel-tol arms the
+        # missing-baseline guard — CI explicitly gating the serve section
+        # must fail if a refreshed baseline quietly dropped it.
+        s_tol = rel_tol if serve_rel_tol is None else serve_rel_tol
+        base_sv, fresh_sv = _serve_rows(baseline), _serve_rows(fresh)
+        if serve_rel_tol is not None and not base_sv:
+            failures.append(
+                "baseline has no serve section (regenerate it with "
+                "benchmarks.fig8_throughput --smoke --update)"
+            )
+        if base_sv and not fresh_sv:
+            failures.append(
+                "baseline has a serve section but the fresh report has none"
+            )
+        for key, b_row in sorted(base_sv.items()):
+            f_row = fresh_sv.get(key)
+            name = "serve/" + "/".join(str(k) for k in key)
+            if f_row is None:
+                failures.append(f"{name}: in baseline but missing from fresh report")
+                continue
+            b_thpt, f_thpt = b_row.get("throughput_rps"), f_row.get("throughput_rps")
+            if b_thpt:
+                if not f_thpt:
+                    failures.append(
+                        f"{name}: baseline delivered {b_thpt:.2f} rps, fresh "
+                        "has no throughput"
+                    )
+                elif f_thpt < b_thpt / (1 + s_tol):
+                    failures.append(
+                        f"{name}: throughput {f_thpt:.2f} rps < {b_thpt:.2f} / "
+                        f"(1 + {s_tol}) = {b_thpt / (1 + s_tol):.2f} rps"
+                    )
+            b_p95, f_p95 = b_row.get("p95_ms"), f_row.get("p95_ms")
+            if b_p95 is not None:
+                if f_p95 is None:
+                    failures.append(
+                        f"{name}: baseline p95 {b_p95:.2f}ms, fresh has no p95"
+                    )
+                elif f_p95 > b_p95 * (1 + s_tol):
+                    failures.append(
+                        f"{name}: p95 {f_p95:.2f}ms > {b_p95:.2f}ms * "
+                        f"(1 + {s_tol}) = {b_p95 * (1 + s_tol):.2f}ms"
+                    )
+
     b_sh = baseline.get("sharded", {}).get("step_ms", {})
     f_sh = fresh.get("sharded", {}).get("step_ms", {})
     if sharded_only and not b_sh:
@@ -326,6 +387,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--weak-scaling-rel-tol", type=float, default=None,
                     help="per-time slack for the weak_scaling table "
                          "(default: --rel-tol)")
+    ap.add_argument("--serve-rel-tol", type=float, default=None,
+                    help="slack for the serve load-test rows (throughput "
+                         "floor + p95 ceiling; default: --rel-tol).  "
+                         "Passing it arms the missing-baseline guard.")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -337,12 +402,13 @@ def main(argv: list[str] | None = None) -> int:
         baseline, fresh, rel_tol=args.rel_tol, geomean_tol=args.geomean_tol,
         sharded_only=args.sharded_only, conv1d_rel_tol=args.conv1d_rel_tol,
         weak_scaling_rel_tol=args.weak_scaling_rel_tol,
+        serve_rel_tol=args.serve_rel_tol,
     )
     if args.sharded_only:
         # say what was NOT gated, so the CI log shows the job's actual scope
         skipped = [
             s for s in ("layers", "generator", "discriminator",
-                        "adversarial", "conv1d")
+                        "adversarial", "conv1d", "serve")
             if baseline.get(s)
         ]
         if baseline.get("prepacked_step_speedup_geomean") is not None:

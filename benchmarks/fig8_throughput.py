@@ -1,21 +1,38 @@
-"""Paper Fig. 8: DeConv throughput comparison.
+"""Paper Fig. 8: DeConv throughput comparison — plus the serving load test.
 
-Two views:
+Three views:
   (a) the paper's own DSE timing model (eqs. 5-9) with its FPGA constants
       (100 MHz, 4 GB/s), reproducing the reported speedup ordering;
   (b) measured wall-time of the three numerically-identical implementations
-      on this host (CPU XLA), small batch.
+      on this host (CPU XLA), small batch;
+  (c) an open-loop load test of the async multi-tenant serve engine
+      (``serve.AsyncGanServer`` over ``GanServeEngine``): several gan_zoo
+      archs resident in one engine process, driven by Poisson and bursty
+      arrival processes at a fixed offered rate, reporting delivered
+      throughput and p50/p95/p99 end-to-end latency per arch and per
+      arrival pattern — the paper's sustained-images/sec figure recast as
+      a serving benchmark.  ``--smoke --update BENCH.json`` merges the
+      table into the committed report as the ``"serve"`` section, gated by
+      ``benchmarks.compare_bench --serve-rel-tol``.
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.gan_zoo import GANS
 from repro.core import tdc_deconv2d, winograd_deconv2d, zero_padded_deconv2d
 from repro.core.complexity import dse_model, mults_tdc, mults_winograd, mults_zero_padded
+from repro.models import gan as G
+from repro.serve import AsyncGanServer, GanServeEngine
+from repro.serve import metrics as SM
 
 from .workloads import GAN_LAYERS
 
@@ -49,7 +66,10 @@ def paper_model() -> list[dict]:
 
 
 def _time(fn, *args, n=3) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(*args).block_until_ready()
+    # one warmup evaluation (the old isinstance-on-a-fresh-call spelling ran
+    # fn twice, double-counting warmup work and skewing short measurements)
+    r = fn(*args)
+    (r[0] if isinstance(r, tuple) else r).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(n):
         r = fn(*args)
@@ -90,17 +110,180 @@ def measured(batch=2, scale=4) -> list[dict]:
     return rows
 
 
+# ----------------------------------------------------- serving load test
+SMOKE_ARCHS = ("dcgan", "artgan")  # latent-input archs; both resident at once
+
+
+def build_serve_engine(archs=SMOKE_ARCHS, *, impl: str = "ref", batch: int = 8,
+                       max_ch: int = 8, seed: int = 0) -> GanServeEngine:
+    """One engine process with every arch in ``archs`` resident (its own
+    prepacked weights + jit cache, shared request queue).  ``max_ch`` caps
+    channel widths (train_step's smoke scaling) so CPU runs stay
+    seconds-scale; 0 keeps the full models."""
+    from .train_step import _shrunk_gan_cfg
+
+    models = {}
+    for i, name in enumerate(archs):
+        cfg = dataclasses.replace(GANS[name], deconv_impl=impl)
+        if max_ch:
+            cfg = _shrunk_gan_cfg(cfg, max_ch)
+        gp = G.generator_init(jax.random.PRNGKey(seed + i), cfg, jnp.float32)
+        models[name] = (gp, cfg)
+    return GanServeEngine(models=models, batch=batch)
+
+
+def poisson_arrivals(rate_rps: float, duration_s: float, rng) -> list[float]:
+    """Open-loop Poisson process: exponential inter-arrivals at the offered
+    rate, independent of service times."""
+    t, out = 0.0, []
+    while True:
+        t += rng.exponential(1.0 / rate_rps)
+        if t >= duration_s:
+            return out
+        out.append(t)
+
+
+def bursty_arrivals(rate_rps: float, duration_s: float, rng, *,
+                    burst: int = 4) -> list[float]:
+    """Same offered rate as the Poisson process, but arrivals land in
+    back-to-back bursts of ``burst`` — the batching window's best case and
+    the admission queue's worst."""
+    gap = burst / rate_rps
+    out, t = [], 0.0
+    while t < duration_s:
+        out.extend([t] * burst)
+        t += gap
+    return [x for x in out if x < duration_s]
+
+
+ARRIVALS = {"poisson": poisson_arrivals, "bursty": bursty_arrivals}
+
+
+def _latent(cfg, n: int, rng) -> jax.Array:
+    if cfg.z_dim:
+        return jnp.asarray(rng.standard_normal((n, cfg.z_dim)), jnp.float32)
+    return jnp.asarray(
+        rng.standard_normal((n, cfg.img_hw, cfg.img_hw, 3)), jnp.float32
+    )
+
+
+def _warmup_engine(engine: GanServeEngine) -> None:
+    """Compile every (arch, bucket) executable off the clock — coalesced
+    batches can land on any bucket, and a mid-run jit compile would read as
+    seconds of tail latency."""
+    rng = np.random.default_rng(0)
+    for arch, res in engine.archs.items():
+        for k in engine.buckets:
+            jax.block_until_ready(
+                engine.generate(_latent(res.cfg, k, rng), arch=arch)
+            )
+    for res in engine.archs.values():
+        res.bucket_counts.clear()
+
+
+def run_load(engine: GanServeEngine, *, pattern: str, rate_rps: float,
+             duration_s: float, deadline_ms: float = 25.0,
+             max_queue: int = 256, seed: int = 0) -> dict:
+    """Drive the engine open-loop through an ``AsyncGanServer`` with the
+    named arrival pattern, round-robining requests across the resident
+    archs; returns the ``serve.metrics.summarize`` table (per-arch and
+    ``_all`` rows: throughput + p50/p95/p99 e2e latency + SLO components)."""
+    rng = np.random.default_rng(seed)
+    times = ARRIVALS[pattern](rate_rps, duration_s, rng)
+    archs = sorted(engine.archs)
+    zs = {a: _latent(engine.archs[a].cfg, 1, rng) for a in archs}
+    reqs = []
+    with AsyncGanServer(engine, max_queue=max_queue) as srv:
+        t0 = time.monotonic()
+        for i, t_s in enumerate(times):
+            dt = t0 + t_s - time.monotonic()
+            if dt > 0:
+                time.sleep(dt)
+            arch = archs[i % len(archs)]
+            reqs.append(
+                srv.submit(zs[arch], arch=arch, deadline_ms=deadline_ms).request
+            )
+    # context exit drains: every request is done (or rejected) here
+    return SM.summarize(reqs)
+
+
+def load_test(*, archs=SMOKE_ARCHS, rate_rps: float = 30.0,
+              duration_s: float = 2.0, batch: int = 8, max_ch: int = 8,
+              impl: str = "ref", deadline_ms: float = 25.0, seed: int = 0,
+              patterns=("poisson", "bursty"), smoke: bool = False) -> dict:
+    """The Fig. 8 serving benchmark: one multi-tenant engine, both arrival
+    patterns, flat row table ready for the committed report JSON."""
+    engine = build_serve_engine(archs, impl=impl, batch=batch, max_ch=max_ch,
+                                seed=seed)
+    _warmup_engine(engine)
+    rows = []
+    for pattern in patterns:
+        summary = run_load(engine, pattern=pattern, rate_rps=rate_rps,
+                           duration_s=duration_s, deadline_ms=deadline_ms,
+                           seed=seed)
+        for arch_key in sorted(summary):
+            r = {k: (round(v, 3) if isinstance(v, float) else v)
+                 for k, v in summary[arch_key].items()}
+            rows.append({"pattern": pattern, "arch": arch_key,
+                         "offered_rps": rate_rps, **r})
+    return {
+        "smoke": smoke, "archs": list(archs), "impl": impl, "batch": batch,
+        "max_ch": max_ch, "deadline_ms": deadline_ms, "rows": rows,
+    }
+
+
 def main():
-    for r in paper_model():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke-scaled load test (shrunk channels, ~2s/pattern)")
+    ap.add_argument("--load-only", action="store_true",
+                    help="skip the DSE-model and per-layer measured tables")
+    ap.add_argument("--skip-load", action="store_true",
+                    help="only the DSE-model and per-layer measured tables")
+    ap.add_argument("--rate", type=float, default=None, help="offered rps")
+    ap.add_argument("--duration", type=float, default=None,
+                    help="seconds per arrival pattern")
+    ap.add_argument("--batch", type=int, default=8, help="engine row pool")
+    ap.add_argument("--update", default=None, metavar="REPORT.json",
+                    help="merge the load-test table into this report as "
+                         "its 'serve' section")
+    args = ap.parse_args()
+
+    if not args.load_only:
+        for r in paper_model():
+            print(
+                f"fig8_model,{r['model']},speedup_vs_zp={r['speedup_vs_zp']},"
+                f"speedup_vs_tdc={r['speedup_vs_tdc']}"
+            )
+        for r in measured():
+            print(
+                f"fig8_measured,{r['model']},wino_us={r['t_winograd_us']},"
+                f"speedup_vs_zp={r['speedup_vs_zp']},speedup_vs_tdc={r['speedup_vs_tdc']}"
+            )
+    if args.skip_load:
+        return
+
+    rate = args.rate if args.rate is not None else (30.0 if args.smoke else 50.0)
+    duration = args.duration if args.duration is not None else \
+        (2.0 if args.smoke else 5.0)
+    serve = load_test(rate_rps=rate, duration_s=duration, batch=args.batch,
+                      max_ch=8 if args.smoke else 16, smoke=args.smoke)
+    for row in serve["rows"]:
         print(
-            f"fig8_model,{r['model']},speedup_vs_zp={r['speedup_vs_zp']},"
-            f"speedup_vs_tdc={r['speedup_vs_tdc']}"
+            f"fig8_serve,{row['pattern']},{row['arch']},"
+            f"offered={row['offered_rps']},thpt={row.get('throughput_rps')},"
+            f"p50={row.get('p50_ms')},p95={row.get('p95_ms')},"
+            f"p99={row.get('p99_ms')},rej={row.get('rejected')}"
         )
-    for r in measured():
-        print(
-            f"fig8_measured,{r['model']},wino_us={r['t_winograd_us']},"
-            f"speedup_vs_zp={r['speedup_vs_zp']},speedup_vs_tdc={r['speedup_vs_tdc']}"
-        )
+    if args.update:
+        report = {}
+        if os.path.exists(args.update):
+            with open(args.update) as f:
+                report = json.load(f)
+        report["serve"] = serve
+        with open(args.update, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"updated {args.update} (serve section)")
 
 
 if __name__ == "__main__":

@@ -178,27 +178,39 @@ def gan_input_specs(cfg: GANConfig, mesh: Mesh, batch: int = GAN_TRAIN_BATCH):
     return (gp, dp, z, real), (gspecs, dspecs, zspec, rspec), meta
 
 
-def build_gan_step(cfg: GANConfig, mesh: Mesh, *,
-                   overlap: bool = False,
-                   grad_compression: Optional[str] = None,
-                   bucket_bytes: Optional[int] = None):
-    """GSPMD GAN train step by default; ``overlap=True`` (or any
-    ``grad_compression``) delegates to the explicit-collective step from
-    ``parallel.overlap`` (prefetched gathers, bucketed backward-order grad
-    reduction, sync-BN, ZeRO block updates).  With int8 compression the
-    arg structs gain a ``CommState`` of error-feedback residuals between
-    the opt states and the batch."""
-    from repro.train.trainer import gan_losses
+def build_gan_step(cfg: GANConfig, mesh: Mesh, *, settings=None,
+                   overlap=None, grad_compression=None, bucket_bytes=None):
+    """GSPMD GAN train step by default; ``settings.overlap`` (or any
+    ``settings.grad_compression``) delegates to the explicit-collective
+    step from ``parallel.overlap`` (prefetched gathers, bucketed
+    backward-order grad reduction, sync-BN, ZeRO block updates).  With
+    int8 compression the arg structs gain a ``CommState`` of
+    error-feedback residuals between the opt states and the batch.
 
-    if overlap or grad_compression is not None:
+    ``settings=StepSettings(...)`` carries the build knobs (``mesh`` comes
+    from the positional arg here; ``batch`` defaults to
+    ``GAN_TRAIN_BATCH``); the individual kwargs are the deprecated
+    spelling."""
+    from repro.train.trainer import _UNSET, _merge_legacy, gan_losses
+
+    st = _merge_legacy(settings, dict(
+        overlap=overlap if overlap is not None else _UNSET,
+        grad_compression=(grad_compression if grad_compression is not None
+                          else _UNSET),
+        bucket_bytes=bucket_bytes if bucket_bytes is not None else _UNSET,
+    ), "build_gan_step")
+    cfg = st.apply_to_cfg(cfg)
+    batch = st.batch if st.batch is not None else GAN_TRAIN_BATCH
+
+    if st.comm:
         from repro.parallel import overlap as OV
 
-        kw = {} if bucket_bytes is None else {"bucket_bytes": bucket_bytes}
+        kw = {} if st.bucket_bytes is None else {"bucket_bytes": st.bucket_bytes}
         fn, meta = OV.build_gan_comm_step(
-            cfg, mesh, batch=GAN_TRAIN_BATCH,
-            grad_compression=grad_compression, dtype=PARAM_DTYPE, **kw,
+            cfg, mesh, batch=batch, lr=st.lr, b1=st.b1,
+            grad_compression=st.grad_compression, dtype=PARAM_DTYPE, **kw,
         )
-        (gp, dp, z, real), _, _ = gan_input_specs(cfg, mesh)
+        (gp, dp, z, real), _, _ = gan_input_specs(cfg, mesh, batch)
         gopt = jax.eval_shape(adamw_init, gp)
         dopt = jax.eval_shape(adamw_init, dp)
         args = (gp, dp, gopt, dopt) + (
@@ -206,7 +218,8 @@ def build_gan_step(cfg: GANConfig, mesh: Mesh, *,
         ) + (z, real)
         return fn, args, meta
 
-    (gp, dp, z, real), (gspecs, dspecs, zspec, rspec), meta = gan_input_specs(cfg, mesh)
+    (gp, dp, z, real), (gspecs, dspecs, zspec, rspec), meta = \
+        gan_input_specs(cfg, mesh, batch)
     gopt = jax.eval_shape(adamw_init, gp)
     dopt = jax.eval_shape(adamw_init, dp)
     gosp = SH.opt_specs(gspecs)
@@ -223,8 +236,8 @@ def build_gan_step(cfg: GANConfig, mesh: Mesh, *,
         one, zero = jnp.ones_like(gl), jnp.zeros_like(dl)
         ggrads, _ = vjp((one, zero))
         _, dgrads = vjp((zero, one))
-        gp2, go2, _ = adamw_update(gp_, ggrads, go_, lr=2e-4, b1=0.5)
-        dp2, do2, _ = adamw_update(dp_, dgrads, do_, lr=2e-4, b1=0.5)
+        gp2, go2, _ = adamw_update(gp_, ggrads, go_, lr=st.lr, b1=st.b1)
+        dp2, do2, _ = adamw_update(dp_, dgrads, do_, lr=st.lr, b1=st.b1)
         return gp2, dp2, go2, do2, gl, dl
 
     named = lambda tree: compat.tree_map(
@@ -234,7 +247,7 @@ def build_gan_step(cfg: GANConfig, mesh: Mesh, *,
         step,
         in_shardings=named((gspecs, dspecs, gosp, dosp, zspec, rspec)),
         out_shardings=named((gspecs, dspecs, gosp, dosp, P(), P())),
-        donate_argnums=(0, 1, 2, 3),
+        donate_argnums=(0, 1, 2, 3) if st.donate else (),
     )
     return fn, (gp, dp, gopt, dopt, z, real), meta
 

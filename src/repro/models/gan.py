@@ -108,6 +108,17 @@ def uses_chained(impl: str) -> bool:
     return impl in _CHAINED_KW
 
 
+def serve_impl(impl: str, *, chained: bool = True) -> str:
+    """The serving-time deconv_impl for a training-time ``impl``: prepacked
+    (G-transform paid once, off the request path), and — for the pallas
+    impls, unless ``chained=False`` — the cell-to-cell chained pipeline.
+    Idempotent: already-prepacked / already-chained names pass through."""
+    impl = PREPACKED_EQUIV.get(impl, impl)
+    if chained:
+        impl = CHAINED_EQUIV.get(impl, impl)
+    return impl
+
+
 # ------------------------------------------------- discriminator conv impls
 # conv_impl -> winograd_conv2d_packed / winograd_conv2d_cells kwargs.  The
 # discriminator mirror of the deconv tables: a stride-2 conv runs as the
@@ -310,6 +321,58 @@ def prepack_generator(params: Params, cfg: GANConfig, mesh=None) -> Params:
         gsp, _, _ = SH.gan_param_specs(cfg_p, mesh)
         out = jax.device_put(out, SH.named(mesh, gsp))
     return out
+
+
+# ------------------------------------------------- per-arch prepack registry
+@dataclasses.dataclass(frozen=True)
+class PrepackedGenerator:
+    """A serve-ready resident generator: arch id, config with the serving
+    impl already substituted (``serve_impl``), and packed (C, N, M) weights
+    — the G-transform is paid when this entry is built, never on a request
+    path.  ``GanServeEngine(models=...)`` accepts these directly (or plain
+    arch-id strings resolved through ``get_prepacked_generator``)."""
+
+    arch_id: str
+    cfg: GANConfig
+    params: Params
+
+
+_SERVE_REGISTRY: dict[str, PrepackedGenerator] = {}
+
+
+def register_prepacked_generator(arch_id: str, params: Params, cfg: GANConfig,
+                                 *, mesh=None,
+                                 chained: bool = True) -> PrepackedGenerator:
+    """Prepack ``params`` for serving and register them under ``arch_id``,
+    so several processes' worth of wiring (launch scripts, benchmarks, the
+    serve engine) can share one resident copy per arch.  Re-registering an
+    arch replaces its entry."""
+    impl = serve_impl(cfg.deconv_impl, chained=chained)
+    cfg_s = dataclasses.replace(cfg, deconv_impl=impl)
+    packed = prepack_generator(params, cfg, mesh=mesh) if uses_prepacked(impl) \
+        else params
+    entry = PrepackedGenerator(arch_id=arch_id, cfg=cfg_s, params=packed)
+    _SERVE_REGISTRY[arch_id] = entry
+    return entry
+
+
+def get_prepacked_generator(arch_id: str) -> PrepackedGenerator:
+    """The registered serve-ready generator for ``arch_id``."""
+    try:
+        return _SERVE_REGISTRY[arch_id]
+    except KeyError:
+        raise KeyError(
+            f"no prepacked generator registered for {arch_id!r} "
+            f"(registered: {sorted(_SERVE_REGISTRY)})"
+        ) from None
+
+
+def registered_archs() -> tuple[str, ...]:
+    return tuple(sorted(_SERVE_REGISTRY))
+
+
+def clear_prepacked_generators() -> None:
+    _SERVE_REGISTRY.clear()
 
 
 def unpack_generator(params: Params, cfg: GANConfig) -> Params:

@@ -1,1 +1,21 @@
-from .engine import ServeEngine, Request, GanServeEngine
+from .engine import (
+    GanFuture,
+    GanRequest,
+    GanServeEngine,
+    GanServeRejected,
+    Request,
+    ServeEngine,
+)
+from .loop import AsyncGanServer
+from . import metrics
+
+__all__ = [
+    "AsyncGanServer",
+    "GanFuture",
+    "GanRequest",
+    "GanServeEngine",
+    "GanServeRejected",
+    "Request",
+    "ServeEngine",
+    "metrics",
+]

@@ -17,7 +17,11 @@ forever, no recompilation as traffic varies.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import threading
 import time
+import warnings
+from collections import deque
 from typing import Callable, Optional
 
 import jax
@@ -137,78 +141,96 @@ class ServeEngine:
 
 
 # ------------------------------------------------------------------- GAN
+class GanServeRejected(RuntimeError):
+    """The request was refused admission (bounded inbound queue full)."""
+
+
+def _now_ms(now: Optional[float] = None) -> float:
+    return time.monotonic() * 1e3 if now is None else now
+
+
 @dataclasses.dataclass
 class GanRequest:
     """One image-generation request: a batch of latents (or images for
-    image-to-image models) that must be served together."""
+    image-to-image models) that must be served together.  Carries the
+    resident arch it targets plus the four SLO stamps (ms, monotonic
+    clock) that ``serve.metrics`` turns into queue-wait / batch-wait /
+    compute / end-to-end components."""
 
     rid: int
     z: jax.Array
+    arch: Optional[str] = None
+    deadline_ms: Optional[float] = None
     out: Optional[jax.Array] = None
     done: bool = False
+    rejected: bool = False
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_dispatch: Optional[float] = None
+    t_done: Optional[float] = None
+    event: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False
+    )
 
     @property
     def size(self) -> int:
         return int(self.z.shape[0])
 
+    @property
+    def timing(self) -> Optional[dict]:
+        """SLO components (ms) once served; None while in flight."""
+        from repro.serve import metrics as M
 
-class GanServeEngine:
-    """Image-generation service over prepacked Winograd-domain weights.
+        return M.request_timing(self)
 
-    Construction pays the G-transform + zero-skipping pack exactly once
-    (``models.gan.prepack_generator``); every ``generate`` call after that
-    feeds the packed (C, N, M) weights straight to the engine — and, for the
-    pallas impls, runs the generator as ONE cell-to-cell chained pipeline
-    (``models.gan`` chained impls: fused epilogues, no HBM relayout between
-    deconv layers; ``chained=False`` opts back into per-layer).  Requests are
-    padded up to the smallest of a fixed set of ``buckets`` (default the
-    powers of two up to ``batch``), so a size-1 request runs the batch-1
-    executable instead of paying the full batch-``batch`` generate, while
-    the signature count stays bounded (one jit cache entry per bucket).
 
-    Queued serving (modeled on the LM engine's slot scheduler): requests
-    admit FIFO into a pool of ``batch`` slot rows (``try_admit``), a
-    ``step`` serves every admitted request in one bucketed generate and
-    frees the rows, so bursts of small requests share an executable instead
-    of each paying its own padded dispatch.  Admission is strict FIFO: a
-    request that doesn't fit the remaining rows closes the batch (requests
-    behind it wait for the next step rather than jumping the queue), which
-    trades a little packing efficiency for order fairness.
+class GanFuture:
+    """Handle for a submitted request: poll with ``done()``, block with
+    ``result(timeout=)``.
 
-    Deadline-aware admission: ``try_admit(req, deadline_ms=...)`` opens (or
-    joins) a bounded batching window instead of demanding immediate
-    service — the request is willing to wait up to ``deadline_ms`` for more
-    traffic to coalesce with.  ``poll()`` then serves only when the window
-    closes: the earliest admitted deadline has expired, the row pool is
-    full, or some admitted request declared no deadline at all (latency
-    first, the FIFO default).  ``step()`` stays unconditional, so existing
-    drive loops are unaffected.
+    With an async driver attached (``serve.loop.AsyncGanServer``) the
+    server's generate loop fulfills the future and ``result`` just waits on
+    its completion event; without one, ``result`` drives the engine itself —
+    admitting pending requests and serving batching windows as they close —
+    so synchronous callers never hand-roll an admit/poll/step loop."""
 
-    Params may arrive raw, already packed, or packed-and-sharded (straight
-    out of a mesh training run — already-``ww`` leaves pass through
-    ``prepack_generator`` untouched); ``mesh`` re-places them per
-    ``parallel.sharding.gan_param_specs`` at construction.
-    """
+    def __init__(self, request: "GanRequest", engine: "GanServeEngine"):
+        self.request = request
+        self._engine = engine
 
-    def __init__(self, gen_params, cfg: GANConfig, *, batch: int = 8,
-                 buckets: Optional[tuple[int, ...]] = None, mesh=None,
-                 chained: bool = True):
+    def done(self) -> bool:
+        return self.request.done or self.request.rejected
+
+    def result(self, timeout: Optional[float] = None) -> jax.Array:
+        req = self.request
+        if not self.done():
+            if self._engine is not None and self._engine._driver is not None:
+                if not req.event.wait(timeout):
+                    raise TimeoutError(
+                        f"request {req.rid} not served within {timeout}s"
+                    )
+            else:
+                self._engine._drive_until(req, timeout)
+        if req.rejected:
+            raise GanServeRejected(
+                f"request {req.rid} rejected (inbound queue full)"
+            )
+        return req.out
+
+
+class _Resident:
+    """One arch resident in the engine process: its serve config (the
+    prepacked / chained impl substituted), the packed (C, N, M) weights —
+    G-transform paid once here — and the jit'd generate whose cache holds
+    one executable per serving bucket, reused forever."""
+
+    def __init__(self, arch: str, gen_params, cfg: GANConfig, *,
+                 chained: bool, mesh):
         from repro.models import gan as G
 
-        impl = G.PREPACKED_EQUIV.get(cfg.deconv_impl, cfg.deconv_impl)
-        if chained:
-            impl = G.CHAINED_EQUIV.get(impl, impl)
+        impl = G.serve_impl(cfg.deconv_impl, chained=chained)
+        self.arch = arch
         self.cfg = dataclasses.replace(cfg, deconv_impl=impl)
-        if buckets is None:
-            buckets, b = [], 1
-            while b < batch:
-                buckets.append(b)
-                b *= 2
-        # batch is always a bucket: explicit bucket lists refine the padding
-        # ladder but never shrink the maximum serveable request
-        self.buckets = tuple(sorted({int(b) for b in buckets} | {int(batch)}))
-        self.batch = self.buckets[-1]
-        self.bucket_counts: dict[int, int] = {}
         if G.uses_prepacked(impl):
             self.params = G.prepack_generator(gen_params, cfg, mesh=mesh)
         elif mesh is not None:
@@ -226,13 +248,127 @@ class GanServeEngine:
             return img
 
         self._generate = _generate
+        self.bucket_counts: dict[int, int] = {}
         self.served = 0
-        self.active: list[GanRequest] = []  # admitted, not yet stepped
+
+
+class GanServeEngine:
+    """Multi-tenant image-generation service over prepacked Winograd-domain
+    weights.
+
+    **Residency.** Each served arch pays the G-transform + zero-skipping
+    pack exactly once at construction (``models.gan.prepack_generator``)
+    and stays resident: packed (C, N, M) weights plus a per-bucket jit
+    cache per arch.  Pass a single model the legacy way —
+    ``GanServeEngine(params, cfg)`` — or several at once:
+    ``GanServeEngine(models={"dcgan": (params, cfg), "artgan": (...)})``
+    (values may also be ``models.gan.PrepackedGenerator`` registry entries,
+    or plain arch-id strings resolved from
+    ``models.gan.get_prepacked_generator``).  For the pallas impls each
+    resident runs its generator as ONE cell-to-cell chained pipeline
+    (``chained=False`` opts back into per-layer).
+
+    **Scheduling.** One shared request queue feeds one shared pool of
+    ``batch`` slot rows; admission is strict FIFO (a request that doesn't
+    fit the free rows blocks the queue head — order fairness over packing).
+    A dispatch serves every admitted request, grouped into per-arch
+    bucketed batches: requests are padded up to the smallest of the fixed
+    ``buckets`` ladder (default powers of two up to ``batch``), so a
+    size-1 request runs the batch-1 executable while the jit signature
+    count stays bounded.
+
+    **Batching windows.** ``deadline_ms`` admits into a bounded window:
+    the request tolerates up to that much coalescing delay, and the batch
+    dispatches when the EARLIEST admitted deadline expires, the pool
+    fills, or a no-deadline (immediate) request joins — a mixed batch
+    honors its most impatient member.
+
+    **Drive surface.** ``submit(z, arch=..., deadline_ms=...)`` returns a
+    ``GanFuture``; ``.result()`` drives the engine synchronously, or waits
+    on the async server's generate loop when one is attached
+    (``serve.loop.AsyncGanServer``).  The pre-futures three-method surface
+    (``try_admit`` / ``poll`` / ``step``) survives as thin deprecated
+    wrappers over the same admission/dispatch core.
+
+    Params may arrive raw, already packed, or packed-and-sharded (straight
+    out of a mesh training run — already-``ww`` leaves pass through
+    ``prepack_generator`` untouched); ``mesh`` re-places them per
+    ``parallel.sharding.gan_param_specs`` at construction.
+    """
+
+    def __init__(self, gen_params=None, cfg: Optional[GANConfig] = None, *,
+                 models=None, batch: int = 8,
+                 buckets: Optional[tuple[int, ...]] = None, mesh=None,
+                 chained: bool = True):
+        from repro.models import gan as G
+
+        if models is None:
+            if gen_params is None or cfg is None:
+                raise ValueError(
+                    "pass (gen_params, cfg) or models={arch: (params, cfg)}"
+                )
+            models = {cfg.arch_id or "default": (gen_params, cfg)}
+        elif gen_params is not None or cfg is not None:
+            raise ValueError("pass (gen_params, cfg) OR models=, not both")
+
+        if buckets is None:
+            buckets, b = [], 1
+            while b < batch:
+                buckets.append(b)
+                b *= 2
+        # batch is always a bucket: explicit bucket lists refine the padding
+        # ladder but never shrink the maximum serveable request
+        self.buckets = tuple(sorted({int(b) for b in buckets} | {int(batch)}))
+        self.batch = self.buckets[-1]
+
+        self.archs: dict[str, _Resident] = {}
+        for arch, spec in models.items():
+            if isinstance(spec, str):
+                spec = G.get_prepacked_generator(spec)
+            if isinstance(spec, G.PrepackedGenerator):
+                res = _Resident(arch, spec.params, spec.cfg,
+                                chained=chained, mesh=mesh)
+            else:
+                p, c = spec
+                res = _Resident(arch, p, c, chained=chained, mesh=mesh)
+            self.archs[arch] = res
+        self.default_arch = next(iter(self.archs))
+
+        # legacy single-model aliases (cfg/params/bucket_counts of the
+        # default resident; bucket_counts is the SAME dict object)
+        default = self.archs[self.default_arch]
+        self.cfg = default.cfg
+        self.params = default.params
+        self.bucket_counts = default.bucket_counts
+
+        self.served = 0
+        self._lock = threading.RLock()
+        self._pending: deque = deque()  # submitted, awaiting free rows
+        self.active: list[GanRequest] = []  # admitted, not yet dispatched
         self.rows_used = 0
         # earliest absolute deadline (ms) among admitted requests; None while
         # any admitted request wants immediate service (the FIFO default)
         self._window_deadline: Optional[float] = None
         self._immediate = False
+        self._rid = itertools.count()
+        self._driver = None  # serve.loop.AsyncGanServer attaches here
+        # per-dispatch admission order (rids), for equivalence tests/debug
+        self.dispatch_log: list[tuple[int, ...]] = []
+
+    # ------------------------------------------------------------- routing
+    def _resolve_arch(self, arch: Optional[str]) -> str:
+        if arch is None:
+            if len(self.archs) == 1:
+                return self.default_arch
+            raise ValueError(
+                "arch= is required on a multi-model engine "
+                f"(resident: {sorted(self.archs)})"
+            )
+        if arch not in self.archs:
+            raise KeyError(
+                f"arch {arch!r} not resident (resident: {sorted(self.archs)})"
+            )
+        return arch
 
     def bucket_for(self, b: int) -> int:
         """Smallest serving bucket that fits a size-``b`` request."""
@@ -241,48 +377,63 @@ class GanServeEngine:
                 return k
         raise ValueError(f"request batch {b} > engine max bucket {self.buckets[-1]}")
 
-    def generate(self, z: jax.Array) -> jax.Array:
+    def generate(self, z: jax.Array, arch: Optional[str] = None) -> jax.Array:
         """z: (b, z_dim) latents (or (b, H, W, 3) images for image-to-image
-        models), b <= max bucket.  Returns the b generated images."""
+        models), b <= max bucket.  Returns the b generated images from the
+        named resident (or the only one)."""
+        res = self.archs[self._resolve_arch(arch)]
         b = z.shape[0]
         k = self.bucket_for(b)
-        self.bucket_counts[k] = self.bucket_counts.get(k, 0) + 1
+        res.bucket_counts[k] = res.bucket_counts.get(k, 0) + 1
         z_pad = jnp.pad(z, ((0, k - b),) + ((0, 0),) * (z.ndim - 1))
-        imgs = self._generate(self.params, z_pad)
+        imgs = res._generate(res.params, z_pad)
+        res.served += b
         self.served += b
         return imgs[:b]
 
-    # ------------------------------------------------------------ admission
-    def try_admit(self, req: GanRequest, *, deadline_ms: Optional[float] = None,
-                  now: Optional[float] = None) -> bool:
-        """FIFO admission: claim ``req.size`` free slot rows for the next
-        step's shared batch; False when the pool can't fit the request (a
-        request larger than the pool is a caller error, as in generate).
-
-        ``deadline_ms`` admits into a bounded batching window: the request
-        tolerates up to that much coalescing delay, and ``poll`` serves the
-        shared batch when the EARLIEST admitted deadline expires (or the
-        pool fills) rather than unconditionally.  Without it the request
-        demands immediate service and the next ``poll`` fires regardless —
-        a mixed batch honors its most impatient member.  ``now`` (ms)
-        overrides the wall clock, for tests and simulated drivers."""
+    # ------------------------------------------------------- admission core
+    def _admit(self, req: GanRequest, *, deadline_ms: Optional[float] = None,
+               now: Optional[float] = None) -> bool:
+        """FIFO admission into the shared row pool; False when the free rows
+        can't fit the request (a request larger than the whole pool is a
+        caller error).  ``deadline_ms`` opens/joins the batching window;
+        ``now`` (ms) overrides the wall clock for tests and simulators."""
         if req.size > self.batch:
             raise ValueError(
                 f"request batch {req.size} > engine max bucket {self.batch}"
             )
         if self.rows_used + req.size > self.batch:
             return False
+        req.arch = self._resolve_arch(req.arch)
+        t = _now_ms(now)
+        if req.t_submit is None:
+            req.t_submit = t
+        req.t_admit = t
+        if deadline_ms is None:
+            deadline_ms = req.deadline_ms
         self.active.append(req)
         self.rows_used += req.size
         if deadline_ms is None:
             self._immediate = True
         else:
-            t = (time.monotonic() * 1e3 if now is None else now) + deadline_ms
             self._window_deadline = (
-                t if self._window_deadline is None
-                else min(self._window_deadline, t)
+                t + deadline_ms if self._window_deadline is None
+                else min(self._window_deadline, t + deadline_ms)
             )
         return True
+
+    def _admit_pending(self, now: Optional[float] = None) -> int:
+        """Move submitted requests into the row pool, strict FIFO: stop at
+        the first one that doesn't fit (it blocks the queue head)."""
+        n = 0
+        while self._pending:
+            req = self._pending[0]
+            if self.rows_used + req.size > self.batch:
+                break
+            self._pending.popleft()
+            self._admit(req, now=now)
+            n += 1
+        return n
 
     def window_open(self, now: Optional[float] = None) -> bool:
         """True while the batching window is still collecting: some rows are
@@ -292,44 +443,151 @@ class GanServeEngine:
             return False
         if self._window_deadline is None:
             return False  # nothing admitted a deadline: serve right away
-        t = time.monotonic() * 1e3 if now is None else now
-        return t < self._window_deadline
+        return _now_ms(now) < self._window_deadline
+
+    # -------------------------------------------------------- dispatch core
+    def _dispatch(self, now: Optional[float] = None) -> list[GanRequest]:
+        """Serve every admitted request: snapshot the batch and free the
+        rows under the lock (admission can refill the pool while the
+        accelerator works), then run ONE bucketed generate per resident
+        arch aboard, split the rows back per request, stamp the SLO times
+        and fire the completion events.  Returns the finished requests in
+        admission order."""
+        with self._lock:
+            if not self.active:
+                return []
+            batch_reqs = self.active
+            self.active, self.rows_used = [], 0
+            self._window_deadline, self._immediate = None, False
+            self.dispatch_log.append(tuple(r.rid for r in batch_reqs))
+        t_disp = _now_ms(now)
+        for r in batch_reqs:
+            r.t_dispatch = t_disp
+        by_arch: dict[str, list[GanRequest]] = {}
+        for r in batch_reqs:
+            by_arch.setdefault(r.arch, []).append(r)
+        for arch, reqs in by_arch.items():
+            z_all = jnp.concatenate([r.z for r in reqs], axis=0)
+            imgs = self.generate(z_all, arch=arch)
+            jax.block_until_ready(imgs)  # honest compute stamp
+            row = 0
+            for r in reqs:
+                r.out = imgs[row : row + r.size]
+                row += r.size
+        t_done = _now_ms(now)
+        for r in batch_reqs:
+            r.t_done = t_done
+            r.done = True
+            r.event.set()
+        return batch_reqs
+
+    # -------------------------------------------------------- futures API
+    def submit(self, z: jax.Array, *, arch: Optional[str] = None,
+               deadline_ms: Optional[float] = None,
+               now: Optional[float] = None) -> GanFuture:
+        """Submit a request and get a ``GanFuture`` back.
+
+        The request joins the shared FIFO queue and claims slot rows as
+        soon as they're free; generation happens when its batching window
+        closes — driven by ``GanFuture.result()`` for synchronous callers,
+        or by the ``AsyncGanServer`` generate loop when one is attached.
+        ``deadline_ms`` bounds the coalescing delay this request tolerates
+        (omit it to demand immediate service at the next dispatch)."""
+        arch_r = self._resolve_arch(arch)
+        if int(z.shape[0]) > self.batch:
+            raise ValueError(
+                f"request batch {int(z.shape[0])} > engine max bucket {self.batch}"
+            )
+        req = GanRequest(
+            rid=next(self._rid), z=z, arch=arch_r, deadline_ms=deadline_ms,
+            t_submit=_now_ms(now),
+        )
+        with self._lock:
+            self._pending.append(req)
+            self._admit_pending(now)
+        return GanFuture(req, self)
+
+    def _drive_until(self, req: GanRequest, timeout: Optional[float] = None):
+        """Synchronous drive loop behind ``GanFuture.result()``: admit
+        pending requests and dispatch batches as their windows close, until
+        ``req`` completes (sleeping out still-open deadline windows)."""
+        t_end = None if timeout is None else time.monotonic() + timeout
+        while not (req.done or req.rejected):
+            with self._lock:
+                self._admit_pending()
+                open_ = self.window_open()
+                ready = bool(self.active) and not open_
+                window_wait_s = (
+                    max(0.0, self._window_deadline / 1e3 - time.monotonic())
+                    if open_ and self._window_deadline is not None else None
+                )
+            if ready:
+                self._dispatch()
+                continue
+            if req.done or req.rejected:
+                break
+            if t_end is not None and time.monotonic() >= t_end:
+                raise TimeoutError(
+                    f"request {req.rid} not served within {timeout}s"
+                )
+            # window still open (sleep it out) or another thread owns the
+            # batch: yield briefly, bounded so timeouts stay responsive
+            wait = 0.0005 if window_wait_s is None else window_wait_s
+            if t_end is not None:
+                wait = min(wait, max(0.0, t_end - time.monotonic()))
+            time.sleep(min(wait, 0.05))
+
+    # --------------------------------------------------- deprecated surface
+    def try_admit(self, req: GanRequest, *, deadline_ms: Optional[float] = None,
+                  now: Optional[float] = None) -> bool:
+        """Deprecated: use ``submit`` (futures API).  Thin wrapper over the
+        admission core — claim ``req.size`` free slot rows for the next
+        dispatch's shared batch; False when the pool can't fit the request.
+
+        ``deadline_ms`` admits into a bounded batching window: the request
+        tolerates up to that much coalescing delay, and ``poll`` serves the
+        shared batch when the EARLIEST admitted deadline expires (or the
+        pool fills) rather than unconditionally.  Without it the request
+        demands immediate service and the next ``poll`` fires regardless —
+        a mixed batch honors its most impatient member.  ``now`` (ms)
+        overrides the wall clock, for tests and simulated drivers."""
+        warnings.warn(
+            "GanServeEngine.try_admit is deprecated; use submit(z, arch=..., "
+            "deadline_ms=...) -> GanFuture", DeprecationWarning, stacklevel=2,
+        )
+        with self._lock:
+            return self._admit(req, deadline_ms=deadline_ms, now=now)
 
     def poll(self, now: Optional[float] = None) -> list[GanRequest]:
-        """Serve the admitted batch iff its window has closed (deadline
-        expired, pool full, or an immediate-service request is aboard);
-        returns [] while the window is still open."""
-        if not self.active or self.window_open(now):
-            return []
-        return self.step()
+        """Deprecated: use ``submit(...).result()``.  Serve the admitted
+        batch iff its window has closed (deadline expired, pool full, or an
+        immediate-service request is aboard); [] while the window is open."""
+        warnings.warn(
+            "GanServeEngine.poll is deprecated; GanFuture.result() (or "
+            "serve.loop.AsyncGanServer) drives the engine",
+            DeprecationWarning, stacklevel=2,
+        )
+        with self._lock:
+            if not self.active or self.window_open(now):
+                return []
+        return self._dispatch(now)
 
-    # ----------------------------------------------------------------- step
     def step(self) -> list[GanRequest]:
-        """Serve every admitted request in ONE bucketed generate call, split
-        the rows back per request, and free all slots.  Returns the finished
-        requests (all of them — image generation completes in one step; the
-        slot scheduling mirrors the LM engine's admit/step loop)."""
-        if not self.active:
-            return []
-        z_all = jnp.concatenate([r.z for r in self.active], axis=0)
-        imgs = self.generate(z_all)
-        finished, row = [], 0
-        for req in self.active:
-            req.out = imgs[row : row + req.size]
-            req.done = True
-            row += req.size
-            finished.append(req)
-        self.active, self.rows_used = [], 0
-        self._window_deadline, self._immediate = None, False
-        return finished
+        """Deprecated: use ``submit(...).result()``.  Serve every admitted
+        request unconditionally (one bucketed generate per resident arch
+        aboard) and free all slots; returns the finished requests."""
+        warnings.warn(
+            "GanServeEngine.step is deprecated; GanFuture.result() (or "
+            "serve.loop.AsyncGanServer) drives the engine",
+            DeprecationWarning, stacklevel=2,
+        )
+        return self._dispatch()
 
-    def run(self, requests: list[jax.Array]) -> list[jax.Array]:
+    def run(self, requests: list[jax.Array], *,
+            arch: Optional[str] = None) -> list[jax.Array]:
         """Serve a queue of variable-size latent batches through the FIFO
-        admit/step scheduler; outputs come back in request order."""
-        reqs = [GanRequest(rid=i, z=z) for i, z in enumerate(requests)]
-        pending = list(reqs)
-        while pending or self.active:
-            while pending and self.try_admit(pending[0]):
-                pending.pop(0)
-            self.step()
-        return [r.out for r in reqs]
+        scheduler; outputs come back in request order.  (Futures under the
+        hood: same admission order and bucket counts as the pre-futures
+        admit/step loop.)"""
+        futs = [self.submit(z, arch=arch) for z in requests]
+        return [f.result() for f in futs]

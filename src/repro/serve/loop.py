@@ -1,0 +1,151 @@
+"""Async serving loop: admission thread + generate loop over one engine.
+
+``AsyncGanServer`` turns the synchronous ``GanServeEngine`` core into an
+open-loop service.  ``submit`` is non-blocking: it enqueues the request
+into the engine's shared FIFO (or rejects it outright when the bounded
+in-flight queue is full — backpressure surfaces to the caller as a
+``GanServeRejected`` from ``GanFuture.result()``, never as silent
+unbounded queue growth).  Two daemon threads drive the engine:
+
+  admission  moves pending requests into free slot rows (strict FIFO),
+             refilling the pool while the accelerator works — admission
+             overlaps generation because ``_dispatch`` frees the rows
+             under the lock *before* running the per-arch generates
+  generate   dispatches the shared batch whenever its batching window
+             closes (earliest deadline expired, pool full, or an
+             immediate-service request aboard)
+
+Completion is event-based: the generate loop stamps the SLO times and
+fires each request's event; ``GanFuture.result()`` just waits.  While a
+server is attached (``engine._driver``), futures never self-drive the
+engine, so there is exactly one dispatch path.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+import jax
+
+from repro.serve.engine import GanFuture, GanRequest, GanServeEngine, _now_ms
+
+
+class AsyncGanServer:
+    """Threaded driver for a ``GanServeEngine``.
+
+    ``max_queue`` bounds the in-flight population (pending + admitted);
+    submissions beyond it are rejected immediately.  ``poll_interval_ms``
+    is the idle sleep of both loops — the latency floor for an empty
+    engine, kept small (default 1 ms) since both loops do O(queue) work
+    per wake.  Use as a context manager, or ``start()`` / ``stop()``.
+    """
+
+    def __init__(self, engine: GanServeEngine, *, max_queue: int = 64,
+                 poll_interval_ms: float = 1.0):
+        self.engine = engine
+        self.max_queue = int(max_queue)
+        self.poll_interval_s = poll_interval_ms / 1e3
+        self.rejected_count = 0
+        self._stop = threading.Event()
+        self._draining = True
+        self._threads: list[threading.Thread] = []
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "AsyncGanServer":
+        if self._threads:
+            raise RuntimeError("server already started")
+        self.engine._driver = self
+        self._stop.clear()
+        self._threads = [
+            threading.Thread(target=self._admission_loop,
+                             name="gan-serve-admission", daemon=True),
+            threading.Thread(target=self._generate_loop,
+                             name="gan-serve-generate", daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def stop(self, *, drain: bool = True, timeout: float = 60.0) -> None:
+        """Stop the loops.  ``drain=True`` serves everything already
+        submitted first; ``drain=False`` rejects all in-flight requests
+        (their futures raise ``GanServeRejected``) so no caller hangs."""
+        self._draining = drain
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout)
+        self._threads = []
+        if not drain:
+            eng = self.engine
+            with eng._lock:
+                leftovers = list(eng._pending) + list(eng.active)
+                eng._pending.clear()
+                eng.active, eng.rows_used = [], 0
+                eng._window_deadline, eng._immediate = None, False
+            for req in leftovers:
+                req.rejected = True
+                req.event.set()
+            self.rejected_count += len(leftovers)
+        self.engine._driver = None
+
+    def __enter__(self) -> "AsyncGanServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=True)
+
+    # ------------------------------------------------------------- frontend
+    def submit(self, z: jax.Array, *, arch: Optional[str] = None,
+               deadline_ms: Optional[float] = None) -> GanFuture:
+        """Non-blocking submit.  Oversized requests raise ValueError (a
+        caller error); a full in-flight queue rejects the request — the
+        returned future is already done and ``result()`` raises
+        ``GanServeRejected``."""
+        eng = self.engine
+        arch_r = eng._resolve_arch(arch)
+        if int(z.shape[0]) > eng.batch:
+            raise ValueError(
+                f"request batch {int(z.shape[0])} > engine max bucket {eng.batch}"
+            )
+        req = GanRequest(rid=next(eng._rid), z=z, arch=arch_r,
+                         deadline_ms=deadline_ms, t_submit=_now_ms())
+        with eng._lock:
+            if len(eng._pending) + len(eng.active) >= self.max_queue:
+                req.rejected = True
+            else:
+                eng._pending.append(req)
+        if req.rejected:
+            self.rejected_count += 1
+            req.event.set()
+        return GanFuture(req, eng)
+
+    # ---------------------------------------------------------------- loops
+    def _idle(self) -> bool:
+        eng = self.engine
+        with eng._lock:
+            return not eng._pending and not eng.active
+
+    def _admission_loop(self) -> None:
+        eng = self.engine
+        while True:
+            with eng._lock:
+                eng._admit_pending()
+            if self._stop.is_set() and (not self._draining or self._idle()):
+                return
+            time.sleep(self.poll_interval_s)
+
+    def _generate_loop(self) -> None:
+        eng = self.engine
+        while True:
+            drain_now = self._stop.is_set() and self._draining
+            with eng._lock:
+                ready = bool(eng.active) and (
+                    drain_now or not eng.window_open()
+                )
+            if ready:
+                eng._dispatch()
+                continue
+            if self._stop.is_set() and (not self._draining or self._idle()):
+                return
+            time.sleep(self.poll_interval_s)

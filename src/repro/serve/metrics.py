@@ -1,0 +1,106 @@
+"""Per-request SLO accounting for the GAN serve path.
+
+Every ``GanRequest`` carries four monotonic-clock stamps (milliseconds):
+
+  t_submit   the caller handed the request to ``submit`` (or an admission
+             wrapper stamped it on entry)
+  t_admit    the request claimed slot rows in the engine's shared pool
+  t_dispatch the shared batch containing it was handed to the generate fn
+  t_done     its rows came back from the accelerator
+
+from which the four SLO components derive:
+
+  queue_wait = t_admit    - t_submit   (backpressure: time spent pending)
+  batch_wait = t_dispatch - t_admit    (coalescing: time inside the window)
+  compute    = t_done     - t_dispatch (the bucketed generate itself)
+  e2e        = t_done     - t_submit   (what the caller experiences)
+
+``summarize`` aggregates completed requests into per-arch rows —
+throughput (requests and images per second over the observed span) and
+p50/p95/p99 end-to-end latency — the table the Fig. 8 load-test harness
+reports and ``compare_bench`` gates.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+
+def percentile(xs: list[float], p: float) -> float:
+    """Linear-interpolated percentile (p in [0, 100]) of a non-empty list."""
+    if not xs:
+        raise ValueError("percentile of empty list")
+    s = sorted(xs)
+    if len(s) == 1:
+        return s[0]
+    rank = (p / 100.0) * (len(s) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(s) - 1)
+    frac = rank - lo
+    return s[lo] * (1 - frac) + s[hi] * frac
+
+
+def request_timing(req) -> Optional[dict]:
+    """The four SLO components of one completed request (ms), or None if
+    any stamp is missing (rejected / still in flight)."""
+    ts = (req.t_submit, req.t_admit, req.t_dispatch, req.t_done)
+    if any(t is None for t in ts):
+        return None
+    t_submit, t_admit, t_dispatch, t_done = ts
+    return {
+        "queue_wait_ms": t_admit - t_submit,
+        "batch_wait_ms": t_dispatch - t_admit,
+        "compute_ms": t_done - t_dispatch,
+        "e2e_ms": t_done - t_submit,
+    }
+
+
+def _row(reqs: list, span_s: float) -> dict:
+    timings = [t for t in (request_timing(r) for r in reqs) if t is not None]
+    e2e = [t["e2e_ms"] for t in timings]
+    n_img = sum(r.size for r in reqs)
+    row = {
+        "requests": len(reqs),
+        "images": n_img,
+        "span_s": span_s,
+        "throughput_rps": len(reqs) / span_s if span_s > 0 else None,
+        "images_per_s": n_img / span_s if span_s > 0 else None,
+    }
+    if e2e:
+        row.update(
+            p50_ms=percentile(e2e, 50),
+            p95_ms=percentile(e2e, 95),
+            p99_ms=percentile(e2e, 99),
+            mean_queue_wait_ms=sum(t["queue_wait_ms"] for t in timings) / len(timings),
+            mean_batch_wait_ms=sum(t["batch_wait_ms"] for t in timings) / len(timings),
+            mean_compute_ms=sum(t["compute_ms"] for t in timings) / len(timings),
+        )
+    return row
+
+
+def summarize(requests: Iterable, *, span_s: Optional[float] = None) -> dict:
+    """Aggregate completed requests into {"_all": row, <arch>: row, ...}.
+
+    ``span_s`` is the observed wall-clock span the throughput figures are
+    normalized by; when omitted it is inferred as (max t_done - min
+    t_submit) over the completed requests.  Rejected requests are counted
+    (per arch, under "rejected") but excluded from the latency stats.
+    """
+    done = [r for r in requests if r.done and not getattr(r, "rejected", False)]
+    rejected = [r for r in requests if getattr(r, "rejected", False)]
+    if span_s is None:
+        stamps = [
+            (r.t_submit, r.t_done) for r in done
+            if r.t_submit is not None and r.t_done is not None
+        ]
+        span_s = (
+            (max(t1 for _, t1 in stamps) - min(t0 for t0, _ in stamps)) / 1e3
+            if stamps else 0.0
+        )
+    out = {"_all": _row(done, span_s)}
+    out["_all"]["rejected"] = len(rejected)
+    archs = sorted({r.arch for r in done if getattr(r, "arch", None) is not None})
+    for arch in archs:
+        row = _row([r for r in done if r.arch == arch], span_s)
+        row["rejected"] = sum(1 for r in rejected if getattr(r, "arch", None) == arch)
+        out[arch] = row
+    return out

@@ -1,1 +1,12 @@
 from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from .trainer import StepSettings, TrainHooks, make_gan_step, train_gan
+
+__all__ = [
+    "StepSettings",
+    "TrainHooks",
+    "latest_step",
+    "make_gan_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "train_gan",
+]

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -36,6 +37,80 @@ class TrainHooks:
     step_deadline_s: float = 0.0  # 0 = no watchdog
 
 
+@dataclasses.dataclass(frozen=True)
+class StepSettings:
+    """Every knob that shapes how a GAN train step is BUILT, in one bundle.
+
+    ``make_gan_step``, ``train_gan`` and ``launch.steps.build_gan_step``
+    all accept ``settings=StepSettings(...)``; the historical per-function
+    kwarg sprawl (``mesh``, ``overlap``, ``grad_compression``,
+    ``bucket_bytes``, ``deconv_impl``, ``conv_impl``, ``donate``, ...) is
+    deprecated but still accepted — legacy kwargs are mapped onto a
+    ``StepSettings`` (overriding any ``settings=`` also passed) with a
+    ``DeprecationWarning``.
+
+    Fields:
+      lr, b1            AdamW learning rate / beta1
+      mesh              device mesh: NamedSharding-constrained step, ZeRO
+                        moments (``parallel.sharding.gan_param_specs``)
+      batch             global batch size (required with mesh, for the
+                        divisibility check)
+      donate            donate param/opt buffers into the jit (off for
+                        benchmarks that re-time one argument set)
+      overlap           explicit-collective step from ``parallel.overlap``
+                        (prefetched gathers, bucketed backward-order grad
+                        reduction, sync-BN, ZeRO block updates)
+      grad_compression  "int8" threads error-feedback CommState through
+                        the step (implies the overlap step)
+      bucket_bytes      grad-reduction bucket target for the overlap step
+      deconv_impl       generator backend override (None = cfg's)
+      conv_impl         discriminator backend override (None = cfg's)
+    """
+
+    lr: float = 2e-4
+    b1: float = 0.5
+    mesh: Any = None
+    batch: Optional[int] = None
+    donate: bool = True
+    overlap: bool = False
+    grad_compression: Optional[str] = None
+    bucket_bytes: Optional[int] = None
+    deconv_impl: Optional[str] = None
+    conv_impl: Optional[str] = None
+
+    @property
+    def comm(self) -> bool:
+        """True when the explicit-collective (overlap) step is selected."""
+        return self.overlap or self.grad_compression is not None
+
+    def apply_to_cfg(self, cfg: GANConfig) -> GANConfig:
+        """cfg with the impl overrides substituted."""
+        if self.deconv_impl is not None:
+            cfg = dataclasses.replace(cfg, deconv_impl=self.deconv_impl)
+        if self.conv_impl is not None:
+            cfg = dataclasses.replace(cfg, conv_impl=self.conv_impl)
+        return cfg
+
+
+_UNSET = object()  # distinguishes "legacy kwarg not passed" from None/False
+
+
+def _merge_legacy(settings: Optional[StepSettings], legacy: dict,
+                  where: str) -> StepSettings:
+    """Fold explicitly-passed legacy kwargs over ``settings`` (or defaults),
+    with the deprecation note the redesign promised."""
+    given = {k: v for k, v in legacy.items() if v is not _UNSET}
+    base = settings if settings is not None else StepSettings()
+    if not given:
+        return base
+    warnings.warn(
+        f"{where}: kwargs {sorted(given)} are deprecated; pass "
+        "settings=StepSettings(...) instead",
+        DeprecationWarning, stacklevel=3,
+    )
+    return dataclasses.replace(base, **given)
+
+
 # --------------------------------------------------------------- GAN loop
 def gan_losses(gp, dp, cfg: GANConfig, z, real, *, training=True):
     fake, g_stats = G.generator_apply(gp, cfg, z, training=training)
@@ -49,41 +124,52 @@ def gan_losses(gp, dp, cfg: GANConfig, z, real, *, training=True):
     return g_loss, d_loss, (g_stats, d_stats, fake)
 
 
-def make_gan_step(cfg: GANConfig, lr=2e-4, b1=0.5, *, mesh=None,
-                  batch: Optional[int] = None, donate: bool = True,
-                  overlap: bool = False, grad_compression: Optional[str] = None,
-                  bucket_bytes: Optional[int] = None):
+def make_gan_step(cfg: GANConfig, lr=_UNSET, b1=_UNSET, *,
+                  settings: Optional[StepSettings] = None, mesh=_UNSET,
+                  batch=_UNSET, donate=_UNSET, overlap=_UNSET,
+                  grad_compression=_UNSET, bucket_bytes=_UNSET):
     """Returns the jit'd GAN train step: simultaneous G/D update from one
     shared forward (two vjp pulls on a single linearization — one generator
     forward per step, and no updated param is re-consumed within the step,
     so the sharded variants need no mid-step re-gather).
 
-    With ``mesh``, the step is NamedSharding-constrained end-to-end: params
-    and AdamW moments follow ``parallel.sharding.gan_param_specs`` /
-    ``opt_specs`` (FSDP over the packed N dim + TP over M where it divides,
-    ZeRO-sharded moments), the (z, real) batch shards over the ("pod","data")
-    axes, and the param/opt buffers are donated.  ``batch`` (the global batch
-    size) is required then, for the divisibility check; ``donate=False``
-    opts out of donation for callers that re-time the step on one argument
-    set (benchmarks).
+    How the step is built is configured by ``settings=StepSettings(...)``
+    (the individual kwargs are a deprecated spelling of the same fields).
 
-    ``overlap=True`` (or any ``grad_compression``) swaps the GSPMD step for
-    the explicit-collective one from ``parallel.overlap``: prefetched FSDP
-    gathers, bucketed grad reduction in backward order (``bucket_bytes``
-    sets the target), ZeRO block updates, sync-BN.  With
-    ``grad_compression="int8"`` the step additionally takes/returns a
-    ``parallel.overlap.CommState`` (error-feedback residuals) between the
-    opt-state and batch arguments — init via ``overlap.init_comm_state``.
+    With ``settings.mesh``, the step is NamedSharding-constrained
+    end-to-end: params and AdamW moments follow
+    ``parallel.sharding.gan_param_specs`` / ``opt_specs`` (FSDP over the
+    packed N dim + TP over M where it divides, ZeRO-sharded moments), the
+    (z, real) batch shards over the ("pod","data") axes, and the param/opt
+    buffers are donated.  ``settings.batch`` (the global batch size) is
+    required then, for the divisibility check; ``donate=False`` opts out
+    of donation for callers that re-time the step on one argument set
+    (benchmarks).
+
+    ``settings.overlap`` (or any ``settings.grad_compression``) swaps the
+    GSPMD step for the explicit-collective one from ``parallel.overlap``:
+    prefetched FSDP gathers, bucketed grad reduction in backward order
+    (``settings.bucket_bytes`` sets the target), ZeRO block updates,
+    sync-BN.  With ``grad_compression="int8"`` the step additionally
+    takes/returns a ``parallel.overlap.CommState`` (error-feedback
+    residuals) between the opt-state and batch arguments — init via
+    ``overlap.init_comm_state``.
     """
-    if overlap or grad_compression is not None:
+    st = _merge_legacy(settings, dict(
+        lr=lr, b1=b1, mesh=mesh, batch=batch, donate=donate, overlap=overlap,
+        grad_compression=grad_compression, bucket_bytes=bucket_bytes,
+    ), "make_gan_step")
+    cfg = st.apply_to_cfg(cfg)
+    lr, b1, mesh, batch, donate = st.lr, st.b1, st.mesh, st.batch, st.donate
+    if st.comm:
         if mesh is None or batch is None:
             raise ValueError("overlap/grad_compression require mesh and batch")
         from repro.parallel import overlap as OV
 
-        kw = {} if bucket_bytes is None else {"bucket_bytes": bucket_bytes}
+        kw = {} if st.bucket_bytes is None else {"bucket_bytes": st.bucket_bytes}
         fn, _ = OV.build_gan_comm_step(
             cfg, mesh, batch=batch, lr=lr, b1=b1,
-            grad_compression=grad_compression, donate=donate, **kw,
+            grad_compression=st.grad_compression, donate=donate, **kw,
         )
         return fn
 
@@ -148,14 +234,21 @@ def train_gan(
     log_every: int = 10,
     hooks: TrainHooks = TrainHooks(),
     dtype=jnp.float32,
-    deconv_impl: Optional[str] = None,
-    conv_impl: Optional[str] = None,
-    mesh=None,
-    overlap: bool = False,
-    grad_compression: Optional[str] = None,
-    bucket_bytes: Optional[int] = None,
+    settings: Optional[StepSettings] = None,
+    deconv_impl=_UNSET,
+    conv_impl=_UNSET,
+    mesh=_UNSET,
+    overlap=_UNSET,
+    grad_compression=_UNSET,
+    bucket_bytes=_UNSET,
 ) -> dict:
     """End-to-end GAN training on synthetic data; restartable.
+
+    Step construction is configured by ``settings=StepSettings(...)``
+    (the individual ``deconv_impl``/``conv_impl``/``mesh``/``overlap``/
+    ``grad_compression``/``bucket_bytes`` kwargs are a deprecated spelling
+    of the same fields); ``batch`` here is the training loop's global batch
+    and overrides ``settings.batch`` for the step build.
 
     ``deconv_impl`` overrides ``cfg.deconv_impl``; with a ``*_prepacked``
     impl the generator trains in the Winograd domain — params hold the
@@ -179,10 +272,14 @@ def train_gan(
     to zero on fault-restore (they are device-local, not checkpointed —
     one step of bounded extra quantization error).
     """
-    if deconv_impl is not None:
-        cfg = dataclasses.replace(cfg, deconv_impl=deconv_impl)
-    if conv_impl is not None:
-        cfg = dataclasses.replace(cfg, conv_impl=conv_impl)
+    st = _merge_legacy(settings, dict(
+        deconv_impl=deconv_impl, conv_impl=conv_impl, mesh=mesh,
+        overlap=overlap, grad_compression=grad_compression,
+        bucket_bytes=bucket_bytes,
+    ), "train_gan")
+    st = dataclasses.replace(st, batch=batch)  # the loop batch is the global batch
+    cfg = st.apply_to_cfg(cfg)
+    mesh = st.mesh
     k = jax.random.PRNGKey(seed)
     kg, kd = jax.random.split(k)
     gp = G.generator_init(kg, cfg, dtype)
@@ -207,19 +304,16 @@ def train_gan(
         dp = jax.device_put(dp, SH.named(mesh, dsp))
         g_opt = jax.device_put(g_opt, SH.named(mesh, SH.opt_specs(gsp)))
         d_opt = jax.device_put(d_opt, SH.named(mesh, SH.opt_specs(dsp)))
-        step_fn = make_gan_step(
-            cfg, mesh=mesh, batch=batch, overlap=overlap,
-            grad_compression=grad_compression, bucket_bytes=bucket_bytes,
-        )
-        if grad_compression is not None:
+        step_fn = make_gan_step(cfg, settings=st)
+        if st.grad_compression is not None:
             from repro.parallel import overlap as OV
 
-            ckw = {} if bucket_bytes is None else {"bucket_bytes": bucket_bytes}
+            ckw = {} if st.bucket_bytes is None else {"bucket_bytes": st.bucket_bytes}
             comm = OV.init_comm_state(gp, dp, mesh, **ckw)
-    elif overlap or grad_compression is not None:
+    elif st.comm:
         raise ValueError("overlap/grad_compression require mesh")
     else:
-        step_fn = make_gan_step(cfg)
+        step_fn = make_gan_step(cfg, settings=dataclasses.replace(st, batch=None))
     metrics_hist = []
     faulted = False
     s = start
@@ -263,7 +357,7 @@ def train_gan(
                 # the error feedback from zero (bounded one-step error)
                 from repro.parallel import overlap as OV
 
-                ckw = {} if bucket_bytes is None else {"bucket_bytes": bucket_bytes}
+                ckw = {} if st.bucket_bytes is None else {"bucket_bytes": st.bucket_bytes}
                 comm = OV.init_comm_state(gp, dp, mesh, **ckw)
             continue
         if (s + 1) % log_every == 0 or s + 1 == steps:
