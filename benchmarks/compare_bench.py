@@ -42,7 +42,14 @@ trajectory.  Three checks:
     baseline / (1 + tol) and p95 end-to-end latency must not exceed
     baseline * (1 + tol); passing ``--serve-rel-tol`` explicitly arms the
     missing-baseline disarm guard (a baseline without a serve section
-    fails rather than silently gating nothing).
+    fails rather than silently gating nothing);
+  * the ``serve_chaos`` section (the fig8 load test under injected faults,
+    ``--fault-rate``) gates baseline-free on the failure-semantics
+    contract of the FRESH run alone: every submitted request resolved
+    (zero hung futures), accounting reconciles (submitted = delivered +
+    failed + rejected), and the quarantine drill tripped, fast-rejected
+    and recovered its breaker — chaos numbers are load-dependent, so
+    there is no cross-run timing comparison, only invariants.
 
 Interpret-mode CPU timings on shared runners are noisy, so the per-time
 tolerance is deliberately loose by default (2.5x) — it catches the
@@ -301,6 +308,33 @@ def compare(
                         f"(1 + {s_tol}) = {b_p95 * (1 + s_tol):.2f}ms"
                     )
 
+        # chaos harness: baseline-free invariants on the fresh run — the
+        # fault mix makes timings load-dependent, but the no-hang /
+        # accounting / quarantine-recovery contract must hold unconditionally
+        chaos = fresh.get("serve_chaos")
+        if chaos:
+            acct = chaos.get("accounting", {})
+            if acct.get("hung", 0) != 0:
+                failures.append(
+                    f"serve_chaos: {acct.get('hung')} future(s) never "
+                    "resolved (no-hang invariant broken)"
+                )
+            want = (acct.get("delivered", 0) + acct.get("failed", 0)
+                    + acct.get("rejected", 0))
+            if acct.get("submitted") != want:
+                failures.append(
+                    f"serve_chaos: accounting does not reconcile — "
+                    f"submitted {acct.get('submitted')} != delivered + "
+                    f"failed + rejected = {want}"
+                )
+            drill = chaos.get("drill", {})
+            for stage in ("tripped", "fast_rejected", "recovered"):
+                if not drill.get(stage):
+                    failures.append(
+                        f"serve_chaos: quarantine drill stage {stage!r} "
+                        f"did not pass (drill={drill})"
+                    )
+
     b_sh = baseline.get("sharded", {}).get("step_ms", {})
     f_sh = fresh.get("sharded", {}).get("step_ms", {})
     if sharded_only and not b_sh:
@@ -408,7 +442,7 @@ def main(argv: list[str] | None = None) -> int:
         # say what was NOT gated, so the CI log shows the job's actual scope
         skipped = [
             s for s in ("layers", "generator", "discriminator",
-                        "adversarial", "conv1d", "serve")
+                        "adversarial", "conv1d", "serve", "serve_chaos")
             if baseline.get(s)
         ]
         if baseline.get("prepacked_step_speedup_geomean") is not None:

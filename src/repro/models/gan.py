@@ -375,6 +375,37 @@ def clear_prepacked_generators() -> None:
     _SERVE_REGISTRY.clear()
 
 
+# ------------------------------------------------------ resident health hooks
+def params_finite(params: Params) -> bool:
+    """True iff every floating-point leaf of ``params`` is fully finite.
+
+    The serve engine's half-open circuit-breaker probe calls this before
+    re-admitting a quarantined resident: weights poisoned by NaN/Inf (a
+    corrupted restore, an overflowed update) can never produce a good
+    batch, so the probe refuses to close the breaker on them."""
+    for leaf in jax.tree_util.tree_leaves(params):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            if not bool(jnp.all(jnp.isfinite(leaf))):
+                return False
+    return True
+
+
+def generator_health(params: Params, cfg: Optional[GANConfig] = None) -> dict:
+    """Diagnostic health row for a (possibly prepacked) generator: leaf
+    count, parameter count, and whether every weight is finite — the
+    engine-side mirror of the train loop's checkpoint-integrity check."""
+    leaves = [
+        leaf for leaf in jax.tree_util.tree_leaves(params)
+        if hasattr(leaf, "shape")
+    ]
+    return {
+        "finite": params_finite(params),
+        "n_leaves": len(leaves),
+        "n_params": int(sum(int(leaf.size) for leaf in leaves)),
+        "prepacked": cfg is not None and uses_prepacked(cfg.deconv_impl),
+    }
+
+
 def unpack_generator(params: Params, cfg: GANConfig) -> Params:
     """Checkpoint-export inverse of ``prepack_generator``: packed
     Winograd-domain generator params -> raw K_D x K_D deconv weights, via

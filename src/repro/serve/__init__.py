@@ -1,3 +1,4 @@
+from .faults import CircuitBreaker, FaultPlan, GanServeError, InjectedFault
 from .engine import (
     GanFuture,
     GanRequest,
@@ -11,10 +12,14 @@ from . import metrics
 
 __all__ = [
     "AsyncGanServer",
+    "CircuitBreaker",
+    "FaultPlan",
     "GanFuture",
     "GanRequest",
     "GanServeEngine",
+    "GanServeError",
     "GanServeRejected",
+    "InjectedFault",
     "Request",
     "ServeEngine",
     "metrics",

@@ -29,6 +29,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import GANConfig, LMConfig
 from repro.models import lm as LM
+from repro.serve.faults import (
+    CircuitBreaker,
+    FaultPlan,
+    GanServeError,
+    InjectedFault,
+)
 
 
 @dataclasses.dataclass
@@ -142,7 +148,9 @@ class ServeEngine:
 
 # ------------------------------------------------------------------- GAN
 class GanServeRejected(RuntimeError):
-    """The request was refused admission (bounded inbound queue full)."""
+    """The request was refused admission — bounded inbound queue full, or
+    the target arch is quarantined by its circuit breaker.  The message
+    carries the reason."""
 
 
 def _now_ms(now: Optional[float] = None) -> float:
@@ -164,6 +172,10 @@ class GanRequest:
     out: Optional[jax.Array] = None
     done: bool = False
     rejected: bool = False
+    failed: bool = False
+    error: Optional[BaseException] = None
+    reject_reason: Optional[str] = None
+    attempts: int = 0
     t_submit: Optional[float] = None
     t_admit: Optional[float] = None
     t_dispatch: Optional[float] = None
@@ -175,6 +187,13 @@ class GanRequest:
     @property
     def size(self) -> int:
         return int(self.z.shape[0])
+
+    @property
+    def resolved(self) -> bool:
+        """Every request ends in exactly one of three states: served
+        (``done``), rejected, or failed — the serve stack's no-hang
+        invariant is that this eventually becomes True for every submit."""
+        return self.done or self.rejected or self.failed
 
     @property
     def timing(self) -> Optional[dict]:
@@ -199,23 +218,73 @@ class GanFuture:
         self._engine = engine
 
     def done(self) -> bool:
-        return self.request.done or self.request.rejected
+        return self.request.resolved
+
+    def _wait_on_driver(self, timeout: Optional[float]) -> None:
+        """Wait for the async server to fulfil the request — but observe
+        driver death instead of stranding: if the server detaches mid-wait
+        we fall back to self-driving, and if its generate/admission loop
+        has died with no restart coming (watchdog off or exhausted) the
+        wait fails with ``GanServeError`` rather than hanging forever
+        (including ``result(timeout=None)``)."""
+        req = self.request
+        t_end = None if timeout is None else time.monotonic() + timeout
+        while not req.resolved:
+            wait = 0.05
+            if t_end is not None:
+                wait = min(wait, max(0.0, t_end - time.monotonic()))
+            if req.event.wait(wait):
+                return
+            if t_end is not None and time.monotonic() >= t_end:
+                raise TimeoutError(
+                    f"request {req.rid} not served within {timeout}s"
+                )
+            drv = self._engine._driver
+            if drv is None:
+                # server stopped/detached while we waited: drive ourselves
+                remaining = None if t_end is None else \
+                    max(0.0, t_end - time.monotonic())
+                self._engine._drive_until(req, remaining)
+                return
+            if not drv.healthy():
+                req.failed = True
+                req.error = GanServeError(
+                    f"request {req.rid}: serving loop died and will not "
+                    "restart", arch=req.arch, kind="loop_dead",
+                )
+                req.event.set()
+                return
 
     def result(self, timeout: Optional[float] = None) -> jax.Array:
         req = self.request
         if not self.done():
             if self._engine is not None and self._engine._driver is not None:
-                if not req.event.wait(timeout):
-                    raise TimeoutError(
-                        f"request {req.rid} not served within {timeout}s"
-                    )
+                self._wait_on_driver(timeout)
             else:
                 self._engine._drive_until(req, timeout)
         if req.rejected:
             raise GanServeRejected(
-                f"request {req.rid} rejected (inbound queue full)"
+                req.reject_reason
+                or f"request {req.rid} rejected (inbound queue full)"
+            )
+        if req.failed:
+            raise req.error if req.error is not None else GanServeError(
+                f"request {req.rid} failed", arch=req.arch
             )
         return req.out
+
+    def exception(self) -> Optional[BaseException]:
+        """The carried failure (``GanServeError``) or rejection, or None
+        while in flight / on success — without raising."""
+        req = self.request
+        if req.failed:
+            return req.error
+        if req.rejected:
+            return GanServeRejected(
+                req.reject_reason
+                or f"request {req.rid} rejected (inbound queue full)"
+            )
+        return None
 
 
 class _Resident:
@@ -250,6 +319,20 @@ class _Resident:
         self._generate = _generate
         self.bucket_counts: dict[int, int] = {}
         self.served = 0
+        # failure-isolation state (tentpole): final-outcome breaker plus
+        # attempt-level counters the metrics summarize per arch
+        self.breaker = CircuitBreaker()
+        self.failures = 0   # dispatches that ultimately failed (post-retry)
+        self.retries = 0    # extra generate attempts spent on recovery
+        self.nan_trips = 0  # NaN-guard detections (poisoned batches)
+
+    def health_ok(self) -> bool:
+        """Resident health hook (``models.gan.params_finite``): a resident
+        whose packed weights have gone non-finite can never produce a good
+        batch, so the half-open probe refuses to re-admit it."""
+        from repro.models import gan as G
+
+        return G.params_finite(self.params)
 
 
 class GanServeEngine:
@@ -299,7 +382,11 @@ class GanServeEngine:
     def __init__(self, gen_params=None, cfg: Optional[GANConfig] = None, *,
                  models=None, batch: int = 8,
                  buckets: Optional[tuple[int, ...]] = None, mesh=None,
-                 chained: bool = True):
+                 chained: bool = True, max_retries: int = 2,
+                 backoff_ms: float = 2.0, backoff_cap_ms: float = 50.0,
+                 breaker_threshold: int = 3, breaker_cooldown_ms: float = 250.0,
+                 nan_guard: bool = False,
+                 fault_plan: Optional[FaultPlan] = None):
         from repro.models import gan as G
 
         if models is None:
@@ -354,6 +441,25 @@ class GanServeEngine:
         self._driver = None  # serve.loop.AsyncGanServer attaches here
         # per-dispatch admission order (rids), for equivalence tests/debug
         self.dispatch_log: list[tuple[int, ...]] = []
+
+        # ------------------------------------------- failure semantics
+        # retry budget: a failed per-arch generate is retried with capped
+        # exponential backoff, never past a request's absolute deadline
+        # (t_submit + deadline_ms); exhausted budgets carry GanServeError
+        # into the futures.  Each resident gets its own circuit breaker.
+        self.max_retries = int(max_retries)
+        self.backoff_ms = float(backoff_ms)
+        self.backoff_cap_ms = float(backoff_cap_ms)
+        self.nan_guard = bool(nan_guard)
+        self.fault_plan = fault_plan
+        for res in self.archs.values():
+            res.breaker = CircuitBreaker(
+                threshold=breaker_threshold, cooldown_ms=breaker_cooldown_ms
+            )
+        # requests snapshotted out of ``active`` by an in-progress dispatch:
+        # the watchdog fails these (instead of stranding them) if the
+        # generate thread dies mid-dispatch
+        self._inflight: list[GanRequest] = []
 
     # ------------------------------------------------------------- routing
     def _resolve_arch(self, arch: Optional[str]) -> str:
@@ -452,14 +558,24 @@ class GanServeEngine:
         accelerator works), then run ONE bucketed generate per resident
         arch aboard, split the rows back per request, stamp the SLO times
         and fire the completion events.  Returns the finished requests in
-        admission order."""
+        admission order.
+
+        Failure isolation: each arch's generate runs behind its own
+        try/except + retry loop (``_serve_arch``) — a failing arch marks
+        only ITS requests with a carried ``GanServeError`` while the other
+        archs in the same dispatch complete normally.  No exception ever
+        escapes a dispatch to kill the driving thread."""
         with self._lock:
             if not self.active:
                 return []
-            batch_reqs = self.active
+            batch_reqs = [r for r in self.active if not r.resolved]
             self.active, self.rows_used = [], 0
             self._window_deadline, self._immediate = None, False
+            if not batch_reqs:
+                return []
             self.dispatch_log.append(tuple(r.rid for r in batch_reqs))
+            dispatch_idx = len(self.dispatch_log) - 1
+            self._inflight = batch_reqs
         t_disp = _now_ms(now)
         for r in batch_reqs:
             r.t_dispatch = t_disp
@@ -467,19 +583,136 @@ class GanServeEngine:
         for r in batch_reqs:
             by_arch.setdefault(r.arch, []).append(r)
         for arch, reqs in by_arch.items():
-            z_all = jnp.concatenate([r.z for r in reqs], axis=0)
-            imgs = self.generate(z_all, arch=arch)
-            jax.block_until_ready(imgs)  # honest compute stamp
+            self._serve_arch(arch, reqs, dispatch_idx, now)
+        with self._lock:
+            self._inflight = []
+        return batch_reqs
+
+    def _fail_requests(self, reqs: list[GanRequest], err: BaseException,
+                       now: Optional[float] = None) -> None:
+        """Carry ``err`` into the requests' futures: mark failed, stamp
+        t_done, fire the events — a failure resolves, it never strands."""
+        t = _now_ms(now)
+        for r in reqs:
+            r.error = err
+            r.failed = True
+            r.t_done = t
+            r.event.set()
+
+    def _serve_arch(self, arch: str, reqs: list[GanRequest],
+                    dispatch_idx: int, now: Optional[float] = None) -> None:
+        """One resident's share of a dispatch, under the full failure
+        contract: fault injection (``FaultPlan``), optional NaN/Inf output
+        guard, capped exponential-backoff retries that never run past a
+        request's absolute deadline (t_submit + deadline_ms), and circuit-
+        breaker accounting on the final outcome.  Total isolation: no
+        exception escapes to the caller."""
+        res = self.archs[arch]
+        pending = list(reqs)
+        attempt = 0
+        while True:
+            plan = self.fault_plan
+            for r in pending:
+                r.attempts += 1
+            b = sum(r.size for r in pending)
+            k = self.bucket_for(b)
+            try:
+                fault = None if plan is None else plan.draw(
+                    arch=arch, rids=tuple(r.rid for r in pending),
+                    dispatch_idx=dispatch_idx, attempt=attempt,
+                )
+                if fault == "delay":
+                    time.sleep(plan.delay_ms / 1e3)
+                elif fault == "raise":
+                    raise InjectedFault(
+                        f"injected fault (arch={arch}, "
+                        f"dispatch={dispatch_idx}, attempt={attempt})"
+                    )
+                z_all = jnp.concatenate([r.z for r in pending], axis=0)
+                z_pad = jnp.pad(
+                    z_all, ((0, k - b),) + ((0, 0),) * (z_all.ndim - 1)
+                )
+                imgs = res._generate(res.params, z_pad)
+                jax.block_until_ready(imgs)  # honest compute stamp
+                if fault == "nan":
+                    imgs = jnp.full_like(imgs, jnp.nan)
+                if self.nan_guard and not bool(jnp.all(jnp.isfinite(imgs))):
+                    res.nan_trips += 1
+                    raise GanServeError(
+                        f"arch {arch}: non-finite values in generated batch",
+                        arch=arch, kind="nan", attempts=attempt + 1,
+                    )
+            except Exception as e:  # isolation boundary — nothing escapes
+                retry_ok = attempt < self.max_retries
+                backoff_ms = min(
+                    self.backoff_ms * (2 ** attempt), self.backoff_cap_ms
+                )
+                t = _now_ms(now)
+                survivors, dropped = [], []
+                for r in pending:
+                    dl = None if r.deadline_ms is None else \
+                        (r.t_submit or t) + r.deadline_ms
+                    if retry_ok and (dl is None or t + backoff_ms <= dl):
+                        survivors.append(r)
+                    else:
+                        dropped.append(r)
+                kind = getattr(e, "kind", "exception")
+                if dropped:
+                    self._fail_requests(dropped, GanServeError(
+                        f"arch {arch}: dispatch failed after "
+                        f"{attempt + 1} attempt(s): {e}",
+                        arch=arch, kind=(kind if not retry_ok else "deadline"),
+                        attempts=attempt + 1, cause=e,
+                    ), now)
+                if not survivors:
+                    res.failures += 1
+                    res.breaker.on_failure(now)
+                    return
+                res.retries += 1
+                attempt += 1
+                pending = survivors
+                if now is None:
+                    time.sleep(backoff_ms / 1e3)
+                continue
+            # success: resident health gates half-open re-admission — a
+            # probe through poisoned weights must not close the breaker
+            if res.breaker.state == "half_open" and not res.health_ok():
+                res.failures += 1
+                res.breaker.on_failure(now)
+                self._fail_requests(pending, GanServeError(
+                    f"arch {arch}: resident weights are non-finite",
+                    arch=arch, kind="weights", attempts=attempt + 1,
+                ), now)
+                return
+            res.bucket_counts[k] = res.bucket_counts.get(k, 0) + 1
+            res.served += b
+            self.served += b
+            t_done = _now_ms(now)
             row = 0
-            for r in reqs:
+            for r in pending:
                 r.out = imgs[row : row + r.size]
                 row += r.size
-        t_done = _now_ms(now)
-        for r in batch_reqs:
-            r.t_done = t_done
-            r.done = True
-            r.event.set()
-        return batch_reqs
+                r.t_done = t_done
+                r.done = True
+                r.event.set()
+            res.breaker.on_success()
+            return
+
+    # ------------------------------------------------------------- health
+    def health(self) -> dict:
+        """Per-arch serve health: circuit-breaker state + failure/retry
+        counters — the rows ``serve.metrics.summarize(counters=...)``
+        merges into its per-arch table."""
+        return {
+            arch: {
+                **res.breaker.counters(),
+                "failures": res.failures,
+                "retries": res.retries,
+                "nan_trips": res.nan_trips,
+                "served": res.served,
+            }
+            for arch, res in self.archs.items()
+        }
 
     # -------------------------------------------------------- futures API
     def submit(self, z: jax.Array, *, arch: Optional[str] = None,
@@ -492,12 +725,19 @@ class GanServeEngine:
         closes — driven by ``GanFuture.result()`` for synchronous callers,
         or by the ``AsyncGanServer`` generate loop when one is attached.
         ``deadline_ms`` bounds the coalescing delay this request tolerates
-        (omit it to demand immediate service at the next dispatch)."""
+        (omit it to demand immediate service at the next dispatch).
+
+        A quarantined arch (circuit breaker open after K consecutive
+        dispatch failures) fast-rejects with a reasoned
+        ``GanServeRejected`` instead of queueing work that would fail."""
         arch_r = self._resolve_arch(arch)
         if int(z.shape[0]) > self.batch:
             raise ValueError(
                 f"request batch {int(z.shape[0])} > engine max bucket {self.batch}"
             )
+        ok, reason = self.archs[arch_r].breaker.allow_submit(now)
+        if not ok:
+            raise GanServeRejected(f"arch {arch_r!r}: {reason}")
         req = GanRequest(
             rid=next(self._rid), z=z, arch=arch_r, deadline_ms=deadline_ms,
             t_submit=_now_ms(now),
@@ -512,7 +752,7 @@ class GanServeEngine:
         pending requests and dispatch batches as their windows close, until
         ``req`` completes (sleeping out still-open deadline windows)."""
         t_end = None if timeout is None else time.monotonic() + timeout
-        while not (req.done or req.rejected):
+        while not req.resolved:
             with self._lock:
                 self._admit_pending()
                 open_ = self.window_open()
@@ -524,7 +764,7 @@ class GanServeEngine:
             if ready:
                 self._dispatch()
                 continue
-            if req.done or req.rejected:
+            if req.resolved:
                 break
             if t_end is not None and time.monotonic() >= t_end:
                 raise TimeoutError(

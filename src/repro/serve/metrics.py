@@ -77,16 +77,32 @@ def _row(reqs: list, span_s: float) -> dict:
     return row
 
 
-def summarize(requests: Iterable, *, span_s: Optional[float] = None) -> dict:
+def summarize(requests: Iterable, *, span_s: Optional[float] = None,
+              counters: Optional[dict] = None) -> dict:
     """Aggregate completed requests into {"_all": row, <arch>: row, ...}.
 
     ``span_s`` is the observed wall-clock span the throughput figures are
     normalized by; when omitted it is inferred as (max t_done - min
-    t_submit) over the completed requests.  Rejected requests are counted
-    (per arch, under "rejected") but excluded from the latency stats.
+    t_submit) over the completed requests.  Rejected and failed requests
+    are counted (per arch, under "rejected" / "failed") but excluded from
+    the latency stats — a failed request carries a ``GanServeError``, it
+    never delivered images.
+
+    ``counters`` merges per-arch serve-health counters into the rows —
+    pass ``GanServeEngine.health()`` (breaker state, error/retry/
+    quarantine counts) or ``AsyncGanServer.health()["archs"]``; numeric
+    counter values additionally sum into the ``_all`` row, and a
+    ``counters["_server"]`` entry (e.g. watchdog restarts) merges into
+    ``_all`` directly.
     """
+    requests = list(requests)
     done = [r for r in requests if r.done and not getattr(r, "rejected", False)]
     rejected = [r for r in requests if getattr(r, "rejected", False)]
+    failed = [
+        r for r in requests
+        if getattr(r, "failed", False) and not r.done
+        and not getattr(r, "rejected", False)
+    ]
     if span_s is None:
         stamps = [
             (r.t_submit, r.t_done) for r in done
@@ -98,9 +114,25 @@ def summarize(requests: Iterable, *, span_s: Optional[float] = None) -> dict:
         )
     out = {"_all": _row(done, span_s)}
     out["_all"]["rejected"] = len(rejected)
-    archs = sorted({r.arch for r in done if getattr(r, "arch", None) is not None})
+    out["_all"]["failed"] = len(failed)
+    archs = sorted({
+        r.arch for r in done + failed + rejected
+        if getattr(r, "arch", None) is not None
+    })
     for arch in archs:
         row = _row([r for r in done if r.arch == arch], span_s)
         row["rejected"] = sum(1 for r in rejected if getattr(r, "arch", None) == arch)
+        row["failed"] = sum(1 for r in failed if getattr(r, "arch", None) == arch)
         out[arch] = row
+    if counters:
+        totals: dict[str, float] = {}
+        for arch, ctr in counters.items():
+            if arch == "_server":
+                continue
+            out.setdefault(arch, {}).update(ctr)
+            for k, v in ctr.items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    totals[k] = totals.get(k, 0) + v
+        out["_all"].update(totals)
+        out["_all"].update(counters.get("_server", {}))
     return out

@@ -1,12 +1,24 @@
-from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from .checkpoint import (
+    CheckpointCorruptError,
+    available_steps,
+    latest_step,
+    restore_checkpoint,
+    restore_latest_valid,
+    save_checkpoint,
+    verify_checkpoint,
+)
 from .trainer import StepSettings, TrainHooks, make_gan_step, train_gan
 
 __all__ = [
+    "CheckpointCorruptError",
     "StepSettings",
     "TrainHooks",
+    "available_steps",
     "latest_step",
     "make_gan_step",
     "restore_checkpoint",
+    "restore_latest_valid",
     "save_checkpoint",
     "train_gan",
+    "verify_checkpoint",
 ]

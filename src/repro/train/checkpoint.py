@@ -1,10 +1,19 @@
-"""Fault-tolerant checkpointing: atomic, keep-k, mesh-elastic.
+"""Fault-tolerant checkpointing: atomic, keep-k, mesh-elastic, verified.
 
 Layout: <dir>/step_<N>/  with one .npy per flattened pytree leaf plus a
 msgpack manifest holding the treedef key-paths, shapes and dtypes.  Writes
 go to a tmp dir then os.replace (atomic on POSIX), so a crash mid-save can
 never corrupt the latest checkpoint — the trainer's restart path depends on
 this.
+
+Integrity: the manifest records a per-leaf sha256 (over the raw array
+bytes) at save time, and restore verifies it — a truncated ``leaf_*.npy``,
+a bit-flipped weight, or a manifest/shape mismatch raises
+``CheckpointCorruptError`` instead of silently loading garbage (or killing
+the run with an opaque numpy error).  ``restore_latest_valid`` walks the
+kept steps newest-first and returns the first checkpoint that verifies, so
+the trainer's fault-restore path falls back to the next-older checkpoint
+when the latest is corrupt.
 
 Elasticity: leaves are saved as *global* (fully-replicated) arrays; on
 restore the caller passes target shardings for the *current* mesh, so a run
@@ -13,6 +22,7 @@ device (tests cover a device-count change via a subprocess).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -23,6 +33,12 @@ import jax.numpy as jnp
 import numpy as np
 
 MANIFEST = "manifest.json"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """The checkpoint on disk fails integrity verification: a leaf file is
+    missing/unreadable/truncated, its bytes do not match the manifest's
+    sha256, or the manifest itself is damaged."""
 _NATIVE_NUMPY = {
     np.dtype(t)
     for t in ("float64", "float32", "float16", "int64", "int32", "int16", "int8",
@@ -34,6 +50,13 @@ def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     items = [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
     return items, treedef
+
+
+def _leaf_sha(arr: np.ndarray) -> str:
+    """sha256 over the raw array bytes as saved (post any uint8 reinterpret
+    for non-native dtypes) — the same bytes ``np.load`` hands back, so the
+    restore-side hash needs no dtype gymnastics."""
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
 
 
 def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3) -> str:
@@ -53,7 +76,8 @@ def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3) -> str:
             arr = arr.view(np.uint8)
         np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
         manifest["leaves"].append(
-            {"key": keypath, "file": f"leaf_{i}.npy", "shape": list(leaf.shape), "dtype": logical_dtype}
+            {"key": keypath, "file": f"leaf_{i}.npy", "shape": list(leaf.shape),
+             "dtype": logical_dtype, "sha256": _leaf_sha(arr)}
         )
     with open(os.path.join(tmp, MANIFEST), "w") as f:
         json.dump(manifest, f)
@@ -75,22 +99,67 @@ def _prune(directory: str, keep: int) -> None:
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
-    steps = [
+    steps = available_steps(directory)
+    return max(steps) if steps else None
+
+
+def available_steps(directory: str) -> list[int]:
+    """The kept checkpoint steps on disk, ascending (no validity check)."""
+    if not os.path.isdir(directory):
+        return []
+    return sorted(
         int(d.split("_")[1])
         for d in os.listdir(directory)
         if d.startswith("step_") and not d.endswith(".tmp")
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def _load_manifest(path: str) -> dict:
+    try:
+        with open(os.path.join(path, MANIFEST)) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(f"{path}: unreadable manifest: {e}") from e
+
+
+def _load_leaf(path: str, rec: dict) -> np.ndarray:
+    """One leaf off disk, integrity-verified against its manifest record
+    (sha256 when present — older manifests without it load unverified)."""
+    fpath = os.path.join(path, rec["file"])
+    try:
+        arr = np.load(fpath)
+    except Exception as e:  # truncated/garbage .npy: numpy raises a zoo
+        raise CheckpointCorruptError(
+            f"{fpath}: unreadable leaf ({type(e).__name__}: {e})"
+        ) from e
+    want_sha = rec.get("sha256")
+    if want_sha is not None:
+        got = _leaf_sha(arr)
+        if got != want_sha:
+            raise CheckpointCorruptError(
+                f"{fpath}: sha256 mismatch (manifest {want_sha[:12]}…, "
+                f"disk {got[:12]}…)"
+            )
+    return arr
+
+
+def verify_checkpoint(directory: str, step: int) -> None:
+    """Raise ``CheckpointCorruptError`` unless every leaf of ``step``'s
+    checkpoint is present on disk and matches its manifest sha256."""
+    path = os.path.join(directory, f"step_{step:012d}")
+    manifest = _load_manifest(path)
+    for rec in manifest["leaves"]:
+        _load_leaf(path, rec)
 
 
 def restore_checkpoint(directory: str, step: int, like, *, shardings=None):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs).  ``shardings``: optional matching pytree of
     jax.sharding.Sharding to place leaves on the *current* mesh (elastic
-    restore)."""
+    restore).  Every leaf is integrity-verified against the manifest's
+    sha256 on the way in; corruption raises ``CheckpointCorruptError``."""
     path = os.path.join(directory, f"step_{step:012d}")
-    with open(os.path.join(path, MANIFEST)) as f:
-        manifest = json.load(f)
+    manifest = _load_manifest(path)
     by_key = {l["key"]: l for l in manifest["leaves"]}
     items, treedef = _flatten(like)
     shard_items = None
@@ -101,16 +170,37 @@ def restore_checkpoint(directory: str, step: int, like, *, shardings=None):
         rec = by_key.get(keypath)
         if rec is None:
             raise KeyError(f"checkpoint missing leaf {keypath}")
-        arr = np.load(os.path.join(path, rec["file"]))
+        arr = _load_leaf(path, rec)
         if rec["dtype"] not in {str(d) for d in _NATIVE_NUMPY}:
             import ml_dtypes
 
             arr = arr.view(np.dtype(getattr(ml_dtypes, rec["dtype"]))).reshape(rec["shape"])
         want_shape = tuple(leaf.shape)
         if tuple(arr.shape) != want_shape:
+            # a shape mismatch with a VALID sha is a caller error (wrong
+            # ``like``), not disk corruption — don't let the fallback walk
+            # silently skip past it
             raise ValueError(f"{keypath}: ckpt shape {arr.shape} != wanted {want_shape}")
         if shard_items is not None:
             out.append(jax.device_put(arr, shard_items[i][1]))
         else:
             out.append(jnp.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_latest_valid(directory: str, like, *, shardings=None,
+                         on_skip=None) -> tuple[Optional[int], Any]:
+    """Restore the NEWEST checkpoint that passes integrity verification,
+    walking older steps when the latest is corrupt (the keep-k window is
+    the redundancy budget).  Returns ``(step, tree)``; ``(None, None)``
+    when no valid checkpoint exists.  ``on_skip(step, error)`` is called
+    for every corrupt step skipped (logging hook)."""
+    for step in reversed(available_steps(directory)):
+        try:
+            return step, restore_checkpoint(
+                directory, step, like, shardings=shardings
+            )
+        except CheckpointCorruptError as e:
+            if on_skip is not None:
+                on_skip(step, e)
+    return None, None

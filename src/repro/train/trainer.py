@@ -285,13 +285,20 @@ def train_gan(
     gp = G.generator_init(kg, cfg, dtype)
     dp = G.discriminator_init(kd, cfg, dtype)
     g_opt, d_opt = adamw_init(gp), adamw_init(dp)
+    def _warn_corrupt(step_, err):
+        warnings.warn(
+            f"checkpoint step {step_} failed integrity verification "
+            f"({err}); falling back to the next-older checkpoint",
+            RuntimeWarning, stacklevel=2,
+        )
+
     start = 0
     if ckpt_dir:
-        last = C.latest_step(ckpt_dir)
+        last, tree = C.restore_latest_valid(
+            ckpt_dir, {"gp": gp, "dp": dp, "g_opt": g_opt, "d_opt": d_opt},
+            on_skip=_warn_corrupt,
+        )
         if last is not None:
-            tree = C.restore_checkpoint(
-                ckpt_dir, last, {"gp": gp, "dp": dp, "g_opt": g_opt, "d_opt": d_opt}
-            )
             gp, dp, g_opt, d_opt = tree["gp"], tree["dp"], tree["g_opt"], tree["d_opt"]
             start = last
 
@@ -336,20 +343,22 @@ def train_gan(
             if hooks.step_deadline_s and time.monotonic() - t0 > hooks.step_deadline_s:
                 raise TimeoutError(f"step {s} exceeded deadline (straggler)")
         except (RuntimeError, TimeoutError) as e:
-            # fault path: restore last checkpoint and replay
+            # fault path: restore the newest VALID checkpoint and replay —
+            # a corrupt latest (truncated leaf, bit-flip) falls back to the
+            # next-older one instead of killing the recovery itself
             if not ckpt_dir:
                 raise
-            last = C.latest_step(ckpt_dir)
+            last, tree = C.restore_latest_valid(
+                ckpt_dir, {"gp": gp, "dp": dp, "g_opt": g_opt, "d_opt": d_opt},
+                on_skip=_warn_corrupt,
+            )
             if last is None:
-                # no checkpoint yet: restart from init
+                # no (valid) checkpoint yet: restart from init
                 kg, kd = jax.random.split(jax.random.PRNGKey(seed))
                 gp, dp = G.generator_init(kg, cfg, dtype), G.discriminator_init(kd, cfg, dtype)
                 g_opt, d_opt = adamw_init(gp), adamw_init(dp)
                 s = 0
             else:
-                tree = C.restore_checkpoint(
-                    ckpt_dir, last, {"gp": gp, "dp": dp, "g_opt": g_opt, "d_opt": d_opt}
-                )
                 gp, dp, g_opt, d_opt = tree["gp"], tree["dp"], tree["g_opt"], tree["d_opt"]
                 s = last
             if comm is not None:

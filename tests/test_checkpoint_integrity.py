@@ -1,0 +1,165 @@
+"""Checkpoint integrity: per-leaf sha256 verification, corruption
+detection, and the trainer's fall-back-to-next-older-checkpoint recovery.
+
+The threat model is disk-level damage the old restore path turned into an
+opaque numpy error (truncated ``leaf_*.npy``) or — worse — silently loaded
+(bit-flipped weights with an intact header).  Both must now raise
+``CheckpointCorruptError``, and the trainer's resume/fault-restore paths
+must walk back to the newest VALID checkpoint instead of dying.
+"""
+import dataclasses
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.gan_zoo import DCGAN
+from repro.train import checkpoint as C
+from repro.train.trainer import TrainHooks, train_gan
+
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        DCGAN,
+        stem_ch=32,
+        deconvs=tuple(
+            dataclasses.replace(d, c_in=32 if i == 0 else 16,
+                                c_out=16 if i < len(DCGAN.deconvs) - 1 else 3)
+            for i, d in enumerate(DCGAN.deconvs)
+        ),
+        deconv_impl="ref",
+        disc_channels=(8, 8, 8, 8),
+    )
+
+
+def _tree(v=0.0):
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3) + v,
+            "b": {"c": jnp.ones(4, jnp.bfloat16) * (1 + v)}}
+
+
+def _step_dir(tmp_path, step):
+    return os.path.join(str(tmp_path), f"step_{step:012d}")
+
+
+def _leaf_files(tmp_path, step):
+    d = _step_dir(tmp_path, step)
+    return sorted(os.path.join(d, f) for f in os.listdir(d)
+                  if f.startswith("leaf_"))
+
+
+# ------------------------------------------------------------ verification
+def test_manifest_records_sha_and_verify_passes(tmp_path):
+    C.save_checkpoint(str(tmp_path), 3, _tree())
+    with open(os.path.join(_step_dir(tmp_path, 3), C.MANIFEST)) as f:
+        manifest = json.load(f)
+    assert all(len(rec["sha256"]) == 64 for rec in manifest["leaves"])
+    C.verify_checkpoint(str(tmp_path), 3)  # no raise
+
+
+def test_bitflip_detected_on_verify_and_restore(tmp_path):
+    """Same shape, same dtype, different bytes: the old path loaded this
+    silently; the sha catches it."""
+    C.save_checkpoint(str(tmp_path), 0, _tree())
+    victim = _leaf_files(tmp_path, 0)[0]
+    arr = np.load(victim)
+    flipped = arr.copy()
+    flipped.flat[0] += 1
+    np.save(victim, flipped)
+    with pytest.raises(C.CheckpointCorruptError, match="sha256 mismatch"):
+        C.verify_checkpoint(str(tmp_path), 0)
+    with pytest.raises(C.CheckpointCorruptError):
+        C.restore_checkpoint(str(tmp_path), 0, _tree())
+
+
+def test_truncated_leaf_detected(tmp_path):
+    C.save_checkpoint(str(tmp_path), 0, _tree())
+    victim = _leaf_files(tmp_path, 0)[0]
+    with open(victim, "r+b") as f:
+        f.truncate(os.path.getsize(victim) // 2)
+    with pytest.raises(C.CheckpointCorruptError, match="unreadable leaf"):
+        C.verify_checkpoint(str(tmp_path), 0)
+
+
+def test_damaged_manifest_detected(tmp_path):
+    C.save_checkpoint(str(tmp_path), 0, _tree())
+    with open(os.path.join(_step_dir(tmp_path, 0), C.MANIFEST), "w") as f:
+        f.write("{not json")
+    with pytest.raises(C.CheckpointCorruptError, match="unreadable manifest"):
+        C.restore_checkpoint(str(tmp_path), 0, _tree())
+
+
+def test_pre_sha_manifest_still_loads(tmp_path):
+    """Back-compat: manifests written before the integrity layer have no
+    sha256 field — they load (unverified) rather than failing."""
+    C.save_checkpoint(str(tmp_path), 0, _tree())
+    mpath = os.path.join(_step_dir(tmp_path, 0), C.MANIFEST)
+    with open(mpath) as f:
+        manifest = json.load(f)
+    for rec in manifest["leaves"]:
+        del rec["sha256"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    back = C.restore_checkpoint(str(tmp_path), 0, _tree())
+    np.testing.assert_array_equal(back["a"], _tree()["a"])
+
+
+# ----------------------------------------------------------- fallback walk
+def test_restore_latest_valid_falls_back_to_older(tmp_path):
+    C.save_checkpoint(str(tmp_path), 1, _tree(1.0))
+    C.save_checkpoint(str(tmp_path), 2, _tree(2.0))
+    victim = _leaf_files(tmp_path, 2)[0]
+    with open(victim, "wb") as f:
+        f.write(b"garbage")
+    skipped = []
+    step, tree = C.restore_latest_valid(
+        str(tmp_path), _tree(), on_skip=lambda s, e: skipped.append(s)
+    )
+    assert step == 1 and skipped == [2]
+    np.testing.assert_array_equal(tree["a"], _tree(1.0)["a"])
+    assert C.available_steps(str(tmp_path)) == [1, 2]
+
+
+def test_restore_latest_valid_none_when_all_corrupt(tmp_path):
+    C.save_checkpoint(str(tmp_path), 1, _tree())
+    for f in _leaf_files(tmp_path, 1):
+        with open(f, "wb") as fh:
+            fh.write(b"x")
+    step, tree = C.restore_latest_valid(str(tmp_path), _tree())
+    assert step is None and tree is None
+
+
+# --------------------------------------------------------------- trainer
+def test_trainer_resumes_past_corrupt_latest(tmp_path):
+    """End-to-end: the latest checkpoint is corrupted on disk; a relaunch
+    (and a mid-run fault-restore) must warn, fall back to the next-older
+    checkpoint, replay, and land on the same final metrics as an
+    uninterrupted run — instead of dying on the corrupt files."""
+    cfg = _tiny_cfg()
+    kw = dict(batch=2, seed=3, log_every=2)
+    clean = train_gan(cfg, steps=8, ckpt_dir=str(tmp_path / "clean"),
+                      ckpt_every=2, **kw)
+
+    ckpt = tmp_path / "faulty"
+    train_gan(cfg, steps=4, ckpt_dir=str(ckpt), ckpt_every=2, **kw)
+    assert C.latest_step(str(ckpt)) == 4
+    # corrupt the newest checkpoint's first leaf (truncation)
+    victim = _leaf_files(ckpt, 4)[0]
+    with open(victim, "r+b") as f:
+        f.truncate(os.path.getsize(victim) // 2)
+    with pytest.raises(C.CheckpointCorruptError):
+        C.verify_checkpoint(str(ckpt), 4)
+
+    # relaunch towards step 8 with a fault injected mid-run; ckpt_every=10
+    # writes nothing new before the fault, so BOTH restore paths (initial
+    # resume AND fault-restore) must walk past the corrupt step 4 to step 2
+    with pytest.warns(RuntimeWarning, match="failed integrity"):
+        out = train_gan(
+            cfg, steps=8, ckpt_dir=str(ckpt), ckpt_every=10,
+            hooks=TrainHooks(inject_fault_at=5), **kw
+        )
+    assert out["final_step"] == 8
+    a, b = clean["metrics"][-1], out["metrics"][-1]
+    assert a["step"] == b["step"]
+    np.testing.assert_allclose(a["g_loss"], b["g_loss"], rtol=1e-5)

@@ -1,0 +1,393 @@
+"""Failure semantics of the serve stack: the fault matrix.
+
+Injected exception / NaN batch / delay faults (``FaultPlan``), per-arch
+failure isolation, deadline-aware retry, the circuit-breaker quarantine
+cycle (trip -> fast-reject -> half-open probe -> recovery), watchdog
+supervision of the async loops, no-hang ``result()`` against a dead
+server, and stop-under-wedge.  The invariant under test throughout: every
+submitted request RESOLVES — done, rejected, or failed — never hangs.
+
+Synchronous tests drive the engine with virtual ``now=`` timestamps (no
+sleeps); the supervision tests use real threads.
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.gan_zoo import ARTGAN, tiny_dcgan
+from repro.serve import (
+    AsyncGanServer,
+    CircuitBreaker,
+    FaultPlan,
+    GanServeEngine,
+    GanServeError,
+    GanServeRejected,
+    InjectedFault,
+)
+from repro.models import gan as G
+
+
+def _tiny_artgan(deconv_impl: str = "ref"):
+    """ArtGAN shrunk to test scale — a second, structurally different
+    resident (same shrink as test_serve_async)."""
+    last = len(ARTGAN.deconvs) - 1
+    return dataclasses.replace(
+        ARTGAN,
+        stem_ch=16,
+        deconvs=tuple(
+            dataclasses.replace(
+                d, c_in=16 if i == 0 else 8, c_out=8 if i < last else 3
+            )
+            for i, d in enumerate(ARTGAN.deconvs)
+        ),
+        deconv_impl=deconv_impl,
+        disc_channels=(8, 8, 8, 8),
+    )
+
+
+def _two_arch_engine(**kw):
+    cfg_a, cfg_b = tiny_dcgan("ref"), _tiny_artgan("ref")
+    pa = G.generator_init(jax.random.PRNGKey(0), cfg_a)
+    pb = G.generator_init(jax.random.PRNGKey(1), cfg_b)
+    eng = GanServeEngine(
+        models={"dcgan": (pa, cfg_a), "artgan": (pb, cfg_b)}, batch=4, **kw
+    )
+    za = jax.random.normal(jax.random.PRNGKey(2), (1, cfg_a.z_dim))
+    zb = jax.random.normal(jax.random.PRNGKey(3), (1, cfg_b.z_dim))
+    return eng, za, zb
+
+
+def _one_arch_engine(**kw):
+    cfg = tiny_dcgan("ref")
+    p = G.generator_init(jax.random.PRNGKey(0), cfg)
+    eng = GanServeEngine(p, cfg, batch=4, **kw)
+    z = jax.random.normal(jax.random.PRNGKey(4), (1, cfg.z_dim))
+    return eng, z
+
+
+# ------------------------------------------------------- failure isolation
+def test_injected_exception_isolates_failing_arch():
+    """One dispatch, two archs: the faulted arch's request fails with a
+    carried GanServeError while the healthy arch's request serves."""
+    eng, za, zb = _two_arch_engine(max_retries=0)
+    eng.fault_plan = FaultPlan(kind="raise", arch="dcgan", persistent=True)
+    fa = eng.submit(za, arch="dcgan", now=0.0)
+    fb = eng.submit(zb, arch="artgan", now=0.0)
+    eng._dispatch(now=0.0)
+    # both archs rode the SAME dispatch
+    assert eng.dispatch_log == [(fa.request.rid, fb.request.rid)]
+    with pytest.raises(GanServeError) as ei:
+        fa.result(timeout=1)
+    assert ei.value.arch == "dcgan" and ei.value.kind == "exception"
+    assert isinstance(ei.value.cause, InjectedFault)
+    out = fb.result(timeout=1)
+    assert out.shape[0] == 1 and fb.done()
+    assert eng.archs["dcgan"].failures == 1
+    assert eng.archs["artgan"].failures == 0
+    # failure resolved, never stranded
+    assert fa.request.resolved and fa.request.t_done is not None
+
+
+def test_nan_guard_fails_poisoned_batch():
+    eng, z = _one_arch_engine(max_retries=0, nan_guard=True)
+    eng.fault_plan = FaultPlan(kind="nan", persistent=True)
+    f = eng.submit(z, now=0.0)
+    eng._dispatch(now=0.0)
+    with pytest.raises(GanServeError) as ei:
+        f.result(timeout=1)
+    assert ei.value.kind == "nan"
+    assert eng.archs[eng.default_arch].nan_trips == 1
+
+
+def test_nan_without_guard_serves_poison():
+    """The guard is opt-in: with it off a NaN batch delivers (the caller
+    owns output validation)."""
+    eng, z = _one_arch_engine(max_retries=0, nan_guard=False)
+    eng.fault_plan = FaultPlan(kind="nan", persistent=True)
+    f = eng.submit(z, now=0.0)
+    eng._dispatch(now=0.0)
+    out = f.result(timeout=1)
+    assert bool(jnp.isnan(out).all())
+    assert eng.archs[eng.default_arch].nan_trips == 0
+
+
+def test_delay_fault_is_tail_latency_not_failure():
+    eng, z = _one_arch_engine()
+    eng.fault_plan = FaultPlan(kind="delay", delay_ms=1.0, persistent=True)
+    f = eng.submit(z, now=0.0)
+    eng._dispatch(now=0.0)
+    assert f.result(timeout=1).shape[0] == 1
+    assert eng.fault_plan.fired == 1
+    assert eng.archs[eng.default_arch].failures == 0
+
+
+# ------------------------------------------------------------------ retry
+def test_retry_recovers_transient_fault():
+    """persistent=False fires only on attempt 0, so the first retry
+    succeeds — the request delivers, the breaker stays closed."""
+    eng, z = _one_arch_engine(max_retries=2)
+    eng.fault_plan = FaultPlan(kind="raise", rate=1.0, persistent=False)
+    f = eng.submit(z, now=0.0)
+    eng._dispatch(now=0.0)
+    assert f.result(timeout=1).shape[0] == 1
+    res = eng.archs[eng.default_arch]
+    assert f.request.attempts == 2
+    assert res.retries == 1 and res.failures == 0
+    assert res.breaker.state == "closed"
+
+
+def test_retry_never_runs_past_deadline():
+    """A request whose absolute deadline can't fit the backoff is dropped
+    with kind='deadline' instead of burning a doomed retry."""
+    eng, z = _one_arch_engine(max_retries=2, backoff_ms=2.0)
+    eng.fault_plan = FaultPlan(kind="raise", rate=1.0, persistent=False)
+    f = eng.submit(z, deadline_ms=0.0, now=0.0)
+    eng._dispatch(now=0.0)
+    with pytest.raises(GanServeError) as ei:
+        f.result(timeout=1)
+    assert ei.value.kind == "deadline" and ei.value.attempts == 1
+    res = eng.archs[eng.default_arch]
+    assert res.retries == 0 and res.failures == 1
+
+
+def test_retry_exhaustion_counts_one_breaker_failure():
+    """A persistent fault burns the whole retry budget but records ONE
+    final outcome on the breaker (per-dispatch, not per-attempt)."""
+    eng, z = _one_arch_engine(max_retries=2, breaker_threshold=3)
+    eng.fault_plan = FaultPlan(kind="raise", persistent=True)
+    f = eng.submit(z, now=0.0)
+    eng._dispatch(now=0.0)
+    with pytest.raises(GanServeError) as ei:
+        f.result(timeout=1)
+    assert ei.value.attempts == 3  # 1 + max_retries
+    res = eng.archs[eng.default_arch]
+    assert res.breaker.consecutive_failures == 1
+    assert res.breaker.state == "closed"  # threshold not reached yet
+
+
+# -------------------------------------------------------------- quarantine
+def test_quarantine_fast_reject_halfopen_recovery():
+    """The full breaker cycle: K consecutive dispatch failures open it,
+    submits fast-reject with a reasoned GanServeRejected, the cooldown
+    half-opens it, and a successful probe re-admits the arch — while the
+    other resident arch serves normally throughout."""
+    eng, za, zb = _two_arch_engine(
+        max_retries=0, breaker_threshold=2, breaker_cooldown_ms=100.0
+    )
+    res = eng.archs["dcgan"]
+    eng.fault_plan = FaultPlan(kind="raise", arch="dcgan", persistent=True)
+    for t in (0.0, 10.0):
+        f = eng.submit(za, arch="dcgan", now=t)
+        eng._dispatch(now=t)
+        with pytest.raises(GanServeError):
+            f.result(timeout=1)
+    assert res.breaker.state == "open" and res.breaker.trips == 1
+    # quarantined: new submits fast-reject, with the reason in the message
+    with pytest.raises(GanServeRejected, match="quarantined after 2"):
+        eng.submit(za, arch="dcgan", now=20.0)
+    # the healthy arch is untouched by its neighbor's quarantine
+    fb = eng.submit(zb, arch="artgan", now=20.0)
+    eng._dispatch(now=20.0)
+    assert fb.result(timeout=1).shape[0] == 1
+    # cooldown elapses -> half-open -> successful probe re-closes
+    eng.fault_plan = None
+    fp = eng.submit(za, arch="dcgan", now=150.0)
+    assert res.breaker.state == "half_open"
+    eng._dispatch(now=150.0)
+    assert fp.result(timeout=1).shape[0] == 1
+    assert res.breaker.state == "closed" and res.breaker.recoveries == 1
+    # health() reports the recovery
+    h = eng.health()["dcgan"]
+    assert h["breaker_trips"] == 1 and h["breaker_recoveries"] == 1
+
+
+def test_failed_halfopen_probe_reopens():
+    eng, z = _one_arch_engine(
+        max_retries=0, breaker_threshold=1, breaker_cooldown_ms=100.0
+    )
+    res = eng.archs[eng.default_arch]
+    eng.fault_plan = FaultPlan(kind="raise", persistent=True)
+    f = eng.submit(z, now=0.0)
+    eng._dispatch(now=0.0)
+    with pytest.raises(GanServeError):
+        f.result(timeout=1)
+    assert res.breaker.state == "open"
+    # probe admitted after cooldown, but the fault persists: re-open
+    fp = eng.submit(z, now=200.0)
+    assert res.breaker.state == "half_open"
+    eng._dispatch(now=200.0)
+    with pytest.raises(GanServeError):
+        fp.result(timeout=1)
+    assert res.breaker.state == "open" and res.breaker.trips == 2
+    assert res.breaker.recoveries == 0
+
+
+def test_breaker_state_machine_pure():
+    """The state machine alone, on virtual clocks — no engine."""
+    br = CircuitBreaker(threshold=2, cooldown_ms=50.0)
+    assert br.allow_submit(0.0) == (True, "")
+    br.on_failure(0.0)
+    assert br.state == "closed"
+    br.on_failure(1.0)
+    assert br.state == "open"
+    ok, reason = br.allow_submit(10.0)
+    assert not ok and "quarantined" in reason
+    ok, _ = br.allow_submit(60.0)  # cooldown elapsed -> half_open
+    assert ok and br.state == "half_open"
+    br.on_success()
+    assert br.state == "closed" and br.recoveries == 1
+    # success resets the consecutive counter
+    br.on_failure(70.0)
+    assert br.state == "closed" and br.consecutive_failures == 1
+
+
+# -------------------------------------------------------------- fault plan
+def test_fault_plan_targeting():
+    plan = FaultPlan(kind="raise", every_n=2, arch="a", persistent=True)
+    hit = lambda arch, idx, att=0: plan.draw(  # noqa: E731
+        arch=arch, rids=(0,), dispatch_idx=idx, attempt=att
+    )
+    assert hit("a", 0) == "raise"
+    assert hit("a", 1) is None          # every_n misses odd dispatches
+    assert hit("b", 2) is None          # wrong arch
+    assert hit("a", 2) == "raise"
+    plan2 = FaultPlan(kind="raise", rids=frozenset({7}))
+    assert plan2.draw(arch="a", rids=(1, 2), dispatch_idx=0) is None
+    assert plan2.draw(arch="a", rids=(7,), dispatch_idx=0) == "raise"
+    # attempt > 0 only fires when persistent
+    assert plan2.draw(arch="a", rids=(7,), dispatch_idx=0, attempt=1) is None
+    plan3 = FaultPlan(kind="mix", persistent=True, max_faults=3)
+    kinds = [plan3.draw(arch="x", rids=(0,), dispatch_idx=i) for i in range(5)]
+    assert kinds == ["raise", "nan", "delay", None, None]  # rotation + cap
+    assert plan3.fired_by_kind == {"raise": 1, "nan": 1, "delay": 1}
+    with pytest.raises(ValueError):
+        FaultPlan(kind="segfault")
+
+
+# ------------------------------------------------------------- supervision
+# the supervision tests kill loop threads ON PURPOSE; pytest's unhandled-
+# thread-exception warning is the expected crime scene, not a test smell
+_dead_thread_ok = pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning"
+)
+
+
+@_dead_thread_ok
+def test_watchdog_restarts_dead_loop_and_fails_inflight():
+    """A generate-loop death (exception past the isolation boundary) fails
+    the in-flight future with kind='loop_dead' — never strands it — and the
+    watchdog restarts the loop so the next submit serves."""
+    eng, z = _one_arch_engine()
+    orig = eng._dispatch
+    calls = {"n": 0}
+
+    def boom(now=None):
+        if calls["n"] == 0:
+            calls["n"] += 1
+            raise RuntimeError("escaped the isolation boundary")
+        return orig(now)
+
+    eng._dispatch = boom
+    srv = AsyncGanServer(eng, watchdog=True, watchdog_interval_ms=5.0,
+                         poll_interval_ms=0.5).start()
+    try:
+        f = srv.submit(z)
+        with pytest.raises(GanServeError) as ei:
+            f.result(timeout=30)
+        assert ei.value.kind == "loop_dead"
+        assert srv.restart_count == 1
+        # restarted loop serves new work
+        f2 = srv.submit(z)
+        assert f2.result(timeout=30).shape[0] == 1
+        assert srv.healthy()
+        assert srv.health()["restarts"] == 1
+    finally:
+        srv.stop()
+
+
+@_dead_thread_ok
+def test_restart_budget_exhausted_fails_not_hangs():
+    eng, z = _one_arch_engine()
+
+    def always_boom(now=None):
+        raise RuntimeError("boom")
+
+    eng._dispatch = always_boom
+    srv = AsyncGanServer(eng, watchdog=True, watchdog_interval_ms=5.0,
+                         poll_interval_ms=0.5, max_restarts=0).start()
+    try:
+        f = srv.submit(z)
+        with pytest.raises(GanServeError):
+            f.result(timeout=30)
+        deadline = time.monotonic() + 10
+        while srv.healthy() and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert not srv.healthy() and srv.health()["failed"]
+        # a failed server rejects instead of queueing doomed work
+        f2 = srv.submit(z)
+        with pytest.raises(GanServeRejected, match="restart budget"):
+            f2.result(timeout=1)
+    finally:
+        srv.stop(drain=False)
+
+
+@_dead_thread_ok
+def test_result_never_hangs_when_loop_dead_and_no_watchdog():
+    """Regression: driver attached + dead generate thread used to hang
+    ``result`` forever.  With the watchdog off and no restart coming, even
+    ``result(timeout=None)`` must raise, not block."""
+    eng, z = _one_arch_engine()
+
+    def always_boom(now=None):
+        raise RuntimeError("boom")
+
+    eng._dispatch = always_boom
+    srv = AsyncGanServer(eng, watchdog=False, poll_interval_ms=0.5).start()
+    try:
+        f = srv.submit(z)
+        with pytest.raises(GanServeError) as ei:
+            f.result(timeout=None)  # the hang case: unbounded wait
+        assert ei.value.kind == "loop_dead"
+        assert f.request.resolved
+    finally:
+        srv.stop(drain=False)
+
+
+def test_stop_under_wedge_fails_futures_and_raises():
+    """stop() must never return cleanly while a loop thread is alive: the
+    wedged thread is reported, in-flight futures fail with
+    kind='stop_wedged', and RuntimeError surfaces to the caller."""
+    eng, z = _one_arch_engine()
+
+    def wedge(now=None):
+        time.sleep(3.0)
+        return []
+
+    eng._dispatch = wedge
+    srv = AsyncGanServer(eng, watchdog=False, poll_interval_ms=0.5).start()
+    f = srv.submit(z)
+    time.sleep(0.2)  # let the generate loop enter the wedged dispatch
+    with pytest.raises(RuntimeError, match="still alive"):
+        srv.stop(drain=False, timeout=0.3)
+    assert "generate" in srv.wedged
+    assert not srv.healthy()
+    with pytest.raises(GanServeError) as ei:
+        f.result(timeout=1)
+    assert ei.value.kind == "stop_wedged"
+
+
+def test_healthy_path_unchanged_under_installed_but_idle_plan():
+    """A plan that never matches (wrong arch) leaves the serve path
+    byte-identical to no plan at all."""
+    eng, z = _one_arch_engine()
+    base = eng.generate(z)
+    eng.fault_plan = FaultPlan(kind="raise", arch="not-resident",
+                               persistent=True)
+    f = eng.submit(z, now=0.0)
+    eng._dispatch(now=0.0)
+    out = f.result(timeout=1)
+    assert bool(jnp.all(out == base))
+    assert eng.fault_plan.fired == 0
