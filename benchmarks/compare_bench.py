@@ -49,7 +49,14 @@ trajectory.  Three checks:
     (zero hung futures), accounting reconciles (submitted = delivered +
     failed + rejected), and the quarantine drill tripped, fast-rejected
     and recovered its breaker — chaos numbers are load-dependent, so
-    there is no cross-run timing comparison, only invariants.
+    there is no cross-run timing comparison, only invariants;
+  * the ``train_chaos`` section (``train_step --train-chaos``) gates the
+    train loop's failure contract the same baseline-free way: the chaos
+    run terminated with finite metrics, injected vs handled fault
+    accounting reconciles, a persistent fault escalated within its
+    bounded restore budget (no infinite replay), and a
+    preempted-then-resumed run reproduced the uninterrupted metrics
+    exactly.
 
 Interpret-mode CPU timings on shared runners are noisy, so the per-time
 tolerance is deliberately loose by default (2.5x) — it catches the
@@ -335,6 +342,53 @@ def compare(
                         f"did not pass (drill={drill})"
                     )
 
+        # train-side chaos drill: baseline-free invariants on the fresh run
+        # (the train twin of serve_chaos) — the resilient train loop must
+        # terminate under injected faults, end finite, reconcile its fault
+        # accounting, bound the crashloop escalation, and resume bit-exact
+        tchaos = fresh.get("train_chaos")
+        if tchaos:
+            rec = tchaos.get("recovery", {})
+            if not rec.get("terminated"):
+                failures.append(
+                    "train_chaos: chaos run did not reach the target step "
+                    f"(recovery={rec.get('counters')})"
+                )
+            if not rec.get("final_metrics_finite"):
+                failures.append(
+                    "train_chaos: final metrics are not finite (the sentinel "
+                    "let a poisoned update survive)"
+                )
+            acct_t = rec.get("accounting", {})
+            if not acct_t.get("reconciles"):
+                failures.append(
+                    "train_chaos: injected vs handled fault accounting does "
+                    f"not reconcile ({acct_t})"
+                )
+            esc = tchaos.get("escalation", {})
+            if not esc.get("raised"):
+                failures.append(
+                    "train_chaos: persistent fault did not escalate into a "
+                    "carried TrainFaultError (unbounded replay?)"
+                )
+            elif not esc.get("bounded"):
+                failures.append(
+                    "train_chaos: escalation exceeded the restore budget "
+                    f"(attempts={esc.get('attempts')})"
+                )
+            par = tchaos.get("resume_parity", {})
+            if not par.get("preempted"):
+                failures.append(
+                    "train_chaos: the preempt fault did not produce a clean "
+                    "preempted return"
+                )
+            if not par.get("match"):
+                failures.append(
+                    "train_chaos: preempt-resume metrics differ from the "
+                    "uninterrupted run "
+                    f"(max_abs_diff={par.get('max_abs_diff')})"
+                )
+
     b_sh = baseline.get("sharded", {}).get("step_ms", {})
     f_sh = fresh.get("sharded", {}).get("step_ms", {})
     if sharded_only and not b_sh:
@@ -442,7 +496,8 @@ def main(argv: list[str] | None = None) -> int:
         # say what was NOT gated, so the CI log shows the job's actual scope
         skipped = [
             s for s in ("layers", "generator", "discriminator",
-                        "adversarial", "conv1d", "serve", "serve_chaos")
+                        "adversarial", "conv1d", "serve", "serve_chaos",
+                        "train_chaos")
             if baseline.get(s)
         ]
         if baseline.get("prepacked_step_speedup_geomean") is not None:

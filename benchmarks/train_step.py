@@ -46,6 +46,14 @@ per-device batch, with the per-step grad-reduction wire bytes recorded.
 ``--profile`` attributes every sharded/weak-scaling point from the lowered
 HLO (collective counts, wire bytes, flops — ``launch.hlo_costs``) and drops
 jax profiler traces under ``--profile-dir``.
+
+``--train-chaos`` runs the train-side chaos drill (``bench_train_chaos``):
+the resilient ``train_gan`` loop under injected NaN gradients, a persistent
+raising step, on-disk checkpoint corruption and simulated preemption.  The
+``"train_chaos"`` section records invariants, not timings — run terminates,
+final metrics finite, fault accounting reconciles, preempt-resume metrics
+parity — and ``compare_bench`` gates them baseline-free (the twin of fig8's
+``serve_chaos`` section).
 """
 from __future__ import annotations
 
@@ -702,6 +710,127 @@ def bench_weak_scaling(
     return out
 
 
+def bench_train_chaos(*, smoke: bool, seed: int = 0) -> dict:
+    """Train-side chaos drill (the twin of fig8's ``serve_chaos``): run the
+    resilient ``train_gan`` loop under injected faults and record the
+    invariants ``compare_bench`` gates baseline-free — no timings, only
+    contract checks:
+
+      * **recovery** — NaN grads + a persistent raising step + one on-disk
+        checkpoint corruption, all in one run: it must terminate (no
+        infinite replay), end with finite metrics, and the injected vs
+        handled fault accounting must reconcile;
+      * **escalation** — an uncapped persistent fault must escalate into a
+        carried ``TrainFaultError`` within the policy's per-step budget
+        (the bounded-crashloop regression guard);
+      * **resume_parity** — a chaos-preempted run relaunched from its
+        final checkpoint must reproduce an uninterrupted run's metrics
+        exactly (loop state, comm residuals and params all round-trip).
+    """
+    import math
+    import tempfile
+
+    from repro.configs.gan_zoo import tiny_dcgan
+    from repro.train import resilience as R
+    from repro.train.trainer import train_gan
+
+    cfg = tiny_dcgan()
+    steps = 10 if smoke else 20
+    out: dict = {"arch": cfg.arch_id, "steps": steps, "smoke": smoke}
+
+    with tempfile.TemporaryDirectory() as td:
+        # -------- recovery: the acceptance-criteria chaos cocktail
+        plans = [
+            R.TrainFaultPlan(kind="nan_grad", at_step=3, max_faults=1),
+            R.TrainFaultPlan(kind="corrupt_ckpt", at_step=5, max_faults=1),
+            R.TrainFaultPlan(kind="raise", at_step=7, persistent=True,
+                             max_faults=2),
+        ]
+        import warnings as _w
+
+        with _w.catch_warnings():
+            _w.simplefilter("ignore", RuntimeWarning)
+            res = train_gan(
+                cfg, steps=steps, batch=2, seed=seed, log_every=1,
+                ckpt_every=4, ckpt_dir=os.path.join(td, "recovery"),
+                fault_plan=plans, handle_signals=False,
+            )
+        cnt, inj = res["counters"], res["faults_injected"]
+        handled = cnt["injected_handled"]
+        finite = bool(res["metrics"]) and all(
+            math.isfinite(v) for e in res["metrics"] for v in e.values()
+        )
+        detail = {
+            "raise_handled_eq_injected":
+                handled.get("raise", 0) == inj.get("raise", 0),
+            "nan_grad_handled_eq_injected":
+                handled.get("nan_grad", 0) == inj.get("nan_grad", 0),
+            "corrupt_ckpt_le_fallbacks":
+                inj.get("corrupt_ckpt", 0) <= cnt["ckpt_fallbacks"],
+            "metrics_steps_unique": len({e["step"] for e in res["metrics"]})
+                == len(res["metrics"]),
+        }
+        out["recovery"] = {
+            "terminated": res["final_step"] == steps,
+            "final_metrics_finite": finite,
+            "counters": cnt,
+            "injected": inj,
+            "accounting": {"reconciles": all(detail.values()), **detail},
+        }
+        print(f"train_step,train_chaos,recovery,terminated="
+              f"{out['recovery']['terminated']},finite={finite},"
+              f"reconciles={all(detail.values())},injected={inj},"
+              f"handled={handled}")
+
+        # -------- escalation: persistent fault must NOT replay forever
+        esc: dict = {"raised": False, "bounded": False}
+        try:
+            train_gan(
+                cfg, steps=6, batch=2, seed=seed, log_every=1,
+                ckpt_every=2, ckpt_dir=os.path.join(td, "escalation"),
+                fault_plan=R.TrainFaultPlan(kind="raise", at_step=2,
+                                            persistent=True),
+                policy=R.FaultPolicy(max_restores_per_step=2),
+                handle_signals=False,
+            )
+        except R.TrainFaultError as e:
+            esc = {
+                "raised": True, "kind": e.kind, "step": e.step,
+                "attempts": e.attempts,
+                "bounded": e.attempts <= 2 + 1,  # budget + escalating try
+            }
+        out["escalation"] = esc
+        print(f"train_step,train_chaos,escalation,raised={esc['raised']},"
+              f"attempts={esc.get('attempts')},bounded={esc['bounded']}")
+
+        # -------- resume parity: preempt mid-run, relaunch, compare exact
+        kw = dict(steps=6, batch=2, seed=seed, log_every=1, ckpt_every=3,
+                  handle_signals=False)
+        clean = train_gan(cfg, ckpt_dir=os.path.join(td, "clean"), **kw)
+        pre = train_gan(
+            cfg, ckpt_dir=os.path.join(td, "pre"),
+            fault_plan=R.TrainFaultPlan(kind="preempt", at_step=4,
+                                        max_faults=1),
+            **kw,
+        )
+        resumed = train_gan(cfg, ckpt_dir=os.path.join(td, "pre"), **kw)
+        diffs = [
+            abs(a[k] - b[k])
+            for a, b in zip(clean["metrics"], resumed["metrics"])
+            for k in a
+        ] if len(clean["metrics"]) == len(resumed["metrics"]) else [float("inf")]
+        out["resume_parity"] = {
+            "preempted": pre["preempted"],
+            "match": clean["metrics"] == resumed["metrics"],
+            "max_abs_diff": max(diffs) if diffs else float("inf"),
+            "compared_entries": len(clean["metrics"]),
+        }
+        print(f"train_step,train_chaos,resume_parity,"
+              f"match={out['resume_parity']['match']},"
+              f"max_abs_diff={out['resume_parity']['max_abs_diff']:.3e}")
+    return out
+
+
 def main(argv: list[str] | None = None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, help="one gan_zoo arch (default: all)")
@@ -730,6 +859,11 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--grad-compression", default="int8",
                     choices=("int8", "none"),
                     help="gradient compression for the weak-scaling step")
+    ap.add_argument("--train-chaos", action="store_true",
+                    help="run the train-side chaos drill (injected NaN "
+                         "grads, persistent raising step, checkpoint "
+                         "corruption, preemption) and record its "
+                         "invariants as the gated 'train_chaos' section")
     args = ap.parse_args(argv)
     if args.devices_only and not args.devices:
         ap.error("--devices-only requires --devices N")
@@ -819,6 +953,8 @@ def main(argv: list[str] | None = None) -> dict:
             ),
             profile=args.profile, profile_dir=args.profile_dir,
         )
+    if args.train_chaos:
+        report["train_chaos"] = bench_train_chaos(smoke=args.smoke)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"train_step,wrote,{args.out}")

@@ -61,6 +61,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.parallel import compression
 from repro.parallel import sharding as SH
+from repro.train.resilience import nonfinite_flag
 
 # 4 MiB of fp32 per bucket: large enough that host/DCN per-collective launch
 # overhead amortizes, small enough that the first reduction can start well
@@ -335,7 +336,8 @@ def build_gan_comm_step(
         tuple(P(axes, None) for _ in d_plan.numels),
     )
     rep = lambda tree: compat.tree_map(lambda _: P(), tree)
-    mspec = {k: P() for k in ("g_loss", "d_loss", "g_grad_norm", "d_grad_norm")}
+    mspec = {k: P() for k in ("g_loss", "d_loss", "g_grad_norm", "d_grad_norm",
+                              "nonfinite")}
 
     def _inner(gp, dp, g_opt, d_opt, comm, z, real):
         # sync-BN: batch statistics psum across the data shards, so this
@@ -394,6 +396,9 @@ def build_gan_comm_step(
             "g_grad_norm": gn_g,
             "d_grad_norm": gn_d,
         }
+        # in-jit sentinel flag: one fused finiteness reduction the trainer
+        # reads host-side each step (same contract as the other step paths)
+        metrics["nonfinite"] = nonfinite_flag(metrics)
         comm2 = CommState(g_res2, d_res2) if compress else None
         return out_gp, out_dp, g_opt2, d_opt2, comm2, metrics
 

@@ -2,19 +2,37 @@ from .checkpoint import (
     CheckpointCorruptError,
     available_steps,
     latest_step,
+    load_loop_state,
     restore_checkpoint,
     restore_latest_valid,
     save_checkpoint,
     verify_checkpoint,
 )
+from .resilience import (
+    DivergenceDetector,
+    FaultPolicy,
+    InjectedTrainFault,
+    PreemptionGuard,
+    TrainDivergenceError,
+    TrainFaultError,
+    TrainFaultPlan,
+)
 from .trainer import StepSettings, TrainHooks, make_gan_step, train_gan
 
 __all__ = [
     "CheckpointCorruptError",
+    "DivergenceDetector",
+    "FaultPolicy",
+    "InjectedTrainFault",
+    "PreemptionGuard",
     "StepSettings",
+    "TrainDivergenceError",
+    "TrainFaultError",
+    "TrainFaultPlan",
     "TrainHooks",
     "available_steps",
     "latest_step",
+    "load_loop_state",
     "make_gan_step",
     "restore_checkpoint",
     "restore_latest_valid",

@@ -4,7 +4,18 @@ Layout: <dir>/step_<N>/  with one .npy per flattened pytree leaf plus a
 msgpack manifest holding the treedef key-paths, shapes and dtypes.  Writes
 go to a tmp dir then os.replace (atomic on POSIX), so a crash mid-save can
 never corrupt the latest checkpoint — the trainer's restart path depends on
-this.
+this.  Every leaf file, the manifest, the tmp directory and (post-rename)
+the parent directory are fsync'd before the rename is allowed to land, so
+a power loss cannot leave a renamed-but-torn checkpoint that passes the
+directory listing: either the old state survives or the new one is fully
+durable.
+
+Loop state: ``save_checkpoint(..., loop_state={...})`` persists a small
+JSON sidecar (``loop_state.json``) inside the step dir — the trainer puts
+its metrics history, loop counters and lr scale there so a preempted run
+resumes bit-exact.  The sidecar's sha256 lives in the manifest like any
+leaf's, so a damaged sidecar makes the whole checkpoint fail verification
+(and the ``restore_latest_valid`` walk falls back past it).
 
 Integrity: the manifest records a per-leaf sha256 (over the raw array
 bytes) at save time, and restore verifies it — a truncated ``leaf_*.npy``,
@@ -33,6 +44,31 @@ import jax.numpy as jnp
 import numpy as np
 
 MANIFEST = "manifest.json"
+LOOP_STATE = "loop_state.json"
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    """Durably record a directory's entries (the rename itself).  Some
+    filesystems/platforms refuse directory fsync — best effort there, the
+    per-file fsyncs still hold."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 class CheckpointCorruptError(RuntimeError):
@@ -59,8 +95,15 @@ def _leaf_sha(arr: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
 
 
-def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3) -> str:
-    """Atomically persist ``tree`` at ``step``; prune to the newest ``keep``."""
+def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3,
+                    loop_state: Optional[dict] = None) -> str:
+    """Atomically persist ``tree`` at ``step``; prune to the newest ``keep``.
+
+    ``loop_state`` (a small JSON-serializable dict) rides along as a
+    sha-verified sidecar — the trainer's metrics history and loop
+    counters, so resume-after-preemption is bit-exact.  Every file is
+    fsync'd before the atomic rename, so a torn write cannot survive a
+    power loss as a "valid" latest checkpoint."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:012d}")
     tmp = final + ".tmp"
@@ -74,16 +117,34 @@ def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3) -> str:
         logical_dtype = str(arr.dtype)
         if arr.dtype not in _NATIVE_NUMPY:  # ml_dtypes (bf16/fp8): store raw bytes
             arr = arr.view(np.uint8)
-        np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+        fpath = os.path.join(tmp, f"leaf_{i}.npy")
+        with open(fpath, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
         manifest["leaves"].append(
             {"key": keypath, "file": f"leaf_{i}.npy", "shape": list(leaf.shape),
              "dtype": logical_dtype, "sha256": _leaf_sha(arr)}
         )
+    if loop_state is not None:
+        blob = json.dumps(loop_state).encode()
+        with open(os.path.join(tmp, LOOP_STATE), "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["loop_state"] = {
+            "file": LOOP_STATE,
+            "sha256": hashlib.sha256(blob).hexdigest(),
+        }
     with open(os.path.join(tmp, MANIFEST), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    _fsync_dir(directory)
     _prune(directory, keep)
     return final
 
@@ -143,13 +204,44 @@ def _load_leaf(path: str, rec: dict) -> np.ndarray:
     return arr
 
 
+def load_loop_state(directory: str, step: int) -> Optional[dict]:
+    """The ``loop_state`` sidecar saved with ``step``'s checkpoint, or
+    None for checkpoints written without one (back-compat).  A sidecar
+    the manifest promises but that is missing, unreadable, or fails its
+    sha256 raises ``CheckpointCorruptError`` — it is part of the
+    checkpoint, so a resume must not silently proceed without it."""
+    path = os.path.join(directory, f"step_{step:012d}")
+    manifest = _load_manifest(path)
+    rec = manifest.get("loop_state")
+    if rec is None:
+        return None
+    fpath = os.path.join(path, rec["file"])
+    try:
+        with open(fpath, "rb") as f:
+            blob = f.read()
+    except OSError as e:
+        raise CheckpointCorruptError(f"{fpath}: unreadable loop state: {e}") from e
+    got = hashlib.sha256(blob).hexdigest()
+    if got != rec["sha256"]:
+        raise CheckpointCorruptError(
+            f"{fpath}: sha256 mismatch (manifest {rec['sha256'][:12]}…, "
+            f"disk {got[:12]}…)"
+        )
+    try:
+        return json.loads(blob.decode())
+    except (ValueError, UnicodeDecodeError) as e:  # sha ok but not JSON
+        raise CheckpointCorruptError(f"{fpath}: undecodable loop state: {e}") from e
+
+
 def verify_checkpoint(directory: str, step: int) -> None:
     """Raise ``CheckpointCorruptError`` unless every leaf of ``step``'s
-    checkpoint is present on disk and matches its manifest sha256."""
+    checkpoint (and its loop-state sidecar, when present) is on disk and
+    matches its manifest sha256."""
     path = os.path.join(directory, f"step_{step:012d}")
     manifest = _load_manifest(path)
     for rec in manifest["leaves"]:
         _load_leaf(path, rec)
+    load_loop_state(directory, step)
 
 
 def restore_checkpoint(directory: str, step: int, like, *, shardings=None):
@@ -197,9 +289,9 @@ def restore_latest_valid(directory: str, like, *, shardings=None,
     for every corrupt step skipped (logging hook)."""
     for step in reversed(available_steps(directory)):
         try:
-            return step, restore_checkpoint(
-                directory, step, like, shardings=shardings
-            )
+            tree = restore_checkpoint(directory, step, like, shardings=shardings)
+            load_loop_state(directory, step)  # sidecar must verify too
+            return step, tree
         except CheckpointCorruptError as e:
             if on_skip is not None:
                 on_skip(step, e)

@@ -1,14 +1,25 @@
 """Training loops: GAN (the paper's workload) and LM (assigned archs).
 
-Fault-tolerance contract:
-  * every N steps the full (params, opt_state, step) tree is checkpointed
-    atomically;
-  * a step failure (device error, preemption, injected fault) triggers
-    restore-from-latest and replay — the data pipeline is a pure function of
-    (seed, step) so replay is exact;
-  * async dispatch: the loop never blocks on metrics except at log
-    boundaries (straggler mitigation on real clusters: the host queue stays
-    full; a watchdog deadline marks a step lost instead of hanging).
+Fault-tolerance contract (see ``train/resilience.py`` for the pieces):
+  * every N steps the full (params, opt_state, comm residuals) tree plus
+    the loop state (metrics history, lr scale, counters) is checkpointed
+    atomically and fsync-durably;
+  * a step failure (device error, injected fault, straggler deadline)
+    triggers restore-from-latest and replay — the data pipeline is a pure
+    function of (seed, step) so replay is exact — under a **bounded**
+    ``FaultPolicy`` budget: a fault that re-fires deterministically at the
+    same step escalates into a carried ``TrainFaultError`` after
+    ``max_restores_per_step`` restores instead of replaying forever;
+  * a step **sentinel** (in-jit finiteness flag + host-side windowed
+    divergence detector) catches NaN losses and blown-up trajectories the
+    step they happen; the policy decides skip / rollback (with an
+    lr-scale knob) / abort;
+  * SIGTERM/SIGINT request **preemption-safe exit**: one final atomic
+    checkpoint (including the loop state), then a clean return with
+    ``"preempted": True`` — resume is bit-exact vs an uninterrupted run;
+  * async dispatch: with the sentinel off the loop never blocks on
+    metrics except at log boundaries; with it on (the default) it reads
+    five device scalars per step — one small transfer.
 """
 from __future__ import annotations
 
@@ -19,6 +30,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import data as D
@@ -26,6 +38,10 @@ from repro.configs.base import GANConfig
 from repro.models import gan as G
 from repro.optim import adamw_init, adamw_update
 from repro.train import checkpoint as C
+from repro.train import resilience as R
+
+#: every step variant (single-device, GSPMD, overlapped) emits these
+METRIC_SPEC_KEYS = ("g_loss", "d_loss", "g_grad_norm", "d_grad_norm", "nonfinite")
 
 
 @dataclasses.dataclass
@@ -201,6 +217,9 @@ def make_gan_step(cfg: GANConfig, lr=_UNSET, b1=_UNSET, *,
             "g_grad_norm": gm["grad_norm"],
             "d_grad_norm": dm["grad_norm"],
         }
+        # in-jit sentinel bit: one fused isfinite reduction over the four
+        # scalars above, read by the host as part of the metrics fetch
+        metrics["nonfinite"] = R.nonfinite_flag(metrics)
         return gp2, dp2, g_opt2, d_opt2, metrics
 
     if mesh is None:
@@ -211,7 +230,7 @@ def make_gan_step(cfg: GANConfig, lr=_UNSET, b1=_UNSET, *,
 
     gsp, dsp, _ = SH.gan_param_specs(cfg, mesh)
     zspec, rspec, _ = SH.gan_batch_specs(cfg, batch, mesh)
-    mspec = {k: P() for k in ("g_loss", "d_loss", "g_grad_norm", "d_grad_norm")}
+    mspec = {k: P() for k in METRIC_SPEC_KEYS}
     named = lambda t: SH.named(mesh, t)
     return jax.jit(
         step,
@@ -235,6 +254,9 @@ def train_gan(
     hooks: TrainHooks = TrainHooks(),
     dtype=jnp.float32,
     settings: Optional[StepSettings] = None,
+    policy: Optional[R.FaultPolicy] = None,
+    fault_plan=None,
+    handle_signals: bool = True,
     deconv_impl=_UNSET,
     conv_impl=_UNSET,
     mesh=_UNSET,
@@ -268,9 +290,23 @@ def train_gan(
 
     ``overlap``/``grad_compression``/``bucket_bytes`` select the
     communication-efficient step (see ``make_gan_step``); with int8
-    compression the error-feedback residuals live in loop state and reset
-    to zero on fault-restore (they are device-local, not checkpointed —
-    one step of bounded extra quantization error).
+    compression the error-feedback residuals (``CommState``) are part of
+    the checkpoint tree, so fault-restore and resume replay bit-exact;
+    pre-existing checkpoints without a comm subtree restore with zeroed
+    residuals (one step of bounded extra quantization error).
+
+    Resilience (see ``train/resilience.py``): ``policy`` is the
+    ``FaultPolicy`` bounding fault-restores (per-step crashloop budget,
+    run-wide budget, capped exponential backoff) and deciding what a
+    sentinel-flagged divergent step does (``skip``/``rollback``/``abort``
+    with an optional per-rollback lr scale).  ``fault_plan`` installs one
+    ``TrainFaultPlan`` (or a sequence) for chaos injection.  With
+    ``handle_signals`` (default), SIGTERM/SIGINT trigger a final atomic
+    checkpoint (params + loop state) and a clean return with
+    ``"preempted": True``; relaunching with the same ``ckpt_dir`` resumes
+    to metrics bit-identical to an uninterrupted run.  The result dict
+    carries ``counters``/``fault_log``/``faults_injected`` so a chaos
+    harness can reconcile injected vs handled faults.
     """
     st = _merge_legacy(settings, dict(
         deconv_impl=deconv_impl, conv_impl=conv_impl, mesh=mesh,
@@ -280,27 +316,63 @@ def train_gan(
     st = dataclasses.replace(st, batch=batch)  # the loop batch is the global batch
     cfg = st.apply_to_cfg(cfg)
     mesh = st.mesh
-    k = jax.random.PRNGKey(seed)
-    kg, kd = jax.random.split(k)
-    gp = G.generator_init(kg, cfg, dtype)
-    dp = G.discriminator_init(kd, cfg, dtype)
-    g_opt, d_opt = adamw_init(gp), adamw_init(dp)
+    pol = policy if policy is not None else R.FaultPolicy()
+    plans = () if fault_plan is None else (
+        tuple(fault_plan) if isinstance(fault_plan, (list, tuple)) else (fault_plan,)
+    )
+    skip_mode = pol.on_divergence == "skip"
+    if skip_mode and st.donate:
+        # "skip" reverts to the pre-step buffers, so they must stay alive
+        st = dataclasses.replace(st, donate=False)
+    detector = R.DivergenceDetector(pol) if pol.sentinel else None
+
+    counters: dict = {
+        "restores": 0, "rollbacks": 0, "skips": 0, "sentinel_trips": 0,
+        "ckpt_fallbacks": 0, "injected_handled": {},
+    }
+    fault_log: list[dict] = []
+
     def _warn_corrupt(step_, err):
+        counters["ckpt_fallbacks"] += 1
         warnings.warn(
             f"checkpoint step {step_} failed integrity verification "
             f"({err}); falling back to the next-older checkpoint",
             RuntimeWarning, stacklevel=2,
         )
 
+    k = jax.random.PRNGKey(seed)
+    kg, kd = jax.random.split(k)
+    gp = G.generator_init(kg, cfg, dtype)
+    dp = G.discriminator_init(kd, cfg, dtype)
+    g_opt, d_opt = adamw_init(gp), adamw_init(dp)
+    _like = lambda: {"gp": gp, "dp": dp, "g_opt": g_opt, "d_opt": d_opt}
+
     start = 0
+    restored_ls = None
     if ckpt_dir:
-        last, tree = C.restore_latest_valid(
-            ckpt_dir, {"gp": gp, "dp": dp, "g_opt": g_opt, "d_opt": d_opt},
-            on_skip=_warn_corrupt,
-        )
+        last, tree = C.restore_latest_valid(ckpt_dir, _like(), on_skip=_warn_corrupt)
         if last is not None:
             gp, dp, g_opt, d_opt = tree["gp"], tree["dp"], tree["g_opt"], tree["d_opt"]
             start = last
+            restored_ls = C.load_loop_state(ckpt_dir, last)
+
+    def _build_step(scale: float):
+        s2 = st if scale == 1.0 else dataclasses.replace(st, lr=st.lr * scale)
+        if mesh is not None:
+            return make_gan_step(cfg, settings=s2)
+        return make_gan_step(cfg, settings=dataclasses.replace(s2, batch=None))
+
+    def _restore_comm(step_, template):
+        """Comm residuals from the checkpoint; zero template for pre-comm
+        checkpoints (back-compat: one step of bounded quantization error)."""
+        try:
+            host = C.restore_checkpoint(ckpt_dir, step_, {"comm": template})
+        except KeyError:
+            return template
+        return jax.tree.map(
+            lambda a, t: jax.device_put(np.asarray(a), t.sharding),
+            host["comm"], template,
+        )
 
     comm = None
     if mesh is not None:
@@ -311,76 +383,238 @@ def train_gan(
         dp = jax.device_put(dp, SH.named(mesh, dsp))
         g_opt = jax.device_put(g_opt, SH.named(mesh, SH.opt_specs(gsp)))
         d_opt = jax.device_put(d_opt, SH.named(mesh, SH.opt_specs(dsp)))
-        step_fn = make_gan_step(cfg, settings=st)
+        step_fn = _build_step(1.0)
         if st.grad_compression is not None:
             from repro.parallel import overlap as OV
 
             ckw = {} if st.bucket_bytes is None else {"bucket_bytes": st.bucket_bytes}
             comm = OV.init_comm_state(gp, dp, mesh, **ckw)
+            if ckpt_dir and start:
+                comm = _restore_comm(start, comm)
     elif st.comm:
         raise ValueError("overlap/grad_compression require mesh")
     else:
-        step_fn = make_gan_step(cfg, settings=dataclasses.replace(st, batch=None))
-    metrics_hist = []
+        step_fn = _build_step(1.0)
+
+    metrics_hist: list[dict] = []
+    lr_scale = 1.0
+    if restored_ls:
+        metrics_hist = [
+            e for e in restored_ls.get("metrics_hist", [])
+            if e.get("step", 0) <= start
+        ]
+        lr_scale = float(restored_ls.get("lr_scale", 1.0))
+        if lr_scale != 1.0:
+            step_fn = _build_step(lr_scale)
+
+    def _append_metrics(entry: dict) -> None:
+        # replayed log boundaries replace, never double-append
+        metrics_hist[:] = [e for e in metrics_hist if e["step"] != entry["step"]]
+        metrics_hist.append(entry)
+
+    def _save(step_) -> None:
+        tree = _like()
+        if comm is not None:
+            tree["comm"] = comm
+        C.save_checkpoint(ckpt_dir, step_, tree, loop_state={
+            "step": step_, "lr_scale": lr_scale,
+            "metrics_hist": metrics_hist, "counters": counters,
+        })
+
     faulted = False
+    preempted = False
+    attempts_at: dict[int, int] = {}
     s = start
-    while s < steps:
-        t0 = time.monotonic()
-        try:
-            if hooks.inject_fault_at == s and not faulted:
-                faulted = True
-                raise RuntimeError(f"injected fault at step {s}")
-            z = D.latent_batch(seed, s, batch, cfg.z_dim) if cfg.z_dim else D.gan_batch(
-                seed, 1_000_000 + s, batch, cfg.img_hw
-            )
-            real = D.gan_batch(seed, s, batch, cfg.img_hw)
-            if comm is not None:
-                gp, dp, g_opt, d_opt, comm, m = step_fn(
-                    gp, dp, g_opt, d_opt, comm, z, real
-                )
-            else:
-                gp, dp, g_opt, d_opt, m = step_fn(gp, dp, g_opt, d_opt, z, real)
-            if hooks.step_deadline_s and time.monotonic() - t0 > hooks.step_deadline_s:
-                raise TimeoutError(f"step {s} exceeded deadline (straggler)")
-        except (RuntimeError, TimeoutError) as e:
-            # fault path: restore the newest VALID checkpoint and replay —
-            # a corrupt latest (truncated leaf, bit-flip) falls back to the
-            # next-older one instead of killing the recovery itself
-            if not ckpt_dir:
-                raise
-            last, tree = C.restore_latest_valid(
-                ckpt_dir, {"gp": gp, "dp": dp, "g_opt": g_opt, "d_opt": d_opt},
-                on_skip=_warn_corrupt,
-            )
+
+    def _restore_to_latest() -> None:
+        nonlocal gp, dp, g_opt, d_opt, comm, s, metrics_hist
+        last, tree = C.restore_latest_valid(ckpt_dir, _like(), on_skip=_warn_corrupt)
+        if last is None:
+            # no (valid) checkpoint yet: restart from init — including the
+            # metrics history, which belongs to the discarded trajectory
+            kg2, kd2 = jax.random.split(jax.random.PRNGKey(seed))
+            gp, dp = G.generator_init(kg2, cfg, dtype), G.discriminator_init(kd2, cfg, dtype)
+            g_opt, d_opt = adamw_init(gp), adamw_init(dp)
+            s = 0
+            metrics_hist = []
+        else:
+            gp, dp, g_opt, d_opt = tree["gp"], tree["dp"], tree["g_opt"], tree["d_opt"]
+            s = last
+            ls = C.load_loop_state(ckpt_dir, last)
+            src = ls.get("metrics_hist", metrics_hist) if ls else metrics_hist
+            # replayed steps must not keep stale post-checkpoint entries
+            metrics_hist = [e for e in src if e.get("step", 0) <= last]
+        if comm is not None:
             if last is None:
-                # no (valid) checkpoint yet: restart from init
-                kg, kd = jax.random.split(jax.random.PRNGKey(seed))
-                gp, dp = G.generator_init(kg, cfg, dtype), G.discriminator_init(kd, cfg, dtype)
-                g_opt, d_opt = adamw_init(gp), adamw_init(dp)
-                s = 0
-            else:
-                gp, dp, g_opt, d_opt = tree["gp"], tree["dp"], tree["g_opt"], tree["d_opt"]
-                s = last
-            if comm is not None:
-                # residuals are device-local and not checkpointed: restart
-                # the error feedback from zero (bounded one-step error)
                 from repro.parallel import overlap as OV
 
                 ckw = {} if st.bucket_bytes is None else {"bucket_bytes": st.bucket_bytes}
                 comm = OV.init_comm_state(gp, dp, mesh, **ckw)
-            continue
-        if (s + 1) % log_every == 0 or s + 1 == steps:
-            host_m = {k2: float(v) for k2, v in m.items()}
-            metrics_hist.append({"step": s + 1, **host_m})
-            if hooks.on_step:
-                hooks.on_step(s + 1, host_m)
-        if ckpt_dir and (s + 1) % ckpt_every == 0:
-            C.save_checkpoint(
-                ckpt_dir, s + 1, {"gp": gp, "dp": dp, "g_opt": g_opt, "d_opt": d_opt}
+            else:
+                comm = _restore_comm(last, comm)
+        if detector is not None:
+            detector.reset()
+
+    def _bounded_restore(cause, *, verdict=None, injected=False) -> None:
+        """One budgeted restore-and-replay: crashloop detection (same step
+        failing repeatedly), run-wide budget, capped exponential backoff,
+        then the actual restore.  Past the budget the fault is carried out
+        of the loop as a ``TrainFaultError`` instead of replayed forever."""
+        nonlocal lr_scale, step_fn
+        attempt = attempts_at.get(s, 0) + 1
+        attempts_at[s] = attempt
+        total = counters["restores"] + counters["rollbacks"]
+        if attempt > pol.max_restores_per_step or total >= pol.max_total_restores:
+            why = (
+                f"step {s} failed {attempt} time(s) "
+                f"(budget: {pol.max_restores_per_step}/step, "
+                f"{pol.max_total_restores}/run)"
             )
-        s += 1
+            if verdict is not None:
+                raise R.TrainDivergenceError(
+                    why, verdict=verdict, step=s, attempts=attempt, cause=cause,
+                )
+            raise R.TrainFaultError(
+                why, step=s, kind="crashloop", attempts=attempt, cause=cause,
+            ) from cause
+        if verdict is not None:
+            counters["rollbacks"] += 1
+        else:
+            counters["restores"] += 1
+        if injected and verdict is None:
+            # injected nan_grad divergences were already counted by the
+            # sentinel path; only injected raises are accounted here
+            ih = counters["injected_handled"]
+            ih["raise"] = ih.get("raise", 0) + 1
+        fault_log.append({
+            "step": s, "attempt": attempt, "injected": injected,
+            "kind": "divergence" if verdict is not None else "exception",
+            "verdict": verdict,
+            "action": "rollback" if verdict is not None else "restore",
+            "error": None if cause is None else f"{type(cause).__name__}: {cause}",
+        })
+        wait = pol.backoff(attempt - 1)
+        if wait:
+            time.sleep(wait)
+        _restore_to_latest()
+        if verdict is not None and pol.lr_scale != 1.0:
+            lr_scale *= pol.lr_scale
+            step_fn = _build_step(lr_scale)
+
+    with R.PreemptionGuard(install=handle_signals) as guard:
+        while s < steps:
+            if guard.requested:
+                # preemption-safe exit: one final atomic checkpoint with the
+                # loop state, then a clean return — resume is bit-exact
+                preempted = True
+                if ckpt_dir:
+                    _save(s)
+                break
+            t0 = time.monotonic()
+            prev = None
+            inj: list = []
+            try:
+                if hooks.inject_fault_at == s and not faulted:
+                    faulted = True
+                    raise RuntimeError(f"injected fault at step {s}")
+                inj = [
+                    kind for kind in (
+                        p.draw(step=s, attempt=attempts_at.get(s, 0)) for p in plans
+                    ) if kind
+                ]
+                if "preempt" in inj:
+                    guard.request()  # honored at the next step boundary
+                if "corrupt_ckpt" in inj and ckpt_dir:
+                    R.corrupt_latest_checkpoint(ckpt_dir)
+                if "raise" in inj:
+                    raise R.InjectedTrainFault(f"injected raise at step {s}")
+                z = D.latent_batch(seed, s, batch, cfg.z_dim) if cfg.z_dim else D.gan_batch(
+                    seed, 1_000_000 + s, batch, cfg.img_hw
+                )
+                real = D.gan_batch(seed, s, batch, cfg.img_hw)
+                if "nan_grad" in inj:
+                    # NaN in the batch -> NaN losses/grads -> NaN update:
+                    # the same poisoning a broken kernel or fp overflow does
+                    z = z * jnp.float32(np.nan)
+                if skip_mode:
+                    prev = (gp, dp, g_opt, d_opt, comm)
+                if comm is not None:
+                    gp, dp, g_opt, d_opt, comm, m = step_fn(
+                        gp, dp, g_opt, d_opt, comm, z, real
+                    )
+                else:
+                    gp, dp, g_opt, d_opt, m = step_fn(gp, dp, g_opt, d_opt, z, real)
+                if hooks.step_deadline_s and time.monotonic() - t0 > hooks.step_deadline_s:
+                    raise TimeoutError(f"step {s} exceeded deadline (straggler)")
+            except (RuntimeError, TimeoutError) as e:
+                if isinstance(e, R.TrainFaultError):
+                    raise  # already carried past a budget: do not re-wrap
+                # fault path: restore the newest VALID checkpoint and replay
+                # (a corrupt latest falls back to the next-older one) —
+                # bounded by the policy's restore budget
+                if not ckpt_dir:
+                    raise
+                _bounded_restore(e, injected=isinstance(e, R.InjectedTrainFault))
+                continue
+            host_m = None
+            if detector is not None:
+                host_m = {k2: float(v) for k2, v in m.items()}
+                verdict = detector.observe(s, host_m)
+                if verdict is not None:
+                    counters["sentinel_trips"] += 1
+                    if "nan_grad" in inj and verdict.startswith("nonfinite"):
+                        ih = counters["injected_handled"]
+                        ih["nan_grad"] = ih.get("nan_grad", 0) + 1
+                    if pol.on_divergence == "abort":
+                        raise R.TrainDivergenceError(
+                            f"sentinel flagged step {s}: {verdict}",
+                            verdict=verdict, step=s,
+                        )
+                    if skip_mode:
+                        counters["skips"] += 1
+                        fault_log.append({
+                            "step": s, "kind": "divergence", "verdict": verdict,
+                            "action": "skip", "injected": "nan_grad" in inj,
+                            "attempt": 0, "error": None,
+                        })
+                        if counters["skips"] > pol.max_skips:
+                            raise R.TrainDivergenceError(
+                                f"step {s}: skip budget ({pol.max_skips}) "
+                                f"exhausted; last verdict: {verdict}",
+                                verdict=verdict, step=s,
+                                attempts=counters["skips"],
+                            )
+                        # discard the update: revert to the pre-step buffers
+                        gp, dp, g_opt, d_opt, comm = prev
+                        s += 1
+                        continue
+                    # rollback
+                    if not ckpt_dir:
+                        raise R.TrainDivergenceError(
+                            f"sentinel flagged step {s} ({verdict}) and the "
+                            "policy says rollback, but there is no ckpt_dir "
+                            "to roll back to",
+                            verdict=verdict, step=s,
+                        )
+                    _bounded_restore(None, verdict=verdict,
+                                     injected="nan_grad" in inj)
+                    continue
+            if (s + 1) % log_every == 0 or s + 1 == steps:
+                hm = host_m if host_m is not None else \
+                    {k2: float(v) for k2, v in m.items()}
+                _append_metrics({"step": s + 1, **hm})
+                if hooks.on_step:
+                    hooks.on_step(s + 1, hm)
+            if ckpt_dir and (s + 1) % ckpt_every == 0:
+                _save(s + 1)
+            s += 1
     return {
         "params": {"gp": gp, "dp": dp},
         "metrics": metrics_hist,
         "final_step": s,
+        "preempted": preempted,
+        "counters": counters,
+        "fault_log": fault_log,
+        "faults_injected": R.plan_totals(plans),
+        "lr_scale": lr_scale,
     }

@@ -1,0 +1,315 @@
+"""Resilient training (train/resilience.py + trainer.py threading).
+
+Covers: the divergence detector's verdicts, TrainFaultPlan targeting and
+accounting, the bounded fault-restore budget (a persistent fault escalates
+instead of replaying forever — the regression the unbounded loop had),
+sentinel-driven skip/rollback/abort policies, metrics dedupe across
+replays and restart-from-init, checkpoint fsync durability, and the
+loop_state sidecar's integrity walk.
+"""
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.gan_zoo import tiny_dcgan
+from repro.train import checkpoint as C
+from repro.train import resilience as R
+from repro.train.trainer import TrainHooks, train_gan
+
+
+def _kw(tmp_path, name, **over):
+    kw = dict(steps=8, batch=2, seed=3, ckpt_every=4, log_every=1,
+              ckpt_dir=str(tmp_path / name), handle_signals=False)
+    kw.update(over)
+    return kw
+
+
+# ------------------------------------------------------------- detector
+def test_detector_nonfinite_verdict():
+    det = R.DivergenceDetector(R.FaultPolicy())
+    m = {"g_loss": 0.7, "d_loss": 0.7, "g_grad_norm": 1.0, "d_grad_norm": 1.0}
+    assert det.observe(0, m) is None
+    bad = dict(m, g_loss=float("nan"), nonfinite=1.0)
+    v = det.observe(1, bad)
+    assert v is not None and v.startswith("nonfinite")
+    # the in-jit flag alone is enough, even if the host floats look fine
+    assert det.observe(2, dict(m, nonfinite=1.0)) == "nonfinite:metrics"
+
+
+def test_detector_loss_cap_needs_no_history():
+    det = R.DivergenceDetector(R.FaultPolicy(loss_cap=10.0))
+    v = det.observe(0, {"g_loss": 11.0, "d_loss": 0.5,
+                        "g_grad_norm": 1.0, "d_grad_norm": 1.0})
+    assert v == "loss_blowup:g_loss"
+
+
+def test_detector_windowed_blowup_and_reset():
+    pol = R.FaultPolicy(window=8, loss_factor=10.0, grad_factor=10.0)
+    det = R.DivergenceDetector(pol)
+    m = {"g_loss": 1.0, "d_loss": 1.0, "g_grad_norm": 1.0, "d_grad_norm": 1.0}
+    for s in range(6):
+        assert det.observe(s, m) is None
+    assert det.observe(6, dict(m, d_grad_norm=1e4)) == "grad_explosion:d_grad_norm"
+    # the blown value did NOT enter the window: the next healthy step passes
+    assert det.observe(7, m) is None
+    det.reset()
+    # post-reset there is no history, so the same spike is not a verdict
+    assert det.observe(8, dict(m, d_grad_norm=1e4)) is None
+
+
+# ------------------------------------------------------------ fault plan
+def test_fault_plan_targeting_and_accounting():
+    p = R.TrainFaultPlan(kind="raise", at_step=3)
+    assert p.draw(step=2) is None
+    assert p.draw(step=3) == "raise"
+    # non-persistent: replay attempts at the same step do not re-fire
+    assert p.draw(step=3, attempt=1) is None
+    q = R.TrainFaultPlan(kind="nan_grad", at_step=3, persistent=True,
+                         max_faults=2)
+    assert q.draw(step=3) == "nan_grad"
+    assert q.draw(step=3, attempt=1) == "nan_grad"
+    assert q.draw(step=3, attempt=2) is None  # max_faults caps the crashloop
+    assert q.totals() == {"nan_grad": 2}
+    r = R.TrainFaultPlan(kind="mix", every_n=1, max_faults=3)
+    kinds = [r.draw(step=s) for s in range(3)]
+    assert kinds == ["raise", "nan_grad", "corrupt_ckpt"]
+    assert R.plan_totals([p, q, r]) == {
+        "raise": 2, "nan_grad": 3, "corrupt_ckpt": 1,
+    }
+
+
+def test_fault_plan_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        R.TrainFaultPlan(kind="meteor")
+
+
+# --------------------------------------------- bounded restore (satellite)
+def test_persistent_fault_escalates_instead_of_looping(tmp_path):
+    """Regression for the unbounded fault-restore loop: a fault that
+    re-fires deterministically at the same step must escalate into a
+    carried TrainFaultError after the per-step budget, not replay
+    forever."""
+    cfg = tiny_dcgan()
+    plan = R.TrainFaultPlan(kind="raise", at_step=2, persistent=True)
+    with pytest.raises(R.TrainFaultError) as ei:
+        train_gan(cfg, fault_plan=plan,
+                  policy=R.FaultPolicy(max_restores_per_step=2),
+                  **_kw(tmp_path, "loop", steps=6, ckpt_every=2))
+    assert ei.value.kind == "crashloop"
+    assert ei.value.step == 2
+    assert ei.value.attempts == 3  # budget 2 + the escalating attempt
+    assert isinstance(ei.value.cause, R.InjectedTrainFault)
+
+
+def test_run_wide_restore_budget(tmp_path):
+    cfg = tiny_dcgan()
+    plan = R.TrainFaultPlan(kind="raise", every_n=1, persistent=True)
+    with pytest.raises(R.TrainFaultError):
+        train_gan(cfg, fault_plan=plan,
+                  policy=R.FaultPolicy(max_restores_per_step=100,
+                                       max_total_restores=3),
+                  **_kw(tmp_path, "budget", steps=6, ckpt_every=2))
+
+
+def test_transient_injected_raise_recovers(tmp_path):
+    cfg = tiny_dcgan()
+    plan = R.TrainFaultPlan(kind="raise", at_step=5, max_faults=1)
+    out = train_gan(cfg, fault_plan=plan, **_kw(tmp_path, "ok"))
+    assert out["final_step"] == 8 and not out["preempted"]
+    assert out["counters"]["restores"] == 1
+    assert out["counters"]["injected_handled"] == {"raise": 1}
+    assert out["faults_injected"] == {"raise": 1}
+
+
+# ------------------------------------------------------ sentinel policies
+def test_nan_grad_rollback_recovers_finite(tmp_path):
+    """A NaN-poisoned step trips the in-jit sentinel; the rollback policy
+    restores the last checkpoint and the run ends finite, with the
+    injected/handled accounting reconciling."""
+    cfg = tiny_dcgan()
+    plan = R.TrainFaultPlan(kind="nan_grad", at_step=5, max_faults=1)
+    out = train_gan(cfg, fault_plan=plan, **_kw(tmp_path, "nan"))
+    assert out["final_step"] == 8
+    assert out["counters"]["sentinel_trips"] == 1
+    assert out["counters"]["rollbacks"] == 1
+    assert out["counters"]["injected_handled"] == {"nan_grad": 1}
+    for e in out["metrics"]:
+        assert all(math.isfinite(v) for v in e.values()), e
+
+
+def test_nan_grad_skip_policy(tmp_path):
+    """skip: discard the poisoned update and keep going — no checkpoint
+    required, bounded by max_skips."""
+    cfg = tiny_dcgan()
+    plan = R.TrainFaultPlan(kind="nan_grad", at_step=2, max_faults=1)
+    out = train_gan(cfg, fault_plan=plan,
+                    policy=R.FaultPolicy(on_divergence="skip"),
+                    steps=5, batch=2, seed=3, log_every=1,
+                    handle_signals=False)
+    assert out["final_step"] == 5
+    assert out["counters"]["skips"] == 1
+    last = out["metrics"][-1]
+    assert all(math.isfinite(v) for v in last.values()), last
+
+
+def test_abort_policy_raises_divergence(tmp_path):
+    cfg = tiny_dcgan()
+    plan = R.TrainFaultPlan(kind="nan_grad", at_step=1, max_faults=1)
+    with pytest.raises(R.TrainDivergenceError) as ei:
+        train_gan(cfg, fault_plan=plan,
+                  policy=R.FaultPolicy(on_divergence="abort"),
+                  **_kw(tmp_path, "abort", steps=4))
+    assert ei.value.verdict.startswith("nonfinite")
+
+
+def test_rollback_without_ckpt_dir_raises(tmp_path):
+    cfg = tiny_dcgan()
+    plan = R.TrainFaultPlan(kind="nan_grad", at_step=1, max_faults=1)
+    with pytest.raises(R.TrainDivergenceError):
+        train_gan(cfg, fault_plan=plan, steps=4, batch=2, seed=3,
+                  log_every=1, handle_signals=False)
+
+
+def test_lr_scale_applied_per_rollback(tmp_path):
+    cfg = tiny_dcgan()
+    plan = R.TrainFaultPlan(kind="nan_grad", at_step=5, max_faults=1)
+    out = train_gan(cfg, fault_plan=plan,
+                    policy=R.FaultPolicy(lr_scale=0.5),
+                    **_kw(tmp_path, "lrs"))
+    assert out["lr_scale"] == 0.5
+    assert out["final_step"] == 8
+
+
+def test_backoff_is_capped_exponential():
+    p = R.FaultPolicy(backoff_s=1.0, backoff_cap_s=5.0)
+    assert [p.backoff(a) for a in range(4)] == [1.0, 2.0, 4.0, 5.0]
+    assert R.FaultPolicy(backoff_s=0.0).backoff(3) == 0.0
+
+
+# --------------------------------------------------- metrics consistency
+def test_metrics_dedupe_across_replay(tmp_path):
+    """Replayed log boundaries must replace, not double-append (the old
+    loop appended steps 5..6 twice after a restore to 4)."""
+    cfg = tiny_dcgan()
+    out = train_gan(cfg, hooks=TrainHooks(inject_fault_at=6),
+                    **_kw(tmp_path, "dedupe"))
+    steps = [e["step"] for e in out["metrics"]]
+    assert steps == sorted(steps)
+    assert len(steps) == len(set(steps)) == 8
+
+
+def test_metrics_reset_on_restart_from_init(tmp_path):
+    """A fault before the first checkpoint restarts from init — the
+    pre-fault metrics belong to the discarded trajectory and must go;
+    replay-from-init then matches a clean run exactly."""
+    cfg = tiny_dcgan()
+    kw = dict(steps=4, batch=2, seed=3, log_every=1, ckpt_every=10,
+              handle_signals=False)
+    clean = train_gan(cfg, ckpt_dir=str(tmp_path / "clean"), **kw)
+    faulty = train_gan(cfg, ckpt_dir=str(tmp_path / "faulty"),
+                       hooks=TrainHooks(inject_fault_at=2), **kw)
+    steps = [e["step"] for e in faulty["metrics"]]
+    assert steps == [1, 2, 3, 4]
+    for a, b in zip(clean["metrics"], faulty["metrics"]):
+        assert a == b
+
+
+# --------------------------------------------------- chaos: corrupt ckpt
+def test_corrupt_checkpoint_chaos_recovers(tmp_path):
+    """corrupt_ckpt + a later raise: the restore walk must fall back past
+    the truncated checkpoint (restart-from-init here — it was the only
+    one) and still finish the run with reconciling accounting."""
+    cfg = tiny_dcgan()
+    plans = [
+        R.TrainFaultPlan(kind="corrupt_ckpt", at_step=5, max_faults=1),
+        R.TrainFaultPlan(kind="raise", at_step=7, max_faults=1),
+    ]
+    with pytest.warns(RuntimeWarning, match="integrity"):
+        out = train_gan(cfg, fault_plan=plans, **_kw(tmp_path, "chaos"))
+    assert out["final_step"] == 8
+    assert out["counters"]["ckpt_fallbacks"] >= 1
+    assert out["counters"]["restores"] == 1
+    assert out["faults_injected"] == {"corrupt_ckpt": 1, "raise": 1}
+    last = out["metrics"][-1]
+    assert all(math.isfinite(v) for v in last.values()), last
+    # the replay rewrote a CLEAN checkpoint over the corrupted trajectory
+    steps = C.available_steps(str(tmp_path / "chaos"))
+    assert steps and C.verify_checkpoint(str(tmp_path / "chaos"), steps[-1]) is None
+
+
+def test_corrupt_latest_checkpoint_helper(tmp_path):
+    import jax.numpy as jnp
+
+    C.save_checkpoint(str(tmp_path), 3, {"a": jnp.ones((4, 4))})
+    assert R.corrupt_latest_checkpoint(str(tmp_path)) == 3
+    with pytest.raises(C.CheckpointCorruptError):
+        C.verify_checkpoint(str(tmp_path), 3)
+    assert R.corrupt_latest_checkpoint(str(tmp_path / "empty")) is None
+
+
+# -------------------------------------------------- checkpoint durability
+def test_save_checkpoint_fsyncs_every_file(tmp_path, monkeypatch):
+    """Every leaf, the loop_state sidecar, the manifest and both dirs are
+    fsync'd before the atomic rename lands (power-loss durability)."""
+    import jax.numpy as jnp
+
+    calls = []
+    real = os.fsync
+    monkeypatch.setattr(os, "fsync", lambda fd: (calls.append(fd), real(fd))[1])
+    C.save_checkpoint(str(tmp_path), 1, {"a": jnp.zeros(2), "b": jnp.ones(3)},
+                      loop_state={"step": 1})
+    # 2 leaves + loop_state + manifest + tmp dir + parent dir
+    assert len(calls) >= 6
+
+
+def test_loop_state_roundtrip_and_integrity(tmp_path):
+    import jax.numpy as jnp
+
+    tree = {"a": jnp.zeros(3)}
+    ls = {"step": 1, "lr_scale": 0.5,
+          "metrics_hist": [{"step": 1, "g_loss": 0.1}]}
+    C.save_checkpoint(str(tmp_path), 1, tree, loop_state=ls)
+    assert C.load_loop_state(str(tmp_path), 1) == ls
+    # checkpoints without a sidecar are fine (back-compat): None, no raise
+    C.save_checkpoint(str(tmp_path), 2, tree)
+    assert C.load_loop_state(str(tmp_path), 2) is None
+    # a damaged sidecar fails verification and the walk skips past it
+    C.save_checkpoint(str(tmp_path), 3, tree, loop_state=ls)
+    with open(tmp_path / "step_000000000003" / C.LOOP_STATE, "wb") as f:
+        f.write(b"garbage")
+    with pytest.raises(C.CheckpointCorruptError):
+        C.load_loop_state(str(tmp_path), 3)
+    step, _ = C.restore_latest_valid(str(tmp_path), tree)
+    assert step == 2
+
+
+# ---------------------------------------------------------- sentinel flag
+def test_nonfinite_flag_values():
+    import jax.numpy as jnp
+
+    ok = {k: jnp.float32(1.0) for k in R.METRIC_KEYS}
+    assert float(R.nonfinite_flag(ok)) == 0.0
+    bad = dict(ok, d_grad_norm=jnp.float32(np.inf))
+    assert float(R.nonfinite_flag(bad)) == 1.0
+
+
+def test_step_metrics_carry_nonfinite_flag():
+    from repro.train.trainer import make_gan_step
+    from repro.models import gan as G
+    from repro.optim import adamw_init
+    from repro import data as D
+    import jax
+
+    cfg = tiny_dcgan()
+    kg, kd = jax.random.split(jax.random.PRNGKey(0))
+    gp, dp = G.generator_init(kg, cfg), G.discriminator_init(kd, cfg)
+    step = make_gan_step(cfg)
+    z = D.latent_batch(0, 0, 2, cfg.z_dim)
+    real = D.gan_batch(0, 0, 2, cfg.img_hw)
+    *_, m = step(gp, dp, adamw_init(gp), adamw_init(dp), z, real)
+    assert float(m["nonfinite"]) == 0.0
+    *_, m2 = step(gp, dp, adamw_init(gp), adamw_init(dp),
+                  z * np.float32(np.nan), real)
+    assert float(m2["nonfinite"]) == 1.0
